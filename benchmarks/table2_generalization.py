@@ -1,0 +1,54 @@
+"""Table 2: generalization to unseen memory conditions (paper §5.3).
+
+DNNFuser/Seq2Seq trained at 16/32/48/64 MB on VGG16 and ResNet18; evaluated
+one-shot at the unseen interpolated conditions 20..45 MB vs a full
+G-Sampler search per condition.
+"""
+from __future__ import annotations
+
+from repro.core import dnnfuser_infer, gsampler_search, s2s_infer
+from repro.workloads import resnet18, vgg16
+
+from . import common as C
+
+UNSEEN = [20.0, 25.0, 30.0, 35.0, 40.0, 45.0]
+
+
+def run(quick: bool = False):
+    rows = []
+    conds = UNSEEN[:3] if quick else UNSEEN
+    print("\n=== Table 2: unseen memory conditions (batch 64)")
+    print(f"{'cond':>6s} | {'VGG16':^24s} | {'ResNet18':^24s}")
+    print(f"{'MB':>6s} | {'DF':>6s} {'S2S':>6s} {'GS':>8s} |"
+          f" {'DF':>6s} {'S2S':>6s} {'GS':>8s}")
+    per_wl = {}
+    for wl_fn, name in [(vgg16, "vgg16"), (resnet18, "resnet18")]:
+        wl = wl_fn()
+        ds = C.teacher_dataset([wl], 64, C.TRAIN_BUDGETS, 20,
+                               f"{name}_b64")
+        dtp, dtc, _ = C.train_dt(ds, f"{name}_b64", max_steps=20)
+        s2p, s2c, _ = C.train_s2s(ds, f"{name}_b64", max_steps=20)
+        per_wl[name] = (wl, dtp, dtc, s2p, s2c)
+    for cond in conds:
+        cols = []
+        for name in ("vgg16", "resnet18"):
+            wl, dtp, dtc, s2p, s2c = per_wl[name]
+            env = C.env_for(wl, 64, cond, max_steps=20)
+            df = dnnfuser_infer(dtp, dtc, env)
+            s2 = s2s_infer(s2p, s2c, env)
+            gs = gsampler_search(env)
+            cols.append((df, s2, gs))
+            rows.append((f"table2/{name}/{int(cond)}MB",
+                         df.wall_s * 1e6,
+                         f"df={C.fmt_speedup(df.speedup, df.valid)};"
+                         f"s2s={C.fmt_speedup(s2.speedup, s2.valid)};"
+                         f"gs={gs.speedup:.2f}"))
+        (df1, s21, gs1), (df2, s22, gs2) = cols
+        print(f"{cond:6.0f} | {df1.speedup:6.2f} {s21.speedup:6.2f} "
+              f"{gs1.speedup:8.2f} | {df2.speedup:6.2f} {s22.speedup:6.2f} "
+              f"{gs2.speedup:8.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

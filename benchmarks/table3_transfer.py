@@ -1,0 +1,56 @@
+"""Table 3: transfer learning (paper §5.4).
+
+Pre-train a general DNNFuser on VGG16 + ResNet18; fine-tune with 10% of the
+epochs on ResNet50 / MobileNet-V2 / MnasNet (Transfer-DF) vs training from
+scratch (Direct-DF) vs a full G-Sampler search, at 25/35/45/55 MB.
+"""
+from __future__ import annotations
+
+from repro.core import dnnfuser_infer, gsampler_search
+from repro.workloads import mnasnet_b1, mobilenet_v2, resnet18, resnet50, vgg16
+
+from . import common as C
+
+CONDS = [25.0, 35.0, 45.0, 55.0]
+T = 56                      # trajectory positions (resnet50/mnv2 ~ 51-54)
+
+
+def run(quick: bool = False):
+    rows = []
+    conds = CONDS[:2] if quick else CONDS
+    steps_full = 80 if quick else C.DT_STEPS
+    # general pre-trained model (paper: trained on VGG16 + ResNet18)
+    ds_gen = C.teacher_dataset([vgg16(), resnet18()], 64, C.TRAIN_BUDGETS,
+                               T, "general_vgg_r18")
+    gen_params, gen_cfg, _ = C.train_dt(ds_gen, "general_T56", max_steps=T,
+                                        steps=steps_full)
+    print("\n=== Table 3: transfer vs direct vs G-Sampler (batch 64)")
+    for wl_fn, name in [(resnet50, "resnet50"), (mobilenet_v2, "mnv2"),
+                        (mnasnet_b1, "mnasnet")]:
+        wl = wl_fn()
+        ds_new = C.teacher_dataset([wl], 64, C.TRAIN_BUDGETS, T,
+                                   f"{name}_T56")
+        tr_params, tr_cfg, _ = C.train_dt(
+            ds_new, f"transfer_{name}", max_steps=T,
+            steps=max(steps_full // 10, 20),      # 10% of the epochs
+            init_params=gen_params, lr=1e-4)
+        di_params, di_cfg, _ = C.train_dt(ds_new, f"direct_{name}",
+                                          max_steps=T, steps=steps_full)
+        for cond in conds:
+            env = C.env_for(wl, 64, cond, max_steps=T)
+            tr = dnnfuser_infer(tr_params, tr_cfg, env)
+            di = dnnfuser_infer(di_params, di_cfg, env)
+            gs = gsampler_search(env)
+            print(f"{name:9s} {cond:4.0f}MB: Transfer-DF="
+                  f"{C.fmt_speedup(tr.speedup, tr.valid):>5s} Direct-DF="
+                  f"{C.fmt_speedup(di.speedup, di.valid):>5s} "
+                  f"GS={gs.speedup:5.2f}")
+            rows.append((f"table3/{name}/{int(cond)}MB", tr.wall_s * 1e6,
+                         f"transfer={C.fmt_speedup(tr.speedup, tr.valid)};"
+                         f"direct={C.fmt_speedup(di.speedup, di.valid)};"
+                         f"gs={gs.speedup:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Quickstart: the full DNNFuser pipeline in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. G-Sampler (the search-based teacher) searches fusion strategies for
+   VGG16 at a few on-chip-buffer conditions;
+2. the trajectories are decorated into (reward, state, action) sequences
+   and a decision transformer is imitation-trained on them;
+3. the trained mapper infers a strategy ONE-SHOT at an unseen 28 MB
+   condition — no search — and we compare against a fresh search.
+"""
+import time
+
+import jax
+
+from repro.core import (DTConfig, FusionEnv, PAPER_ACCEL, TrainConfig,
+                        collect_teacher_data, dnnfuser_infer, dt_init,
+                        dt_loss, gsampler_search, train_model)
+from repro.workloads import vgg16
+
+MB = 2 ** 20
+
+
+def main():
+    wl = vgg16()
+    print(wl.summary())
+
+    print("\n[1/3] teacher: G-Sampler searching @ 16/32/48/64 MB ...")
+    t0 = time.perf_counter()
+    ds = collect_teacher_data([wl], PAPER_ACCEL, batch=64,
+                              budgets_mb=[16, 32, 48, 64], max_steps=20)
+    print(f"      {len(ds)} trajectories in {time.perf_counter()-t0:.1f}s; "
+          f"teacher speedups up to "
+          f"{max(m[2] for m in ds.meta):.2f}x")
+
+    print("[2/3] student: imitation-training the decision transformer ...")
+    cfg = DTConfig(max_steps=20)
+    params = dt_init(jax.random.PRNGKey(0), cfg)
+    params, log = train_model(lambda p, b: dt_loss(p, cfg, b), params, ds,
+                              TrainConfig(steps=300, batch_size=16))
+    print(f"      final imitation loss {log['final_loss']:.4f} "
+          f"({log['wall_s']:.0f}s)")
+
+    print("[3/3] one-shot inference at UNSEEN condition 28 MB ...")
+    env = FusionEnv(wl, PAPER_ACCEL, batch=64, budget_bytes=28 * MB,
+                    nmax=20)
+    df = dnnfuser_infer(params, cfg, env)
+    gs = gsampler_search(env)
+    n = wl.n
+    print(f"      DNNFuser : speedup {df.speedup:.2f}x usage "
+          f"{df.peak_mem/MB:5.1f}MB in {df.wall_s*1e3:6.0f} ms (one shot)")
+    print(f"      G-Sampler: speedup {gs.speedup:.2f}x usage "
+          f"{gs.peak_mem/MB:5.1f}MB in {gs.wall_s*1e3:6.0f} ms (2k samples)")
+    print("      strategy:", [int(v) for v in df.strategy[: n + 1]])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""End-to-end training driver with the fusion mapper in the loop.
+
+    PYTHONPATH=src python examples/train_with_mapper.py [--arch gemma3_1b]
+
+The arch is lowered to a fusion workload; the mapper picks the input
+micro-batch under an activation budget; the trainer uses it as the
+gradient-accumulation micro-batch; the loop checkpoints asynchronously and
+resumes if re-run (kill it mid-way and run again to see).  On real TPU
+hardware drop ``--reduced`` and raise the sizes — this is the same
+``launch/train.py`` path the dry-run lowers for the 16x16 mesh.
+"""
+import argparse
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3_1b")
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+
+    loop, info = train(args.arch, steps=args.steps, global_batch=8,
+                       seq_len=128, reduced=True,
+                       ckpt_dir=f"artifacts/example_train_{args.arch}",
+                       use_mapper=True, act_budget_mb=8.0)
+    print(f"\nmapper chose micro_batch={info['micro_batch']} "
+          f"(grad_accum={info['grad_accum']}), modeled fusion speedup "
+          f"{info['speedup']:.2f}x")
+    print("loss curve:", [(s, round(l, 3)) for s, l in loop.losses])
+    print(f"median step {loop.monitor.median*1e3:.0f} ms; "
+          f"straggler events: {len(loop.monitor.events)}")
+    print("re-run this script to see checkpoint resume "
+          f"(start_step was {loop.start_step})")
+
+
+if __name__ == "__main__":
+    main()

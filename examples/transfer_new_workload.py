@@ -1,0 +1,47 @@
+"""Transfer learning (paper §5.4): adapt the general mapper to a NEW
+workload with 10% of the training.
+
+    PYTHONPATH=src python examples/transfer_new_workload.py
+"""
+import jax
+
+from repro.core import (DTConfig, FusionEnv, PAPER_ACCEL, TrainConfig,
+                        collect_teacher_data, dnnfuser_infer, dt_init,
+                        dt_loss, gsampler_search, train_model)
+from repro.workloads import mnasnet_b1, resnet18, vgg16
+
+MB = 2 ** 20
+T = 56
+
+
+def main():
+    print("pre-training the general mapper on VGG16 + ResNet18 ...")
+    ds_gen = collect_teacher_data([vgg16(), resnet18()], PAPER_ACCEL,
+                                  batch=64, budgets_mb=[16, 32, 48, 64],
+                                  max_steps=T)
+    cfg = DTConfig(max_steps=T)
+    params = dt_init(jax.random.PRNGKey(0), cfg)
+    params, _ = train_model(lambda p, b: dt_loss(p, cfg, b), params, ds_gen,
+                            TrainConfig(steps=300, batch_size=16))
+
+    print("transfer: fine-tuning on MnasNet with 10% of the steps ...")
+    wl = mnasnet_b1()
+    ds_new = collect_teacher_data([wl], PAPER_ACCEL, batch=64,
+                                  budgets_mb=[25, 45], max_steps=T)
+    params, log = train_model(lambda p, b: dt_loss(p, cfg, b), params,
+                              ds_new, TrainConfig(steps=30, batch_size=16,
+                                                  lr=1e-4))
+    print(f"fine-tune loss {log['final_loss']:.4f} in {log['wall_s']:.0f}s")
+
+    for cond in (25.0, 35.0, 55.0):
+        env = FusionEnv(wl, PAPER_ACCEL, batch=64, budget_bytes=cond * MB,
+                        nmax=T)
+        df = dnnfuser_infer(params, cfg, env)
+        gs = gsampler_search(env)
+        print(f"  {cond:4.0f}MB: Transfer-DF "
+              f"{df.speedup:5.2f}x (valid={df.valid})  vs  GS full search "
+              f"{gs.speedup:5.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""repro: DNNFuser (one-shot transformer layer-fusion mapper) as a
+production multi-pod JAX framework.
+
+Pillar A (the paper): repro.core + repro.workloads — analytical fusion
+cost model, G-Sampler teacher, baselines, decision-transformer mapper,
+one-shot conditional inference, transfer learning.
+
+Pillar B (the substrate): repro.{nn,models,configs} — 10 assigned
+architectures; repro.{distributed,launch} — (pod, data, model) mesh,
+DP/FSDP/TP/EP/SP sharding, multi-pod dry-run + roofline;
+repro.kernels — Pallas TPU kernels; repro.{data,optim,checkpoint,
+runtime} — pipeline, optimizers, elastic checkpoints, fault-tolerant
+training loop.  See DESIGN.md / EXPERIMENTS.md.
+"""
+__version__ = "0.1.0"

@@ -1,0 +1,32 @@
+"""DNNFuser core: the paper's contribution as a composable JAX module.
+
+Layers: analytical fusion cost model (cost_model/ref_model), RL environment
+(env), search-based teacher G-Sampler (gsampler) + Table-1 baselines
+(baselines, a2c), the decision-transformer mapper (model) and RNN baseline
+(seq2seq), teacher-data pipeline (dataset), imitation trainer (train) and
+one-shot conditional inference (infer).
+"""
+from .accel import AccelConfig, PAPER_ACCEL
+from .cost_model import (SYNC, CostOut, evaluate, evaluate_population,
+                         baseline_no_fusion, prefix_trace, pack_workload)
+from .env import FusionEnv, STATE_DIM, encode_action, decode_action
+from .gsampler import GSamplerConfig, GSamplerResult, gsampler_search
+from .baselines import BASELINE_METHODS, run_baseline, SearchResult
+from .a2c import a2c_search
+from .model import DTConfig, dt_init, dt_apply, dt_loss
+from .seq2seq import S2SConfig, s2s_init, s2s_apply, s2s_loss
+from .dataset import TrajectoryDataset, collect_teacher_data, merge_datasets
+from .train import TrainConfig, train_model, make_train_step
+from .infer import InferResult, dnnfuser_infer, s2s_infer
+
+__all__ = [
+    "AccelConfig", "PAPER_ACCEL", "SYNC", "CostOut", "evaluate",
+    "evaluate_population", "baseline_no_fusion", "prefix_trace",
+    "pack_workload", "FusionEnv", "STATE_DIM", "encode_action",
+    "decode_action", "GSamplerConfig", "GSamplerResult", "gsampler_search",
+    "BASELINE_METHODS", "run_baseline", "SearchResult", "a2c_search",
+    "DTConfig", "dt_init", "dt_apply", "dt_loss", "S2SConfig", "s2s_init",
+    "s2s_apply", "s2s_loss", "TrajectoryDataset", "collect_teacher_data",
+    "merge_datasets", "TrainConfig", "train_model", "make_train_step",
+    "InferResult", "dnnfuser_infer", "s2s_infer",
+]

@@ -1,0 +1,117 @@
+"""A2C baseline (paper §5.1, Table 1 "A2C").
+
+A small actor-critic agent interacting with the fusion environment.  The
+paper reports that A2C barely finds a valid solution after ~5 hours and
+underperforms the baseline mapping — the state transitions of the fusion
+environment are abrupt (layer shapes have no smooth relation step-to-step),
+which starves temporal-difference methods.  We reproduce the method
+faithfully (discrete action head over {SYNC} u [1..B], advantage
+actor-critic with entropy bonus) and observe the same qualitative outcome.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import optim
+from .baselines import SearchResult
+from .env import STATE_DIM
+from . import cost_model as cm
+
+__all__ = ["a2c_search"]
+
+
+def _init_params(rng: jax.Array, n_actions: int, hidden: int = 64) -> dict:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    sc = lambda k, i, o: jax.random.normal(k, (i, o), jnp.float32) / np.sqrt(i)
+    return {
+        "w1": sc(k1, STATE_DIM, hidden), "b1": jnp.zeros(hidden),
+        "wp": sc(k2, hidden, n_actions), "bp": jnp.zeros(n_actions),
+        "wv": sc(k3, hidden, 1), "bv": jnp.zeros(1),
+        "w2": sc(k4, hidden, hidden), "b2": jnp.zeros(hidden),
+    }
+
+
+def _forward(params, s):
+    h = jnp.tanh(s @ params["w1"] + params["b1"])
+    h = jnp.tanh(h @ params["w2"] + params["b2"])
+    logits = h @ params["wp"] + params["bp"]
+    value = (h @ params["wv"] + params["bv"])[..., 0]
+    return logits, value
+
+
+@jax.jit
+def _sample_action(params, s, key):
+    logits, value = _forward(params, s)
+    a = jax.random.categorical(key, logits)
+    return a, value
+
+
+def _loss(params, states, actions, returns, beta):
+    logits, values = _forward(params, states)
+    logp = jax.nn.log_softmax(logits)
+    lp_a = jnp.take_along_axis(logp, actions[:, None], axis=1)[:, 0]
+    adv = returns - jax.lax.stop_gradient(values)
+    pg = -(lp_a * adv).mean()
+    vloss = 0.5 * jnp.mean((values - returns) ** 2)
+    ent = -jnp.mean(jnp.sum(jnp.exp(logp) * logp, axis=1))
+    return pg + 0.5 * vloss - beta * ent
+
+
+def a2c_search(env, budget: int = 2000, seed: int = 0,
+               gamma: float = 0.99, lr: float = 3e-4,
+               entropy_beta: float = 1e-2) -> SearchResult:
+    """Train A2C for ``budget`` episodes; return the best strategy seen."""
+    t0 = time.perf_counter()
+    n_actions = env.batch + 1          # 0 => SYNC, k => micro-batch k
+    key = jax.random.PRNGKey(seed)
+    key, sub = jax.random.split(key)
+    params = _init_params(sub, n_actions)
+    tx = optim.adamw(lr, max_grad_norm=1.0)
+    opt_state = tx.init(params)
+
+    grad_fn = jax.jit(jax.grad(_loss), static_argnames=())
+
+    @jax.jit
+    def apply(params, opt_state, grads):
+        updates, opt_state = tx.update(grads, opt_state, params)
+        return optim.apply_updates(params, updates), opt_state
+
+    best_strat, best_obj = None, -np.inf
+    for ep in range(budget):
+        s = env.reset()
+        states, actions, rewards = [], [], []
+        done = False
+        while not done:
+            key, sub = jax.random.split(key)
+            a, _ = _sample_action(params, jnp.asarray(s), sub)
+            a = int(a)
+            states.append(s)
+            actions.append(a)
+            env_a = cm.SYNC if a == 0 else a
+            s, r, done = env.step(env_a)
+            rewards.append(r)
+        # returns (terminal-heavy reward, discounted backwards)
+        R, returns = 0.0, []
+        for r in reversed(rewards):
+            R = r + gamma * R
+            returns.append(R)
+        returns = returns[::-1]
+        final = rewards[-1]
+        if final > best_obj:
+            best_obj = final
+            best_strat = env.actions.copy()
+        grads = grad_fn(params, jnp.asarray(np.stack(states)),
+                        jnp.asarray(np.array(actions, dtype=np.int32)),
+                        jnp.asarray(np.array(returns, dtype=np.float32)),
+                        entropy_beta)
+        params, opt_state = apply(params, opt_state, grads)
+
+    out = env.evaluate_strategy(best_strat)
+    lat, peak = float(out.latency), float(out.peak_mem)
+    return SearchResult("A2C", best_strat, env.baseline_latency / lat, lat,
+                        peak, bool(out.valid), budget, time.perf_counter() - t0)

@@ -1,0 +1,206 @@
+"""Analytical layer-fusion cost model (paper §5.1 "Cost Model").
+
+Maps (workload, batch, HW, fusion strategy) -> (latency, peak on-chip
+memory, off-chip traffic).  Semantics are specified in DESIGN.md §3; in
+short, a strategy ``[mb_0, mb_1, ..., mb_N]`` (``-1`` = sync) segments the
+chain into fused groups; within a group weights are resident and
+intermediate activations are staged on-chip at per-layer micro-batch
+granularity, so only group inputs/outputs (and group weights, once) touch
+off-chip memory.  Group latency is the roofline max of compute / off-chip /
+on-chip time plus per-wave pipeline and per-group sync overheads.
+
+Everything is fixed-shape ``jnp`` so a whole GA population (and a batch of
+memory conditions) evaluates in a single jitted/vmapped call — this is the
+search hot loop the Pallas kernel ``kernels/fusion_eval`` also implements.
+
+Array convention (see ``Workload.arrays``): position 0 is the network input
+pseudo-tensor, positions ``1..n`` are layers, padded to ``nmax``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .accel import AccelConfig
+
+__all__ = ["SYNC", "CostOut", "evaluate", "evaluate_population",
+           "baseline_no_fusion", "prefix_trace", "pack_workload"]
+
+SYNC = -1  # strategy sentinel: flush activation off-chip after this layer
+_UTIL_MIN = 1.0 / 4096.0
+
+
+class CostOut(NamedTuple):
+    latency: jax.Array      # seconds, end-to-end
+    peak_mem: jax.Array     # bytes, max over fused groups
+    traffic: jax.Array      # bytes, total off-chip
+    valid: jax.Array        # peak_mem <= budget
+    n_groups: jax.Array     # number of fused groups
+
+
+def pack_workload(workload, hw: AccelConfig, nmax: int = 64) -> dict[str, jnp.ndarray]:
+    """Device-ready workload arrays (bytes scaled by hw.bytes_per_elem)."""
+    arrs = workload.arrays(nmax, bytes_per_elem=hw.bytes_per_elem)
+    out = {k: jnp.asarray(v, dtype=jnp.float32) for k, v in arrs.items()
+           if k in ("A", "W", "F", "OE", "UC", "SHAPE6")}
+    out["SKIP"] = jnp.asarray(arrs["SKIP"], dtype=jnp.int32)
+    out["mask"] = jnp.asarray(arrs["mask"])
+    out["n"] = jnp.asarray(arrs["n"], dtype=jnp.int32)
+    return out
+
+
+def _prep_strategy(strategy: jax.Array, mask: jax.Array, batch: float) -> tuple:
+    """Clip/normalize a raw strategy vector.
+
+    Returns (sync, stage_mb, mbe) where ``sync`` marks flush positions,
+    ``stage_mb`` is the staged-output micro-batch (1-sample FIFO at syncs)
+    and ``mbe`` is the effective compute micro-batch (syncs inherit their
+    producer's granularity).
+    """
+    s = strategy.astype(jnp.float32)
+    sync = (s < 0.0) & mask                       # position 0 can never sync
+    mb = jnp.clip(s, 1.0, batch)
+    prev_mb = jnp.roll(mb, 1).at[0].set(1.0)
+    prev_sync = jnp.roll(sync, 1).at[0].set(False)
+    mbe = jnp.where(sync, jnp.where(prev_sync, 1.0, prev_mb), mb)
+    stage_mb = jnp.where(sync, 1.0, mb)
+    return sync, stage_mb, mbe
+
+
+@functools.partial(jax.jit, static_argnames=("hw", "nseg"))
+def evaluate(wl: dict, strategy: jax.Array, batch: jax.Array,
+             budget_bytes: jax.Array, hw: AccelConfig, *,
+             nseg: int | None = None) -> CostOut:
+    """Cost of one strategy. All inputs may be traced except ``hw``/``nseg``."""
+    A, W, F, OE, UC = wl["A"], wl["W"], wl["F"], wl["OE"], wl["UC"]
+    mask, skip, n = wl["mask"], wl["SKIP"], wl["n"]
+    P = A.shape[0]
+    nseg = nseg or P
+    pos = jnp.arange(P)
+    B = jnp.asarray(batch, jnp.float32)
+
+    sync, stage_mb, mbe = _prep_strategy(strategy, mask, B)
+    fmask = mask.astype(jnp.float32)
+
+    # --- group segmentation -------------------------------------------------
+    gid = (jnp.cumsum(sync.astype(jnp.int32)) - sync.astype(jnp.int32))
+    head = mask & (jnp.roll(sync, 1).at[0].set(False) | (pos == 1))
+    tail = mask & (sync | (pos == n))
+    glen = jax.ops.segment_sum(fmask, gid, num_segments=nseg,
+                               indices_are_sorted=True)
+    fused = (glen[gid] > 1.0) & mask
+    # an isolated (unfused) layer runs baseline-style: one full-batch pass
+    mbe = jnp.where(fused, mbe, B)
+
+    A_prev = jnp.roll(A, 1).at[0].set(0.0)
+
+    # --- skip (residual) edges ----------------------------------------------
+    has_skip = (skip >= 0) & mask
+    src = jnp.clip(skip, 0, P - 1)
+    same_group = has_skip & (gid[src] == gid)
+    skip_hold = jnp.where(same_group, mbe * A[src], 0.0)
+    skip_traffic = jnp.where(has_skip & ~same_group, 2.0 * B * A[src], 0.0)
+
+    # --- per-group peak (activation) memory ----------------------------------
+    # Weights use a separate streaming path (DESIGN §3): the buffer
+    # constraint — the paper's reported "Act. Usage" — is on staged acts.
+    m_fused = (stage_mb * A + head.astype(jnp.float32) * mbe * A_prev
+               + skip_hold)
+    mem_i = jnp.where(fused, m_fused, jnp.minimum(m_fused, hw.stream_buf_bytes))
+    M_g = jax.ops.segment_sum(mem_i * fmask, gid, num_segments=nseg,
+                              indices_are_sorted=True)
+    nonempty = glen > 0.0
+    peak_mem = jnp.max(jnp.where(nonempty, M_g, 0.0))
+
+    # --- off-chip traffic ---------------------------------------------------
+    # Weights are re-fetched once per micro-batch wave (they are not held in
+    # the activation buffer); a full-batch pass fetches them exactly once.
+    waves = jnp.ceil(B / mbe)
+    t_i = (head.astype(jnp.float32) * B * A_prev
+           + tail.astype(jnp.float32) * B * A + W * waves + skip_traffic)
+    T_g = jax.ops.segment_sum(t_i * fmask, gid, num_segments=nseg,
+                              indices_are_sorted=True)
+
+    # --- compute / on-chip / overheads ---------------------------------------
+    util = jnp.clip(mbe * OE / (hw.npe * hw.pe_lanes), _UTIL_MIN, UC)
+    comp = B * F / hw.peak_macs / util
+    C_g = jax.ops.segment_sum(comp * fmask, gid, num_segments=nseg,
+                              indices_are_sorted=True)
+    o_i = B * (A_prev + A) + W * waves
+    O_g = jax.ops.segment_sum(o_i * fmask, gid, num_segments=nseg,
+                              indices_are_sorted=True)
+    fill_g = (jax.ops.segment_sum(waves * fmask, gid, num_segments=nseg,
+                                  indices_are_sorted=True) * hw.t_pass
+              + nonempty.astype(jnp.float32) * hw.t_sync)
+
+    L_g = jnp.maximum(jnp.maximum(C_g, T_g / hw.bw_offchip),
+                      O_g / hw.bw_onchip) + fill_g
+    latency = jnp.sum(L_g)
+    traffic = jnp.sum(T_g)
+    n_groups = jnp.sum(nonempty.astype(jnp.int32))
+    valid = peak_mem <= jnp.asarray(budget_bytes, jnp.float32)
+    return CostOut(latency, peak_mem, traffic, valid, n_groups)
+
+
+@functools.partial(jax.jit, static_argnames=("hw",))
+def baseline_no_fusion(wl: dict, batch: jax.Array, hw: AccelConfig) -> CostOut:
+    """The paper's baseline: best layer-by-layer mapping, full batch per
+    layer, minimal buffer, every activation round-trips off-chip."""
+    A, W, F, OE, UC = wl["A"], wl["W"], wl["F"], wl["OE"], wl["UC"]
+    mask = wl["mask"]
+    B = jnp.asarray(batch, jnp.float32)
+    fmask = mask.astype(jnp.float32)
+    A_prev = jnp.roll(A, 1).at[0].set(0.0)
+    util = jnp.clip(B * OE / (hw.npe * hw.pe_lanes), _UTIL_MIN, UC)
+    comp = B * F / hw.peak_macs / util
+    t_i = B * (A_prev + A) + W
+    o_i = t_i
+    L_i = jnp.maximum(jnp.maximum(comp, t_i / hw.bw_offchip),
+                      o_i / hw.bw_onchip) + hw.t_sync
+    latency = jnp.sum(L_i * fmask)
+    traffic = jnp.sum(t_i * fmask)
+    peak = jnp.asarray(hw.stream_buf_bytes, jnp.float32)
+    n = jnp.sum(mask.astype(jnp.int32))
+    return CostOut(latency, peak, traffic, jnp.asarray(True), n)
+
+
+@functools.partial(jax.jit, static_argnames=("hw",))
+def evaluate_population(wl: dict, strategies: jax.Array, batch: jax.Array,
+                        budget_bytes: jax.Array, hw: AccelConfig) -> CostOut:
+    """Vectorized cost of a population ``[pop, P]`` of strategies."""
+    return jax.vmap(lambda s: evaluate(wl, s, batch, budget_bytes, hw))(strategies)
+
+
+@functools.partial(jax.jit, static_argnames=("hw",))
+def prefix_trace(wl: dict, strategy: jax.Array, batch: jax.Array,
+                 budget_bytes: jax.Array, hw: AccelConfig) -> CostOut:
+    """Partial-strategy trace for RL state decoration (paper Eq. 2).
+
+    Entry ``t`` evaluates the strategy with only positions ``< t`` applied
+    (the rest forced to sync) — i.e. the environment state *before* action
+    ``t``: ``P_{a_0..a_{t-1}}`` and the memory committed so far.
+    Returns CostOut with a leading axis of length ``P``.
+    """
+    P = strategy.shape[0]
+    pos = jnp.arange(P)
+
+    def at_t(t):
+        s = jnp.where(pos < t, strategy, SYNC)
+        return evaluate(wl, s, batch, budget_bytes, hw)
+
+    return jax.vmap(at_t)(jnp.arange(P))
+
+
+def random_strategy(rng: np.random.Generator, n: int, nmax: int, batch: int,
+                    p_sync: float = 0.3) -> np.ndarray:
+    """A random valid-format strategy (numpy; for tests and search seeds)."""
+    s = np.full(nmax, SYNC, dtype=np.int32)
+    vals = rng.integers(1, batch + 1, size=n + 1)
+    syncs = rng.random(n + 1) < p_sync
+    syncs[0] = False
+    s[: n + 1] = np.where(syncs, SYNC, vals)
+    return s

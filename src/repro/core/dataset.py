@@ -1,0 +1,110 @@
+"""Teacher-data collection + replay buffer (paper §4.4, §4.5.1).
+
+Pipeline: G-Sampler searches a few memory conditions per workload; its
+elite strategies are decorated into (reward, state, action) trajectories by
+the environment (one vmapped prefix-trace each) and stored in a replay
+buffer of padded arrays the imitation trainer samples from.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .accel import AccelConfig
+from .env import FusionEnv, STATE_DIM
+from .gsampler import GSamplerConfig, gsampler_search
+
+__all__ = ["TrajectoryDataset", "collect_teacher_data", "merge_datasets"]
+
+MB = float(2 ** 20)
+
+
+@dataclass
+class TrajectoryDataset:
+    rtg: np.ndarray        # [N, T] f32
+    states: np.ndarray     # [N, T, STATE_DIM] f32
+    actions: np.ndarray    # [N, T] f32 (encoded)
+    mask: np.ndarray       # [N, T] f32
+    meta: list = field(default_factory=list)   # (workload, budget_mb, speedup)
+
+    def __len__(self):
+        return self.rtg.shape[0]
+
+    @property
+    def max_steps(self) -> int:
+        return self.rtg.shape[1]
+
+    def sample(self, rng: np.random.Generator, batch_size: int) -> dict:
+        idx = rng.integers(0, len(self), size=batch_size)
+        return {"rtg": self.rtg[idx], "states": self.states[idx],
+                "actions": self.actions[idx], "mask": self.mask[idx]}
+
+    def split(self, frac: float, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        perm = rng.permutation(len(self))
+        k = max(1, int(len(self) * frac))
+        tr, va = perm[k:], perm[:k]
+        pick = lambda ix: TrajectoryDataset(
+            self.rtg[ix], self.states[ix], self.actions[ix], self.mask[ix],
+            [self.meta[i] for i in ix])
+        return pick(tr), pick(va)
+
+
+def _pad(traj: dict, T: int) -> tuple[np.ndarray, ...]:
+    L = int(traj["length"])
+    rtg = np.zeros(T, np.float32); rtg[:L] = traj["rtg"]
+    st = np.zeros((T, STATE_DIM), np.float32); st[:L] = traj["states"]
+    ac = np.zeros(T, np.float32); ac[:L] = traj["actions"]
+    mk = np.zeros(T, np.float32); mk[:L] = 1.0
+    return rtg, st, ac, mk
+
+
+def collect_teacher_data(workloads: list, hw: AccelConfig, batch: int,
+                         budgets_mb: list[float], *, max_steps: int = 64,
+                         top_k: int = 8, ga_cfg: GSamplerConfig | None = None,
+                         seed: int = 0, augment_jitter: int = 2) -> TrajectoryDataset:
+    """Run the teacher over ``workloads x budgets_mb`` and decorate elites.
+
+    ``augment_jitter`` additionally decorates small random perturbations of
+    elite strategies (still evaluated by the true cost model) — the replay-
+    buffer-diversity trick the Decision-Transformer line relies on.
+    """
+    rng = np.random.default_rng(seed)
+    rows, meta = [], []
+    for wi, wl in enumerate(workloads):
+        for budget in budgets_mb:
+            env = FusionEnv(wl, hw, batch=batch, budget_bytes=budget * MB,
+                            nmax=max_steps)
+            cfg = ga_cfg or GSamplerConfig(seed=seed + 31 * wi + int(budget))
+            res = gsampler_search(env, cfg, top_k=top_k)
+            cands = list(res.elites) or [res.strategy]
+            extra = []
+            for s in cands[:max(1, top_k // 2)]:
+                for _ in range(augment_jitter):
+                    j = s.copy()
+                    pos = rng.integers(1, env.n + 1)
+                    if j[pos] >= 1:
+                        j[pos] = int(np.clip(j[pos] + rng.integers(-4, 5),
+                                             1, batch))
+                    extra.append(j)
+            for s in cands + extra:
+                traj = env.decorate(s)
+                sp, _, valid = env.speedup(s)
+                if not valid:
+                    continue
+                rows.append(_pad(traj, max_steps))
+                meta.append((wl.name, budget, sp))
+    if not rows:
+        raise RuntimeError("teacher produced no valid trajectories")
+    rtg, st, ac, mk = (np.stack(x) for x in zip(*rows))
+    return TrajectoryDataset(rtg, st, ac, mk, meta)
+
+
+def merge_datasets(ds: list[TrajectoryDataset]) -> TrajectoryDataset:
+    return TrajectoryDataset(
+        np.concatenate([d.rtg for d in ds]),
+        np.concatenate([d.states for d in ds]),
+        np.concatenate([d.actions for d in ds]),
+        np.concatenate([d.mask for d in ds]),
+        sum([d.meta for d in ds], []))

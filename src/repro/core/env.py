@@ -1,0 +1,157 @@
+"""Layer-fusion RL environment (paper §4.2).
+
+One episode = one pass over the N+1 positions of a workload chain.  At step
+``t`` the agent picks the micro-batch of position ``t`` (``mb_0`` = input
+micro-batch; ``SYNC`` = flush).  The analytical cost model *is* the
+environment: states and rewards are computed from prefix evaluations, which
+is exactly how DNNFuser rolls out at inference (paper Fig. 3).
+
+State (paper Eq. 2):  ``s_t = [K,C,Y,X,R,S, M_hat, P_{a0..a_{t-1}}]``
+ - 6-loop shape of the *current* layer (log-normalized),
+ - M_hat: requested on-chip budget, normalized,
+ - P: running speedup of the partial strategy over the no-fusion baseline.
+Conditioning reward (paper §4.3.3): fraction of the requested buffer still
+available given the strategy so far.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import cost_model as cm
+from .accel import AccelConfig
+
+__all__ = ["FusionEnv", "STATE_DIM", "encode_action", "decode_action"]
+
+STATE_DIM = 8
+_LOG_CAP = np.log1p(2 ** 24)
+
+
+def encode_action(a: int | np.ndarray, batch: int) -> np.ndarray:
+    """Map {SYNC} u [1..B] -> [-1, 1] for the regression head (DESIGN §3)."""
+    a = np.asarray(a, dtype=np.float32)
+    return np.where(a < 0, -0.5, a / float(batch)).astype(np.float32)
+
+
+def decode_action(y: float | np.ndarray, batch: int) -> np.ndarray:
+    """Inverse of encode_action with thresholding at 0."""
+    y = np.asarray(y, dtype=np.float32)
+    mb = np.clip(np.rint(y * batch), 1, batch)
+    return np.where(y < 0.0, cm.SYNC, mb).astype(np.int32)
+
+
+def _shape_feats(shape6: np.ndarray) -> np.ndarray:
+    return (np.log1p(shape6) / _LOG_CAP).astype(np.float32)
+
+
+@dataclass
+class FusionEnv:
+    """Scalar environment over one (workload, batch, budget) condition."""
+
+    workload: object                 # workloads.Workload
+    hw: AccelConfig
+    batch: int
+    budget_bytes: float
+    nmax: int = 64
+
+    def __post_init__(self):
+        self.wl = cm.pack_workload(self.workload, self.hw, self.nmax)
+        self.wl_np = {k: np.asarray(v) for k, v in self.wl.items()}
+        self.n = int(self.workload.n)
+        self.shape_feats = _shape_feats(
+            np.asarray(self.workload.arrays(self.nmax)["SHAPE6"]))
+        self._base = cm.baseline_no_fusion(self.wl, float(self.batch), self.hw)
+        self.baseline_latency = float(self._base.latency)
+        self._budget_feat = np.float32(
+            np.log1p(self.budget_bytes / 2 ** 20) / np.log1p(1024.0))
+        self.reset()
+
+    # -- episode API ---------------------------------------------------------
+    def reset(self) -> np.ndarray:
+        self.t = 0
+        self.actions = np.full(self.nmax, cm.SYNC, dtype=np.int32)
+        self._last = None  # CostOut of current prefix
+        return self._state()
+
+    def _prefix_eval(self) -> cm.CostOut:
+        s = jnp.asarray(self.actions)
+        pos = jnp.arange(self.nmax)
+        s = jnp.where(pos < self.t, s, cm.SYNC)
+        return cm.evaluate(self.wl, s, float(self.batch),
+                           float(self.budget_bytes), self.hw)
+
+    def _state(self) -> np.ndarray:
+        out = self._prefix_eval()
+        self._last = out
+        peak = float(out.peak_mem)
+        lat = float(out.latency)
+        mem_avail = max(0.0, (self.budget_bytes - peak) / self.budget_bytes)
+        perf = self.baseline_latency / max(lat, 1e-12)
+        st = np.empty(STATE_DIM, dtype=np.float32)
+        st[:6] = self.shape_feats[min(self.t, self.n)]
+        st[6] = self._budget_feat
+        st[7] = np.float32(np.log1p(perf))
+        self._mem_avail = np.float32(mem_avail)   # conditioning reward r_hat
+        return st
+
+    @property
+    def reward_to_go(self) -> float:
+        """Conditioning reward r_hat_t: remaining fraction of the budget."""
+        return float(self._mem_avail)
+
+    def step(self, action: int) -> tuple[np.ndarray, float, bool]:
+        """Apply action for position ``t``. Terminal reward = speedup if the
+        full strategy is valid, else a constraint-violation penalty."""
+        if self.t > self.n:
+            raise RuntimeError("episode finished; call reset()")
+        a = int(action)
+        if self.t == 0 and a < 1:
+            a = 1  # input micro-batch cannot sync
+        self.actions[self.t] = a
+        self.t += 1
+        done = self.t > self.n
+        state = self._state()
+        reward = 0.0
+        if done:
+            out = self._last
+            lat, peak = float(out.latency), float(out.peak_mem)
+            speedup = self.baseline_latency / max(lat, 1e-12)
+            if peak <= self.budget_bytes:
+                reward = speedup
+            else:
+                reward = -1.0 * (peak / self.budget_bytes - 1.0)
+        return state, reward, done
+
+    # -- whole-strategy helpers ----------------------------------------------
+    def evaluate_strategy(self, strategy: np.ndarray) -> cm.CostOut:
+        return cm.evaluate(self.wl, jnp.asarray(strategy), float(self.batch),
+                           float(self.budget_bytes), self.hw)
+
+    def speedup(self, strategy: np.ndarray) -> tuple[float, float, bool]:
+        out = self.evaluate_strategy(strategy)
+        return (self.baseline_latency / max(float(out.latency), 1e-12),
+                float(out.peak_mem), bool(out.valid))
+
+    def decorate(self, strategy: np.ndarray) -> dict[str, np.ndarray]:
+        """Turn a final strategy into a (reward, state, action) trajectory
+        for imitation learning (paper §4.5.1 step 2) via one vmapped
+        prefix_trace call."""
+        tr = cm.prefix_trace(self.wl, jnp.asarray(strategy),
+                             float(self.batch), float(self.budget_bytes),
+                             self.hw)
+        T = self.n + 1
+        lat = np.asarray(tr.latency)[:T]
+        peak = np.asarray(tr.peak_mem)[:T]
+        states = np.zeros((T, STATE_DIM), dtype=np.float32)
+        states[:, :6] = self.shape_feats[:T]
+        states[:, 6] = self._budget_feat
+        states[:, 7] = np.log1p(self.baseline_latency / np.maximum(lat, 1e-12))
+        rtg = np.maximum(0.0, (self.budget_bytes - peak) / self.budget_bytes
+                         ).astype(np.float32)
+        acts = encode_action(strategy[:T], self.batch)
+        return dict(states=states, rtg=rtg, actions=acts,
+                    raw_actions=np.asarray(strategy[:T], dtype=np.int32),
+                    length=np.int32(T))

@@ -1,0 +1,97 @@
+"""One-shot inference: the paper's headline capability (§4.5.2).
+
+The trained model is rolled out autoregressively against the cost-model
+environment: at step t it reads the (reward, state, action) prefix — with
+the conditioning reward supplied by the requested memory budget — and emits
+micro-batch a_t; the environment updates s_{t+1}/r_{t+1}.  One rollout
+(= N+1 tiny forward passes) replaces an entire 2k-sample search, which is
+the 66x-127x speed claim benchmarked in ``benchmarks/speed_oneshot.py``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .env import FusionEnv, STATE_DIM, decode_action, encode_action
+from .model import DTConfig, dt_apply
+from .seq2seq import S2SConfig, s2s_apply
+from . import cost_model as cm
+
+__all__ = ["InferResult", "dnnfuser_infer", "s2s_infer"]
+
+
+@dataclass
+class InferResult:
+    strategy: np.ndarray
+    speedup: float
+    latency: float
+    peak_mem: float
+    valid: bool
+    wall_s: float
+    n_model_calls: int
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _dt_forward(params, cfg: DTConfig, rtg, states, actions):
+    return dt_apply(params, cfg, rtg, states, actions)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _s2s_forward(params, cfg: S2SConfig, rtg, states, actions):
+    return s2s_apply(params, cfg, rtg, states, actions)
+
+
+def _rollout(forward, params, cfg, env: FusionEnv, *, repair: bool) -> InferResult:
+    T = cfg.max_steps
+    rtg = np.zeros((1, T), np.float32)
+    states = np.zeros((1, T, STATE_DIM), np.float32)
+    actions = np.zeros((1, T), np.float32)
+    t0 = time.perf_counter()
+    s = env.reset()
+    calls = 0
+    for t in range(env.n + 1):
+        states[0, t] = s
+        rtg[0, t] = env.reward_to_go
+        pred = forward(params, cfg, jnp.asarray(rtg), jnp.asarray(states),
+                       jnp.asarray(actions))
+        calls += 1
+        a_enc = float(pred[0, t])
+        a = int(decode_action(a_enc, env.batch))
+        if t == 0 and a < 1:
+            a = 1                      # input micro-batch cannot sync
+        if repair and a >= 1 and t > 0:
+            # inference-time constraint guard (the model conditions on the
+            # budget, but a hard guard keeps generalization runs valid):
+            # shrink/sync if the staged buffer would overflow.
+            while a >= 1:
+                probe = env.actions.copy(); probe[t] = a
+                pos = np.arange(env.nmax)
+                probe = np.where(pos <= t, probe, cm.SYNC)
+                out = env.evaluate_strategy(probe)
+                if float(out.peak_mem) <= env.budget_bytes:
+                    break
+                a = a // 2 if a > 1 else cm.SYNC
+        actions[0, t] = encode_action(np.float32(a), env.batch)
+        s, _, done = env.step(a)
+    wall = time.perf_counter() - t0
+    strat = env.actions.copy()
+    out = env.evaluate_strategy(strat)
+    return InferResult(strat, env.baseline_latency / float(out.latency),
+                       float(out.latency), float(out.peak_mem),
+                       bool(out.valid), wall, calls)
+
+
+def dnnfuser_infer(params, cfg: DTConfig, env: FusionEnv, *,
+                   repair: bool = True) -> InferResult:
+    """Conditional autoregressive inference of DNNFuser."""
+    return _rollout(_dt_forward, params, cfg, env, repair=repair)
+
+
+def s2s_infer(params, cfg: S2SConfig, env: FusionEnv, *,
+              repair: bool = True) -> InferResult:
+    return _rollout(_s2s_forward, params, cfg, env, repair=repair)

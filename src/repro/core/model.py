@@ -1,0 +1,94 @@
+"""DNNFuser: the decision-transformer mapper (paper §4.3, §5.1).
+
+Architecture per §5.1: 3 transformer blocks, 2 heads, hidden dim 128.
+A trajectory (r_0,s_0,a_0, ..., r_T,s_T,a_T) is embedded into interleaved
+reward/state/action tokens; a causal transformer predicts the action for
+step t from the *state* token of step t; the loss is masked MSE between
+predicted and teacher actions (continuous encoding, see env.encode_action).
+
+Conditioning (paper §4.3.3): the reward channel carries the requested
+on-chip-buffer headroom, so at inference the generated mapping is steered by
+feeding the desired memory condition.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from .env import STATE_DIM
+
+__all__ = ["DTConfig", "dt_init", "dt_apply", "dt_loss"]
+
+
+@dataclass(frozen=True)
+class DTConfig:
+    n_blocks: int = 3          # paper §5.1
+    n_heads: int = 2           # paper §5.1
+    d_model: int = 128         # paper §5.1
+    max_steps: int = 64        # trajectory positions (N+1 <= max_steps)
+    d_ff: int = 512
+    dtype: object = jnp.float32
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def dt_init(key: jax.Array, cfg: DTConfig) -> dict:
+    ks = jax.random.split(key, 8 + cfg.n_blocks)
+    d = cfg.d_model
+    p = {
+        "emb_r": nn.dense_init(ks[0], 1, d, dtype=cfg.dtype),
+        "emb_s": nn.dense_init(ks[1], STATE_DIM, d, dtype=cfg.dtype),
+        "emb_a": nn.dense_init(ks[2], 1, d, dtype=cfg.dtype),
+        "time": nn.embedding_init(ks[3], cfg.max_steps, d, dtype=cfg.dtype),
+        "type": nn.embedding_init(ks[4], 3, d, dtype=cfg.dtype),
+        "ln_f": nn.layernorm_init(d, cfg.dtype),
+        "head": nn.dense_init(ks[5], d, 1, dtype=cfg.dtype),
+        "blocks": [
+            nn.block_init(ks[8 + i], d, n_heads=cfg.n_heads, d_ff=cfg.d_ff,
+                          mlp_kind="gelu", norm="layer", dtype=cfg.dtype)
+            for i in range(cfg.n_blocks)
+        ],
+    }
+    return p
+
+
+def dt_apply(params: dict, cfg: DTConfig, rtg: jax.Array, states: jax.Array,
+             actions: jax.Array) -> jax.Array:
+    """rtg [B,T], states [B,T,8], actions [B,T] -> predicted actions [B,T].
+
+    Prediction for step t reads the causal prefix up to (and incl.) s_t;
+    a_t tokens only influence steps > t, so one forward pass scores every
+    step (teacher forcing) and autoregressive generation is consistent.
+    """
+    B, T = rtg.shape
+    d = cfg.d_model
+    tok_r = nn.dense_apply(params["emb_r"], rtg[..., None])
+    tok_s = nn.dense_apply(params["emb_s"], states)
+    tok_a = nn.dense_apply(params["emb_a"], actions[..., None])
+    time = nn.embedding_apply(params["time"], jnp.arange(T))          # [T,d]
+    typ = params["type"]["emb"]                                        # [3,d]
+    toks = jnp.stack([tok_r + typ[0], tok_s + typ[1], tok_a + typ[2]],
+                     axis=2) + time[None, :, None, :]
+    x = toks.reshape(B, 3 * T, d)
+    for blk in params["blocks"]:
+        x, _, _ = nn.block_apply(blk, x, n_heads=cfg.n_heads,
+                                 kv_heads=cfg.n_heads,
+                                 head_dim=cfg.head_dim, mlp_kind="gelu",
+                                 norm="layer", causal=True)
+    x = nn.layernorm_apply(params["ln_f"], x)
+    s_tok = x.reshape(B, T, 3, d)[:, :, 1]       # state-token outputs
+    return nn.dense_apply(params["head"], s_tok)[..., 0]
+
+
+def dt_loss(params: dict, cfg: DTConfig, batch: dict) -> jax.Array:
+    """Masked MSE (paper §4.3.1)."""
+    pred = dt_apply(params, cfg, batch["rtg"], batch["states"],
+                    batch["actions"])
+    err = jnp.square(pred - batch["actions"]) * batch["mask"]
+    return err.sum() / jnp.maximum(batch["mask"].sum(), 1.0)

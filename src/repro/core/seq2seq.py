@@ -1,0 +1,88 @@
+"""RNN Seq2Seq baseline sequence model (paper §5.1).
+
+"The Seq2Seq is made of a LSTM with 2 layers of fully connected layers and
+128 hidden dimension in each encoder and decoder."  The encoder LSTM reads
+the (reward, state) sequence (the workload and condition are known up
+front); the decoder LSTM, initialized from the encoder's final state,
+consumes [state_t, rtg_t, a_{t-1}] and regresses a_t.  Trained with the
+same masked-MSE imitation objective as DNNFuser.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from .env import STATE_DIM
+
+__all__ = ["S2SConfig", "s2s_init", "s2s_apply", "s2s_loss"]
+
+
+@dataclass(frozen=True)
+class S2SConfig:
+    hidden: int = 128          # paper §5.1
+    max_steps: int = 64
+    dtype: object = jnp.float32
+
+
+def _lstm_init(key, d_in, d_h, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"wx": nn.dense_init(k1, d_in, 4 * d_h, dtype=dtype),
+            "wh": nn.dense_init(k2, d_h, 4 * d_h, bias=False, dtype=dtype)}
+
+
+def _lstm_scan(p, xs, h0, c0):
+    """xs [B,T,d_in] -> outputs [B,T,d_h], final (h, c)."""
+    def cell(carry, x):
+        h, c = carry
+        z = nn.dense_apply(p["wx"], x) + nn.dense_apply(p["wh"], h)
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+    (h, c), ys = jax.lax.scan(cell, (h0, c0), jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), (h, c)
+
+
+def s2s_init(key: jax.Array, cfg: S2SConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    H = cfg.hidden
+    return {
+        "enc_in": nn.dense_init(ks[0], STATE_DIM + 1, H, dtype=cfg.dtype),
+        "enc_fc": nn.dense_init(ks[1], H, H, dtype=cfg.dtype),
+        "enc_lstm": _lstm_init(ks[2], H, H, cfg.dtype),
+        "dec_in": nn.dense_init(ks[3], STATE_DIM + 2, H, dtype=cfg.dtype),
+        "dec_fc": nn.dense_init(ks[4], H, H, dtype=cfg.dtype),
+        "dec_lstm": _lstm_init(ks[5], H, H, cfg.dtype),
+        "head1": nn.dense_init(ks[6], H, H, dtype=cfg.dtype),
+        "head2": nn.dense_init(ks[7], H, 1, dtype=cfg.dtype),
+    }
+
+
+def s2s_apply(params: dict, cfg: S2SConfig, rtg: jax.Array,
+              states: jax.Array, actions: jax.Array) -> jax.Array:
+    """Teacher-forced predictions [B,T] (a_{t-1} fed, a_{-1}=0)."""
+    B, T = rtg.shape
+    zeros = jnp.zeros((B, 1), rtg.dtype)
+    enc_x = jnp.concatenate([states, rtg[..., None]], -1)
+    h = jax.nn.relu(nn.dense_apply(params["enc_fc"],
+                                   jax.nn.relu(nn.dense_apply(params["enc_in"], enc_x))))
+    h0 = jnp.zeros((B, cfg.hidden), rtg.dtype)
+    _, (he, ce) = _lstm_scan(params["enc_lstm"], h, h0, h0)
+    prev_a = jnp.concatenate([zeros, actions[:, :-1]], axis=1)
+    dec_x = jnp.concatenate([states, rtg[..., None], prev_a[..., None]], -1)
+    g = jax.nn.relu(nn.dense_apply(params["dec_fc"],
+                                   jax.nn.relu(nn.dense_apply(params["dec_in"], dec_x))))
+    ys, _ = _lstm_scan(params["dec_lstm"], g, he, ce)
+    out = nn.dense_apply(params["head2"],
+                         jax.nn.relu(nn.dense_apply(params["head1"], ys)))
+    return out[..., 0]
+
+
+def s2s_loss(params: dict, cfg: S2SConfig, batch: dict) -> jax.Array:
+    pred = s2s_apply(params, cfg, batch["rtg"], batch["states"],
+                     batch["actions"])
+    err = jnp.square(pred - batch["actions"]) * batch["mask"]
+    return err.sum() / jnp.maximum(batch["mask"].sum(), 1.0)

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, Prefetcher, make_batch_iterator
+
+__all__ = ["SyntheticLM", "Prefetcher", "make_batch_iterator"]

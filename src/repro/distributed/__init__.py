@@ -1,0 +1,5 @@
+from .sharding import (param_specs, batch_specs, decode_state_specs_sharded,
+                       shard_spec_for_path)
+
+__all__ = ["param_specs", "batch_specs", "decode_state_specs_sharded",
+           "shard_spec_for_path"]

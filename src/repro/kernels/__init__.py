@@ -1,0 +1,20 @@
+"""TPU Pallas kernels for the framework's compute hot-spots.
+
+ - flash_attention: prefill/train attention (blocked online softmax,
+   causal/window/GQA) — DESIGN §7
+ - flash_decode:    split-K decode over long KV caches
+ - rwkv6_scan:      chunked data-dependent-decay WKV6 recurrence
+ - fusion_eval:     the paper's hot loop — population fusion-strategy
+                    evaluation with the layer table VMEM-resident
+
+Structure per kernel: ``<name>.py`` (pl.pallas_call + BlockSpec tiling),
+``ops.py`` (jit'd public wrappers), ``ref.py`` (pure-jnp oracles).  On this
+CPU container kernels execute with ``interpret=True``; on TPU the models
+select them via ``attn_impl=pallas`` / the rwkv impl switch.
+"""
+from . import ops, ref
+from .ops import (flash_attention, flash_decode, wkv6,
+                  fusion_eval_population)
+
+__all__ = ["ops", "ref", "flash_attention", "flash_decode", "wkv6",
+           "fusion_eval_population"]

@@ -1,0 +1,95 @@
+"""Flash decoding (TPU Pallas): split-K attention over a long KV cache.
+
+One query token per sequence attends to a cache of length T.  Phase 1
+(kernel): grid = (B, Hq, T/bk splits); each program reduces its KV split
+with a local softmax, emitting (o_partial, m, l) — the FlashDecoding++
+split-K scheme, which keeps all splits parallel across the grid instead of
+serializing a single long reduction.  Phase 2 (jnp): the per-split partials
+are combined with the standard online-softmax merge.  ``kv_len`` masks the
+unwritten tail of the cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_decode"]
+
+NEG_INF = -1e30
+
+
+def _fd_kernel(q_ref, k_ref, v_ref, kvlen_ref, o_ref, m_ref, l_ref, *,
+               bk: int):
+    s_idx = pl.program_id(2)
+    q = q_ref[...].astype(jnp.float32)            # [1, hd]
+    k = k_ref[...].astype(jnp.float32)            # [bk, hd]
+    v = v_ref[...].astype(jnp.float32)
+    kv_len = kvlen_ref[0]
+    hd = q.shape[-1]
+    s = (q @ k.T) / (hd ** 0.5)                   # [1, bk]
+    ids = s_idx * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    s = jnp.where(ids < kv_len, s, NEG_INF)
+    m = s.max(-1)                                 # [1]
+    p = jnp.exp(s - m[:, None])
+    l = p.sum(-1)
+    o_ref[...] = (p @ v).astype(o_ref.dtype)      # unnormalized partial
+    m_ref[...] = m.astype(m_ref.dtype)
+    l_ref[...] = l.astype(l_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 kv_len: jax.Array, *, bk: int = 512,
+                 interpret: bool | None = None) -> jax.Array:
+    """q [B,1,Hq,hd], k/v cache [B,T,Hkv,hd], kv_len scalar -> [B,1,Hq*hd]."""
+    B, _, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    ns = T // bk
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    qt = q.reshape(B, Hq, 1, hd)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(1), (1,))
+
+    o, m, l = pl.pallas_call(
+        functools.partial(_fd_kernel, bk=bk),
+        grid=(B, Hq, ns),
+        in_specs=[
+            pl.BlockSpec((None, None, 1, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, bk, hd),
+                         lambda b, h, s: (b, h // G, s, 0)),
+            pl.BlockSpec((None, None, bk, hd),
+                         lambda b, h, s: (b, h // G, s, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, None, 1, hd),
+                         lambda b, h, s: (b, h, s, 0, 0)),
+            pl.BlockSpec((None, None, None, 1),
+                         lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((None, None, None, 1),
+                         lambda b, h, s: (b, h, s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, ns, 1, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, ns, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, ns, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, kvl)
+
+    # phase 2: merge the split-K partials (online-softmax combine)
+    m = m[..., 0]                                  # [B,Hq,ns]
+    l = l[..., 0]
+    mg = m.max(-1, keepdims=True)
+    w = jnp.exp(m - mg) * l
+    denom = w.sum(-1)
+    o = (o[..., 0, :] * jnp.exp(m - mg)[..., None]).sum(2) \
+        / jnp.maximum(denom, 1e-30)[..., None]
+    return o.reshape(B, 1, Hq * hd).astype(q.dtype)

@@ -1,0 +1,171 @@
+"""Population fusion-strategy evaluation (TPU Pallas) — the paper's search
+hot loop as a kernel.
+
+G-Sampler evaluates 2k strategies per search and a production mapper
+serves many concurrent (workload, budget) queries; this kernel evaluates a
+BLOCK of candidate strategies per grid step entirely in VMEM.  The layer
+table (A/W/F/OE/UC/SKIP, padded to P positions) is resident in VMEM and
+shared by every candidate; per-candidate group accumulators live in
+registers/VPU lanes, so the sweep over the P chain positions is a
+sequential fori with [bp]-wide vector ops — no HBM traffic beyond one read
+of the strategy block and one write of the three result vectors.
+
+Semantics are exactly ``core.cost_model.evaluate`` (same group/streaming/
+weight-wave rules); the oracle used in tests is ``core.ref_model``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.accel import AccelConfig
+
+__all__ = ["fusion_eval_population"]
+
+_UTIL_MIN = 1.0 / 4096.0
+
+
+def _fe_kernel(strat_ref, A_ref, W_ref, F_ref, OE_ref, UC_ref, SKIP_ref,
+               lat_ref, peak_ref, traf_ref, *, P: int, n: int, batch: float,
+               hw: AccelConfig):
+    bp = strat_ref.shape[0]
+    B = jnp.float32(batch)
+    strat = strat_ref[...].astype(jnp.float32)           # [bp, P]
+
+    A = A_ref[...][0]                                     # [P]
+    W = W_ref[...][0]
+    F = F_ref[...][0]
+    OE = OE_ref[...][0]
+    UC = UC_ref[...][0]
+    SKIP = SKIP_ref[...][0]
+
+    peak_macs = jnp.float32(hw.npe * hw.pe_lanes * hw.freq_hz)
+
+    def util(mbe, oe, uc):
+        return jnp.clip(mbe * oe / (hw.npe * hw.pe_lanes), _UTIL_MIN, uc)
+
+    zeros = jnp.zeros((bp,), jnp.float32)
+
+    def flush(st):
+        (lat, peak, traf, g_comp, g_traf, g_on, g_mem, g_waves, g_len,
+         alt) = st
+        use_alt = g_len == 1.0
+        comp = jnp.where(use_alt, alt["comp"], g_comp)
+        trf = jnp.where(use_alt, alt["traf"], g_traf)
+        onc = jnp.where(use_alt, alt["on"], g_on)
+        mem = jnp.where(use_alt, alt["mem"], g_mem)
+        wav = jnp.where(use_alt, 1.0, g_waves)
+        lg = jnp.maximum(jnp.maximum(comp, trf / hw.bw_offchip),
+                         onc / hw.bw_onchip) + wav * hw.t_pass + hw.t_sync
+        nonempty = g_len > 0.0
+        lat = lat + jnp.where(nonempty, lg, 0.0)
+        peak = jnp.maximum(peak, jnp.where(nonempty, mem, 0.0))
+        traf = traf + jnp.where(nonempty, trf, 0.0)
+        return lat, peak, traf
+
+    def body(i, carry):
+        (lat, peak, traf, g_comp, g_traf, g_on, g_mem, g_waves, g_len,
+         prev_sync, prev_mb, lastb) = carry
+        a = strat[:, i]
+        Ai = A[i]; Ap = A[i - 1]; Wi = W[i]; Fi = F[i]
+        OEi = OE[i]; UCi = UC[i]
+        src = SKIP[i]
+        sync = a < 0.0
+        mb = jnp.clip(a, 1.0, B)
+        mbe = jnp.where(sync, jnp.where(prev_sync, 1.0, prev_mb), mb)
+        stage = jnp.where(sync, 1.0, mb)
+        head = (g_len == 0.0)
+
+        has_skip = src >= 0
+        same = has_skip & (src.astype(jnp.float32) > lastb)
+        Asrc = A[jnp.maximum(src, 0)]
+        hold = jnp.where(same, mbe * Asrc, 0.0)
+        cross_t = jnp.where(has_skip & ~same, 2.0 * B * Asrc, 0.0)
+
+        is_tail = sync | (i == n)
+        waves = jnp.ceil(B / mbe)
+        mem_i = stage * Ai + jnp.where(head, mbe * Ap, 0.0) + hold
+        traf_i = (jnp.where(head, B * Ap, 0.0)
+                  + jnp.where(is_tail, B * Ai, 0.0) + Wi * waves + cross_t)
+        comp_i = B * Fi / peak_macs / util(mbe, OEi, UCi)
+        on_i = B * (Ap + Ai) + Wi * waves
+
+        # streaming alternative (used when this layer ends up alone)
+        hold_a = jnp.where(same, B * Asrc, 0.0)
+        mem_a = jnp.minimum(stage * Ai + B * Ap + hold_a,
+                            jnp.float32(hw.stream_buf_bytes))
+        alt = {"comp": B * Fi / peak_macs / util(jnp.float32(B), OEi, UCi),
+               "traf": B * Ap + B * Ai + Wi + cross_t,
+               "on": B * (Ap + Ai) + Wi,
+               "mem": mem_a}
+
+        g_comp += comp_i; g_traf += traf_i; g_on += on_i
+        g_mem += mem_i; g_waves += waves; g_len += 1.0
+
+        st = (lat, peak, traf, g_comp, g_traf, g_on, g_mem, g_waves, g_len,
+              alt)
+        latf, peakf, traff = flush(st)
+        do_flush = is_tail
+        lat = jnp.where(do_flush, latf, lat)
+        peak = jnp.where(do_flush, peakf, peak)
+        traf = jnp.where(do_flush, traff, traf)
+        rz = lambda x: jnp.where(do_flush, zeros, x)
+        g_comp, g_traf, g_on = rz(g_comp), rz(g_traf), rz(g_on)
+        g_mem, g_waves, g_len = rz(g_mem), rz(g_waves), rz(g_len)
+        lastb = jnp.where(sync, jnp.full((bp,), jnp.float32(i)), lastb)
+        return (lat, peak, traf, g_comp, g_traf, g_on, g_mem, g_waves,
+                g_len, sync, mb, lastb)
+
+    init = (zeros, zeros, zeros, zeros, zeros, zeros, zeros, zeros, zeros,
+            jnp.zeros((bp,), bool), jnp.clip(strat[:, 0], 1.0, B),
+            jnp.full((bp,), -1.0, jnp.float32))
+    out = jax.lax.fori_loop(1, n + 1, body, init)
+    lat_ref[...] = out[0][:, None]
+    peak_ref[...] = out[1][:, None]
+    traf_ref[...] = out[2][:, None]
+
+
+def fusion_eval_population(strategies, wl: dict, *, batch: float,
+                           hw: AccelConfig, n: int | None = None,
+                           bp: int = 128, interpret: bool | None = None):
+    """strategies [pop, P] int32; wl = cost_model.pack_workload arrays.
+    Returns (latency [pop], peak_mem [pop], traffic [pop])."""
+    import numpy as _np
+    if n is None:
+        n = int(_np.asarray(wl["n"]))
+    wl2 = {k: v for k, v in wl.items() if k != "n"}
+    return _fusion_eval_jit(jnp.asarray(strategies), wl2, batch=float(batch),
+                            hw=hw, n=n, bp=bp, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "hw", "bp", "n",
+                                             "interpret"))
+def _fusion_eval_jit(strategies: jax.Array, wl: dict, *, batch: float,
+                     hw: AccelConfig, n: int, bp: int = 128,
+                     interpret: bool | None = None):
+    pop, P = strategies.shape
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    pad = (-pop) % bp
+    if pad:
+        strategies = jnp.pad(strategies, ((0, pad), (0, 0)),
+                             constant_values=-1)
+    npop = strategies.shape[0]
+    row = lambda k, dt: wl[k].astype(dt).reshape(1, P)
+    args = (strategies, row("A", jnp.float32), row("W", jnp.float32),
+            row("F", jnp.float32), row("OE", jnp.float32),
+            row("UC", jnp.float32), row("SKIP", jnp.int32))
+
+    lat, peak, traf = pl.pallas_call(
+        functools.partial(_fe_kernel, P=P, n=n, batch=float(batch), hw=hw),
+        grid=(npop // bp,),
+        in_specs=[pl.BlockSpec((bp, P), lambda g: (g, 0))]
+        + [pl.BlockSpec((1, P), lambda g: (0, 0))] * 6,
+        out_specs=[pl.BlockSpec((bp, 1), lambda g: (g, 0))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((npop, 1), jnp.float32)] * 3,
+        interpret=interpret,
+    )(*args)
+    return lat[:pop, 0], peak[:pop, 0], traf[:pop, 0]

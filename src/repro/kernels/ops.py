@@ -1,0 +1,16 @@
+"""Public jit'd wrappers for the Pallas kernels (the ``ops`` layer).
+
+Selection contract: the models call these when ``attn_impl="pallas"``; on
+the CPU container they execute with ``interpret=True`` (pure-Python kernel
+body) which is how the per-kernel shape/dtype sweeps in
+``tests/test_kernels.py`` validate them against ``ref.py``.
+"""
+from __future__ import annotations
+
+from .flash_attention import flash_attention
+from .flash_decode import flash_decode
+from .rwkv6_scan import wkv6
+from .fusion_eval import fusion_eval_population
+
+__all__ = ["flash_attention", "flash_decode", "wkv6",
+           "fusion_eval_population"]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref`` layer).
+
+Each function is the semantic ground truth its kernel is tested against;
+they intentionally use naive formulations (full score matrices, sequential
+scans, vmapped cost model) so divergence localizes to the kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import cost_model as _cm
+from ..nn.attention import attend as _attend
+from ..nn.rwkv import wkv_scan as _wkv_scan
+
+__all__ = ["attention_ref", "decode_ref", "wkv6_ref", "fusion_eval_ref"]
+
+
+def attention_ref(q, k, v, *, causal=True, window=-1):
+    """Dense attention oracle: [B,S,Hq,hd] x [B,T,Hkv,hd] -> [B,S,Hq*hd]."""
+    return _attend(q, k, v, causal=causal, window=window, impl="xla",
+                   q_chunk=1 << 30)
+
+
+def decode_ref(q, k, v, kv_len):
+    """One-token decode oracle over a cache prefix of ``kv_len``."""
+    return _attend(q, k, v, causal=True, q_offset=kv_len - 1, kv_len=kv_len,
+                   impl="xla", q_chunk=1 << 30)
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """Sequential WKV6 recurrence oracle."""
+    return _wkv_scan(r, k, v, w, u, s0)
+
+
+def fusion_eval_ref(strategies, wl, *, batch, budget_bytes, hw):
+    """Vmapped analytical cost model (itself cross-checked against the
+    loop-based ``core.ref_model`` in tests/test_cost_model.py)."""
+    out = _cm.evaluate_population(wl, jnp.asarray(strategies), float(batch),
+                                  float(budget_bytes), hw)
+    return out.latency, out.peak_mem, out.traffic

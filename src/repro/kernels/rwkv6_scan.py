@@ -1,0 +1,112 @@
+"""Chunked WKV6 recurrence (TPU Pallas) — RWKV6's data-dependent-decay scan.
+
+Grid = (B*H, T/chunk) with the CHUNK dimension iterated sequentially
+(innermost TPU grid dim): the running state S [n, n] lives in VMEM scratch
+and persists across chunk steps, so the whole sequence is processed with
+one kernel launch and zero HBM state traffic — the TPU-native replacement
+for the GPU per-timestep CUDA kernel RWKV ships.  Within a chunk the
+recurrence is closed-form (GLA-style, see nn/rwkv.py::wkv_chunked):
+    y = (r*cumw_prev) @ S + ((r~ k~^T) . causal) @ v + (r.u.k) v
+    S' = cumw_C * S + (cumw_C/cumw)k ^T v
+so the MXU does chunk x chunk and chunk x n matmuls instead of T sequential
+rank-1 updates.  Oracle: ``nn.rwkv.wkv_scan``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["wkv6"]
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
+                s_scr, *, chunk: int, n: int, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[...].astype(jnp.float32)
+
+    r = r_ref[...].astype(jnp.float32)            # [chunk, n]
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)            # [1, n]
+    s = s_scr[...]                                # [n, n]
+
+    lw = jnp.log(jnp.maximum(w, 1e-30))
+    cum = jnp.exp(jnp.cumsum(lw, axis=0))         # [chunk, n]
+    cum_prev = cum / w
+    rt = r * cum_prev
+    kt = k / jnp.maximum(cum, 1e-30)
+
+    inter = rt @ s                                # [chunk, n]
+    scores = rt @ kt.T                            # [chunk, chunk]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(jj < ii, scores, 0.0)      # strictly causal
+    diag = jnp.sum(r * u * k, axis=-1)            # [chunk]
+    y = inter + scores @ v + diag[:, None] * v
+
+    cend = cum[-1]                                # [n]
+    s_new = cend[:, None] * s + ((cend[None, :] / jnp.maximum(cum, 1e-30))
+                                 * k).T @ v
+    s_scr[...] = s_new
+    y_ref[...] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        sT_ref[...] = s_new.astype(sT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, s0: jax.Array, *, chunk: int = 64,
+         interpret: bool | None = None):
+    """r,k,v,w [B,T,H,n]; u [H,n]; s0 [B,H,n,n] -> (y [B,T,H,n], sT)."""
+    B, T, H, n = r.shape
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    nc = -(-T // chunk)
+    pad = nc * chunk - T
+    def prep(x, val=0.0):
+        x = x.astype(jnp.float32)
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                        constant_values=val)
+        return x.transpose(0, 2, 1, 3).reshape(B * H, nc * chunk, n)
+    rp, kp, vp = prep(r), prep(k), prep(v)
+    wp = prep(w, 1.0)
+    uu = jnp.broadcast_to(u.astype(jnp.float32)[None], (B, H, n)
+                          ).reshape(B * H, 1, n)
+    s0r = s0.astype(jnp.float32).reshape(B * H, n, n)
+
+    y, sT = pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=chunk, n=n, nc=nc),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((None, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, 1, n), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((None, n, n), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, n, n), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, nc * chunk, n), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(rp, kp, vp, wp, uu, s0r)
+
+    y = y.reshape(B, H, nc * chunk, n)[:, :, :T].transpose(0, 2, 1, 3)
+    return y, sT.reshape(B, H, n, n)

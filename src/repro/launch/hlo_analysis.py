@@ -1,0 +1,107 @@
+"""Roofline-term extraction from compiled/lowered HLO (DESIGN §8, §Roofline).
+
+``collective_bytes`` is NOT in ``cost_analysis()`` — we parse the optimized
+HLO text and sum operand bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.  Hardware constants are
+the TPU v5e numbers given in the assignment.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "RooflineReport"]
+
+# TPU v5e per-chip constants (assignment §Roofline)
+HW = dict(peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9a-z]+)?|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0.0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return float(n * b)
+
+
+# Per-device wire-traffic factor applied to the RESULT bytes of each
+# collective (optimized HLO prints operand *names* only, so we read the
+# result shape, which for these ops equals/bounds the per-device payload):
+# all-reduce moves ~2x its buffer (reduce + broadcast phases); the others
+# move ~1x their (already per-device) result.  This is a uniform ~2x-exact
+# approximation, fine for roofline ranking; documented in EXPERIMENTS.md.
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device collective wire bytes by kind, parsed from optimized HLO."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out["total"] = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.find("=")
+        if eq < 0:
+            continue
+        m = None
+        for kind in _COLLECTIVES:
+            # opcode position must be AFTER '=' (instruction names contain
+            # the opcode too, e.g. %all-reduce.271); count async ops at
+            # their "-start" half only.
+            mm = re.search(rf"(?:^|\s)({kind})(-start|-done)?\(", s)
+            if mm and mm.start() > eq and mm.group(2) != "-done":
+                m = (kind, mm)
+                break
+        if not m:
+            continue
+        kind, mm = m
+        result_part = s[eq + 1: mm.start()]
+        byt = sum(_shape_bytes(d, dims)
+                  for d, dims in _SHAPE_RE.findall(result_part))
+        byt *= _WIRE_FACTOR[kind]
+        out[kind] += byt
+        out["total"] += byt
+    return out
+
+
+@dataclass
+class RooflineReport:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float      # MODEL_FLOPS / (HLO flops x n_devices)
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def roofline_terms(*, flops: float, bytes_accessed: float,
+                   coll_bytes: float, n_devices: int,
+                   model_flops: float = 0.0) -> RooflineReport:
+    """All inputs are per-device (XLA analyses run on the SPMD partition)."""
+    t_c = flops / HW["peak_flops"]
+    t_m = bytes_accessed / HW["hbm_bw"]
+    t_x = coll_bytes / HW["ici_bw"]
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bn = max(terms, key=terms.get)
+    useful = (model_flops / (flops * n_devices)) if flops else 0.0
+    return RooflineReport(flops, bytes_accessed, coll_bytes, t_c, t_m, t_x,
+                          bn, model_flops, useful)

@@ -1,0 +1,111 @@
+"""Jitted step builders shared by train.py / serve.py / dryrun.py.
+
+Each builder returns (jitted_fn, abstract_args) where abstract_args are
+ShapeDtypeStructs — so the same code path serves real training (pass real
+arrays) and the dry-run (``.lower(*abstract_args).compile()``, no
+allocation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import optim
+from ..configs import ArchConfig, Shape, SHAPES
+from ..distributed.sharding import (param_specs, batch_specs,
+                                    decode_state_specs_sharded)
+from ..models import registry
+
+__all__ = ["abstract_params", "build_train_step", "build_prefill",
+           "build_decode_step", "default_tx"]
+
+
+def default_tx(lr: float = 3e-4):
+    return optim.adamw(lr, weight_decay=0.01, max_grad_norm=1.0)
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    model = registry.get_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), cfg, dtype=dtype))
+
+
+def _ns(mesh, specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_train_step(cfg: ArchConfig, shape: Shape, mesh, *,
+                     impl: str = "xla", remat: str = "full",
+                     dtype=jnp.bfloat16, tx=None):
+    """(jitted train_step, (params_sds, opt_sds, batch_sds))."""
+    model = registry.get_model(cfg)
+    tx = tx or default_tx()
+    params_sds = abstract_params(cfg, dtype)
+    opt_sds = jax.eval_shape(tx.init, params_sds)
+    batch_sds = registry.input_specs(cfg, shape, act_dtype=dtype)
+
+    p_ns = _ns(mesh, param_specs(params_sds, mesh, cfg))
+    o_ns = _ns(mesh, param_specs(opt_sds, mesh, cfg))
+    b_ns = _ns(mesh, batch_specs(batch_sds, mesh))
+    scalar = NamedSharding(mesh, P())
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, cfg, batch, impl=impl, remat=remat)
+        )(params)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        return params, opt_state, loss
+
+    jitted = jax.jit(train_step,
+                     in_shardings=(p_ns, o_ns, b_ns),
+                     out_shardings=(p_ns, o_ns, scalar),
+                     donate_argnums=(0, 1))
+    return jitted, (params_sds, opt_sds, batch_sds)
+
+
+def build_prefill(cfg: ArchConfig, shape: Shape, mesh, *, impl: str = "xla",
+                  dtype=jnp.bfloat16):
+    model = registry.get_model(cfg)
+    params_sds = abstract_params(cfg, dtype)
+    batch_sds = registry.input_specs(cfg, shape, act_dtype=dtype)
+    max_len = registry.decode_cache_len(cfg, shape)
+
+    p_ns = _ns(mesh, param_specs(params_sds, mesh, cfg))
+    b_ns = _ns(mesh, batch_specs(batch_sds, mesh))
+
+    def prefill(params, batch):
+        return model.prefill(params, cfg, batch, max_len, impl=impl)
+
+    jitted = jax.jit(prefill, in_shardings=(p_ns, b_ns))
+    return jitted, (params_sds, batch_sds)
+
+
+def build_decode_step(cfg: ArchConfig, shape: Shape, mesh, *,
+                      impl: str = "xla", dtype=jnp.bfloat16):
+    """One-token serve step with donated caches. SP for batch-1 long ctx."""
+    model = registry.get_model(cfg)
+    params_sds = abstract_params(cfg, dtype)
+    state_sds = registry.decode_state_specs(cfg, shape, cache_dtype=dtype)
+    batch_sds = registry.input_specs(cfg, shape, act_dtype=dtype)
+    shard_seq = shape.global_batch == 1
+
+    p_ns = _ns(mesh, param_specs(params_sds, mesh, cfg))
+    s_ns = _ns(mesh, decode_state_specs_sharded(state_sds, mesh,
+                                                shard_seq=shard_seq))
+    b_ns = _ns(mesh, batch_specs(batch_sds, mesh, shard_seq=False))
+
+    def decode_step(params, state, batch):
+        logits, state = model.decode_step(params, cfg, state, batch,
+                                          impl=impl)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, state
+
+    jitted = jax.jit(decode_step, in_shardings=(p_ns, s_ns, b_ns),
+                     donate_argnums=(1,))
+    return jitted, (params_sds, state_sds, batch_sds)

@@ -1,0 +1,170 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Fault-tolerant loop (restore-from-latest, async checkpoints, straggler
+monitor) over the synthetic pipeline.  ``--fusion-mapper`` turns on the
+paper's technique as a framework feature: the arch is lowered to a fusion
+workload, the mapper (trained DNNFuser artifact if present, else a quick
+G-Sampler search) infers the input micro-batch under the activation-memory
+budget, and the trainer uses it as the gradient-accumulation micro-batch —
+the paper's §3 "micro-batching strategy" steering a real training loop.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import optim
+from ..configs import get_config, Shape
+from ..core import PAPER_ACCEL, FusionEnv, GSamplerConfig, gsampler_search
+from ..data import SyntheticLM
+from ..models import registry
+from ..runtime import TrainLoop
+from ..workloads.lm_workloads import lm_workload
+
+__all__ = ["mapper_microbatch", "make_local_train_step", "main"]
+
+MB = float(2 ** 20)
+
+
+def mapper_microbatch(cfg, *, seq_len: int, global_batch: int,
+                      act_budget_mb: float, dt_params=None,
+                      dt_cfg=None) -> dict:
+    """Infer a micro-batching strategy for (arch, shape) under a budget.
+
+    Returns {"micro_batch", "grad_accum", "strategy", "speedup"}.  With a
+    trained DNNFuser (dt_params) inference is one-shot; otherwise G-Sampler
+    searches (the teacher fallback).
+    """
+    wl = lm_workload(cfg, seq_len=seq_len, batch=global_batch, mode="train")
+    # activations at LM-block granularity: scale the edge-accelerator cost
+    # model to HBM-class numbers for this use
+    hw = PAPER_ACCEL
+    env = FusionEnv(wl, hw, batch=global_batch,
+                    budget_bytes=act_budget_mb * MB, nmax=128)
+    if dt_params is not None:
+        from ..core.infer import dnnfuser_infer
+        res = dnnfuser_infer(dt_params, dt_cfg, env)
+        strategy, speedup = res.strategy, res.speedup
+    else:
+        res = gsampler_search(env, GSamplerConfig(generations=20, seed=0))
+        strategy, speedup = res.strategy, res.speedup
+    mb0 = int(max(1, strategy[0]))
+    # round to a divisor of the global batch
+    while global_batch % mb0:
+        mb0 -= 1
+    return {"micro_batch": mb0, "grad_accum": global_batch // mb0,
+            "strategy": strategy[: wl.n + 1], "speedup": speedup}
+
+
+def make_local_train_step(cfg, tx, *, grad_accum: int = 1, impl="xla",
+                          remat="none"):
+    """Single-host train step with optional gradient accumulation."""
+    model = registry.get_model(cfg)
+
+    def loss_fn(p, batch):
+        return model.loss_fn(p, cfg, batch, impl=impl, remat=remat)
+
+    def step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+            mb = B // grad_accum
+            chunks = jax.tree.map(
+                lambda x: x[: mb * grad_accum].reshape(
+                    (grad_accum, mb) + x.shape[1:]), batch)
+
+            def acc_fn(carry, chunk):
+                loss_s, grads_s = carry
+                l, g = jax.value_and_grad(loss_fn)(params, chunk)
+                return (loss_s + l,
+                        jax.tree.map(lambda a, b: a + b, grads_s, g)), None
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, grads), _ = jax.lax.scan(acc_fn, zero, chunks)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return jax.jit(step, donate_argnums=(0, 1))
+
+
+def train(arch: str, *, steps: int = 200, global_batch: int = 8,
+          seq_len: int = 128, reduced: bool = True, lr: float = 3e-4,
+          ckpt_dir: str = "artifacts/train", use_mapper: bool = False,
+          act_budget_mb: float = 24.0, crash_at: int | None = None,
+          seed: int = 0):
+    cfg = get_config(arch, reduced=reduced)
+    model = registry.get_model(cfg)
+    grad_accum = 1
+    mapper_info = None
+    if use_mapper:
+        mapper_info = mapper_microbatch(cfg, seq_len=seq_len,
+                                        global_batch=global_batch,
+                                        act_budget_mb=act_budget_mb)
+        grad_accum = mapper_info["grad_accum"]
+        print(f"[mapper] micro_batch={mapper_info['micro_batch']} "
+              f"grad_accum={grad_accum} "
+              f"(modeled fusion speedup {mapper_info['speedup']:.2f}x)")
+
+    params = model.init(jax.random.PRNGKey(seed), cfg, dtype=jnp.float32)
+    tx = optim.adamw(optim.cosine_with_warmup(lr, 20, steps),
+                     weight_decay=0.01, max_grad_norm=1.0)
+    opt_state = tx.init(params)
+    step_fn = make_local_train_step(cfg, tx, grad_accum=grad_accum)
+
+    src = SyntheticLM(
+        vocab=cfg.vocab, seq_len=seq_len, global_batch=global_batch,
+        seed=seed,
+        embed_dim=cfg.d_model if cfg.embed_inputs else None,
+        dec_len=max(seq_len // 8, 8) if cfg.family == "encdec" else None)
+
+    def batch_fn(step):
+        b = src.batch_at(step)
+        if cfg.embed_inputs and cfg.family != "encdec":
+            b = {"embeds": b["embeds"], "labels": b["labels"]}
+        elif cfg.family == "encdec":
+            b = {"embeds": b["embeds"], "tokens": b["tokens"],
+                 "labels": b["labels"]}
+        else:
+            b = {"tokens": b["tokens"], "labels": b["labels"]}
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    loop = TrainLoop(step_fn, params, opt_state, batch_fn,
+                     ckpt_dir=ckpt_dir, ckpt_every=max(steps // 4, 10))
+    params, opt_state = loop.run(steps, crash_at=crash_at)
+    return loop, mapper_info
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--full", action="store_true",
+                    help="full (non-reduced) config — needs real HW")
+    ap.add_argument("--fusion-mapper", action="store_true")
+    ap.add_argument("--act-budget-mb", type=float, default=24.0)
+    ap.add_argument("--ckpt-dir", default="artifacts/train")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+    loop, _ = train(args.arch, steps=args.steps,
+                    global_batch=args.global_batch, seq_len=args.seq_len,
+                    reduced=not args.full, lr=args.lr,
+                    ckpt_dir=args.ckpt_dir, use_mapper=args.fusion_mapper,
+                    act_budget_mb=args.act_budget_mb)
+    print("losses:", loop.losses)
+    print("median step s:", round(loop.monitor.median, 4),
+          "straggler events:", len(loop.monitor.events))
+
+
+if __name__ == "__main__":
+    main()

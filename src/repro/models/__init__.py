@@ -1,0 +1,5 @@
+from .registry import (get_model, input_specs, decode_state_specs,
+                       decode_cache_len)
+
+__all__ = ["get_model", "input_specs", "decode_state_specs",
+           "decode_cache_len"]

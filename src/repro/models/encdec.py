@@ -1,0 +1,170 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv/mel frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings [B, S, d] (sinusoidal positions added);
+the decoder (learned positions, causal self-attn + cross-attn to encoder
+memory) trains on text tokens of length S//8.  Decode carries a self-attn
+KV cache; cross-attn reads the static encoder memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import nn
+from ..nn import flags as _flags
+from ..distributed.sharding import logical_shard
+from ..nn.losses import vocab_parallel_ce, fused_linear_ce
+from ..configs import ArchConfig
+
+__all__ = ["init", "forward", "loss_fn", "init_decode_state", "prefill",
+           "decode_step", "DEC_FRAC"]
+
+DEC_FRAC = 8  # decoder_len = encoder seq_len // DEC_FRAC (stub frontend)
+
+
+def _sinusoid(S: int, d: int, dtype) -> jax.Array:
+    pos = np.arange(S)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, dtype)
+
+
+def init(key: jax.Array, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    ke, kd, kt, kp = jax.random.split(key, 4)
+    blk = lambda cross: (lambda k: nn.block_init(
+        k, cfg.d_model, n_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
+        head_dim=cfg.hd, d_ff=cfg.d_ff, mlp_kind=cfg.mlp_kind, norm=cfg.norm,
+        cross_attn=cross, dtype=dtype))
+    return {
+        "enc_blocks": nn.stack_init(ke, cfg.encoder_layers, blk(False)),
+        "enc_ln": nn.layernorm_init(cfg.d_model, dtype),
+        "tok": nn.embedding_init(kt, cfg.vocab_padded, cfg.d_model,
+                                 dtype=dtype),
+        "pos": nn.embedding_init(kp, 4096 + 8, cfg.d_model, dtype=dtype),
+        "dec_blocks": nn.stack_init(kd, cfg.n_layers, blk(True)),
+        "dec_ln": nn.layernorm_init(cfg.d_model, dtype),
+    }
+
+
+def _enc(params, cfg: ArchConfig, embeds, *, impl="xla", remat="none"):
+    x = embeds + _sinusoid(embeds.shape[1], cfg.d_model, embeds.dtype)
+
+    def body(x, lp):
+        x = logical_shard(x, "batch", None, None)
+        x, _, _ = nn.block_apply(lp, x, n_heads=cfg.n_heads,
+                                 kv_heads=cfg.kv_heads, head_dim=cfg.hd,
+                                 mlp_kind=cfg.mlp_kind, norm=cfg.norm,
+                                 causal=False, impl=impl)
+        return x, None
+    if remat == "full":
+        body = jax.checkpoint(body)
+    if _flags.unroll_enabled():
+        L = jax.tree_util.tree_leaves(params["enc_blocks"])[0].shape[0]
+        for i in range(L):
+            x, _ = body(x, jax.tree.map(lambda a: a[i],
+                                        params["enc_blocks"]))
+        return nn.layernorm_apply(params["enc_ln"], x)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return nn.layernorm_apply(params["enc_ln"], x)
+
+
+def _dec(params, cfg: ArchConfig, tokens, memory, *, caches=None, pos0=0,
+         impl="xla", remat="none"):
+    B, S = tokens.shape
+    x = nn.embedding_apply(params["tok"], tokens) \
+        + nn.embedding_apply(params["pos"], pos0 + jnp.arange(S))
+
+    def body(carry, scanned):
+        x, memory = carry
+        lp, cache = scanned
+        x = logical_shard(x, "batch", None, None)
+        x, cache, _ = nn.block_apply(lp, x, n_heads=cfg.n_heads,
+                                     kv_heads=cfg.kv_heads, head_dim=cfg.hd,
+                                     mlp_kind=cfg.mlp_kind, norm=cfg.norm,
+                                     causal=True, memory=memory, cache=cache,
+                                     impl=impl)
+        return (x, memory), cache
+    if remat == "full":
+        body = jax.checkpoint(body)
+    if _flags.unroll_enabled():
+        sl = lambda t, i: jax.tree.map(lambda a: a[i], t)
+        carry = (x, memory)
+        outs = []
+        L = jax.tree_util.tree_leaves(params["dec_blocks"])[0].shape[0]
+        for i in range(L):
+            carry, c_i = body(carry, (sl(params["dec_blocks"], i),
+                                      sl(caches, i) if caches is not None else None))
+            outs.append(c_i)
+        (x, _) = carry
+        caches = (jax.tree.map(lambda *a: jnp.stack(a), *outs)
+                  if caches is not None else None)
+        x = nn.layernorm_apply(params["dec_ln"], x)
+        return x, caches
+    (x, _), caches = jax.lax.scan(body, (x, memory),
+                                  (params["dec_blocks"], caches))
+    x = nn.layernorm_apply(params["dec_ln"], x)
+    return x, caches
+
+
+def _dec_hidden(params, cfg, tokens, memory, *, caches=None, pos0=0,
+                impl="xla", remat="none"):
+    return _dec(params, cfg, tokens, memory, caches=caches, pos0=pos0,
+                impl=impl, remat=remat)
+
+
+def forward(params, cfg: ArchConfig, batch: dict, *, impl="xla",
+            remat="none"):
+    memory = _enc(params, cfg, batch["embeds"], impl=impl, remat=remat)
+    x, _ = _dec(params, cfg, batch["tokens"], memory, impl=impl, remat=remat)
+    logits = logical_shard(x @ params["tok"]["emb"].T, "batch", None, "model")
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, *, impl="xla",
+            remat="none", aux_weight: float = 0.0):
+    memory = _enc(params, cfg, batch["embeds"], impl=impl, remat=remat)
+    x, _ = _dec_hidden(params, cfg, batch["tokens"], memory, impl=impl,
+                       remat=remat)
+    return fused_linear_ce(x, params["tok"]["emb"].T, batch["labels"])
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, batch, max_len, cfg.kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((L, batch, max_len, cfg.kv_heads, cfg.hd), dtype),
+        "idx": jnp.zeros((L,), jnp.int32),
+        "memory": jnp.zeros((batch, max_len * DEC_FRAC, cfg.d_model), dtype),
+    }
+
+
+def prefill(params, cfg: ArchConfig, batch: dict, max_len: int, *,
+            impl="xla", cache_dtype=jnp.bfloat16):
+    """Encode the audio stub + consume the decoder prompt."""
+    memory = _enc(params, cfg, batch["embeds"], impl=impl)
+    B, S = batch["tokens"].shape
+    caches = {"k": jnp.zeros((cfg.n_layers, B, max_len, cfg.kv_heads, cfg.hd),
+                             cache_dtype),
+              "v": jnp.zeros((cfg.n_layers, B, max_len, cfg.kv_heads, cfg.hd),
+                             cache_dtype),
+              "idx": jnp.zeros((cfg.n_layers,), jnp.int32)}
+    x, caches = _dec(params, cfg, batch["tokens"], memory,
+                     caches=caches, impl=impl)
+    logits = logical_shard(x @ params["tok"]["emb"].T, "batch", None, "model")
+    caches["memory"] = memory.astype(cache_dtype)
+    return logits[:, -1:], caches
+
+
+def decode_step(params, cfg: ArchConfig, state, batch: dict, *, impl="xla"):
+    memory = state["memory"]
+    caches = {k: state[k] for k in ("k", "v", "idx")}
+    pos0 = state["idx"][0]
+    x, caches = _dec(params, cfg, batch["tokens"], memory,
+                     caches=caches, pos0=pos0, impl=impl)
+    logits = logical_shard(x @ params["tok"]["emb"].T, "batch", None, "model")
+    caches["memory"] = memory
+    return logits, caches

@@ -1,0 +1,164 @@
+"""Hymba hybrid-head LM (arXiv:2411.13676).
+
+Each layer runs GQA attention (mostly sliding-window; a few global layers)
+and a Mamba-style selective-SSM head *in parallel* on the same normed input;
+the two paths are averaged (the paper's mean fusion after per-path
+normalization) before the residual add, followed by a SwiGLU MLP.
+Decode state = KV cache (window-bounded for local layers) + SSM state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from ..nn import flags as _flags
+from ..nn.ssm import ssm_init, ssm_apply, ssm_init_state
+from ..distributed.sharding import logical_shard
+from ..nn.losses import vocab_parallel_ce, fused_linear_ce
+from ..configs import ArchConfig
+
+__all__ = ["init", "forward", "loss_fn", "init_decode_state", "prefill",
+           "decode_step"]
+
+
+def _block_init(key: jax.Array, cfg: ArchConfig, dtype) -> dict:
+    ka, ks, km = jax.random.split(key, 3)
+    return {
+        "ln1": nn.rmsnorm_init(cfg.d_model, dtype),
+        "attn": nn.attention.mha_init(ka, cfg.d_model, n_heads=cfg.n_heads,
+                                      kv_heads=cfg.kv_heads, head_dim=cfg.hd,
+                                      dtype=dtype),
+        "ssm": ssm_init(ks, cfg.d_model, state=cfg.ssm_state,
+                        conv=cfg.ssm_conv, dtype=dtype),
+        "na": nn.rmsnorm_init(cfg.d_model, dtype),   # per-path output norms
+        "ns": nn.rmsnorm_init(cfg.d_model, dtype),
+        "ln2": nn.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": nn.mlp_init(km, cfg.d_model, cfg.d_ff, kind="swiglu",
+                           dtype=dtype),
+    }
+
+
+def init(key: jax.Array, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    ke, kb, kh = jax.random.split(key, 3)
+    return {
+        "embed": nn.embedding_init(ke, cfg.vocab_padded, cfg.d_model,
+                                   dtype=dtype),
+        "blocks": nn.stack_init(kb, cfg.n_layers,
+                                lambda k: _block_init(k, cfg, dtype)),
+        "ln_f": nn.rmsnorm_init(cfg.d_model, dtype),
+        "head": nn.dense_init(kh, cfg.d_model, cfg.vocab_padded, bias=False,
+                              dtype=dtype),
+    }
+
+
+def _run(params, cfg: ArchConfig, x, cos, sin, *, caches=None, impl="xla",
+         remat="none"):
+    windows = jnp.asarray(cfg.windows(), jnp.int32)
+
+    def scan_body(carry, scanned):
+        x, cos, sin = carry
+        lp, win, cache = scanned
+        x = logical_shard(x, "batch", None, None)
+        kv_cache = cache["kv"] if cache is not None else None
+        ssm_state = cache["ssm"] if cache is not None else None
+        xn = nn.rmsnorm_apply(lp["ln1"], x)
+        ha, kv_cache = nn.attention.mha_apply(
+            lp["attn"], xn, cos=cos, sin=sin, causal=True, window=win,
+            cache=kv_cache, impl=impl, n_heads=cfg.n_heads,
+            kv_heads=cfg.kv_heads, head_dim=cfg.hd)
+        hs, ssm_state = ssm_apply(lp["ssm"], xn, state=ssm_state)
+        h = 0.5 * (nn.rmsnorm_apply(lp["na"], ha)
+                   + nn.rmsnorm_apply(lp["ns"], hs))
+        x = x + h
+        x = x + nn.mlp_apply(lp["mlp"], nn.rmsnorm_apply(lp["ln2"], x),
+                             kind="swiglu")
+        new_cache = (None if cache is None
+                     else {"kv": kv_cache, "ssm": ssm_state})
+        return (x, cos, sin), new_cache
+
+    if remat == "full":
+        scan_body = jax.checkpoint(scan_body)
+    elif remat == "dots":
+        scan_body = jax.checkpoint(
+            scan_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    if _flags.unroll_enabled():
+        sl = lambda t, i: jax.tree.map(lambda a: a[i], t)
+        carry = (x, cos, sin)
+        outs = []
+        L = jax.tree_util.tree_leaves(params["blocks"])[0].shape[0]
+        for i in range(L):
+            carry, c_i = scan_body(carry, (sl(params["blocks"], i),
+                                           windows[i],
+                                           sl(caches, i) if caches is not None else None))
+            outs.append(c_i)
+        (x, _, _) = carry
+        new_caches = (jax.tree.map(lambda *a: jnp.stack(a), *outs)
+                      if caches is not None else None)
+        return x, new_caches
+    (x, _, _), new_caches = jax.lax.scan(scan_body, (x, cos, sin),
+                                         (params["blocks"], windows, caches))
+    return x, new_caches
+
+
+def forward(params, cfg: ArchConfig, batch: dict, *, impl="xla",
+            remat="none"):
+    ids = batch["tokens"]
+    B, S = ids.shape
+    x = nn.embedding_apply(params["embed"], ids)
+    cos, sin = nn.rope_freqs(jnp.broadcast_to(jnp.arange(S), (B, S)), cfg.hd,
+                             cfg.rope_theta)
+    x, _ = _run(params, cfg, x, cos, sin, impl=impl, remat=remat)
+    x = nn.rmsnorm_apply(params["ln_f"], x)
+    logits = logical_shard(nn.dense_apply(params["head"], x),
+                           "batch", None, "model")
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, *, impl="xla",
+            remat="none", aux_weight: float = 0.0):
+    ids = batch["tokens"]
+    B, S = ids.shape
+    x = nn.embedding_apply(params["embed"], ids)
+    cos, sin = nn.rope_freqs(jnp.broadcast_to(jnp.arange(S), (B, S)), cfg.hd,
+                             cfg.rope_theta)
+    x, _ = _run(params, cfg, x, cos, sin, impl=impl, remat=remat)
+    x = nn.rmsnorm_apply(params["ln_f"], x)
+    return fused_linear_ce(x, params["head"]["w"], batch["labels"])
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    L = cfg.n_layers
+    kv = {"k": jnp.zeros((L, batch, max_len, cfg.kv_heads, cfg.hd), dtype),
+          "v": jnp.zeros((L, batch, max_len, cfg.kv_heads, cfg.hd), dtype),
+          "idx": jnp.zeros((L,), jnp.int32)}
+    ssm = ssm_init_state(batch, cfg.d_model, cfg.ssm_state, cfg.ssm_conv,
+                         dtype)
+    ssm = jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape), ssm)
+    return {"kv": kv, "ssm": ssm}
+
+
+def prefill(params, cfg: ArchConfig, batch: dict, max_len: int, *,
+            impl="xla", cache_dtype=jnp.bfloat16):
+    ids = batch["tokens"]
+    B, S = ids.shape
+    caches = init_decode_state(cfg, B, max_len, cache_dtype)
+    x = nn.embedding_apply(params["embed"], ids)
+    cos, sin = nn.rope_freqs(jnp.broadcast_to(jnp.arange(S), (B, S)), cfg.hd,
+                             cfg.rope_theta)
+    x, caches = _run(params, cfg, x, cos, sin, caches=caches, impl=impl)
+    x = nn.rmsnorm_apply(params["ln_f"], x[:, -1:])
+    return nn.dense_apply(params["head"], x), caches
+
+
+def decode_step(params, cfg: ArchConfig, state, batch: dict, *, impl="xla"):
+    ids = batch["tokens"]
+    B = ids.shape[0]
+    x = nn.embedding_apply(params["embed"], ids)
+    pos = jnp.broadcast_to(state["kv"]["idx"][0], (B, 1))
+    cos, sin = nn.rope_freqs(pos, cfg.hd, cfg.rope_theta)
+    x, state = _run(params, cfg, x, cos, sin, caches=state, impl=impl)
+    x = nn.rmsnorm_apply(params["ln_f"], x)
+    return nn.dense_apply(params["head"], x), state

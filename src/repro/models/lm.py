@@ -1,0 +1,238 @@
+"""Generic decoder-only LM covering the dense / MoE / VLM-backbone archs.
+
+One scanned block body parameterized by ArchConfig handles: GQA (+qk-norm,
+QKV bias), per-layer sliding windows (gemma3 5:1 local:global as a scanned
+window array), SwiGLU or MoE FFN (stacked experts, EP-ready), standard RoPE
+or M-RoPE (qwen2-vl), tied or untied embeddings, and stubbed modality
+frontends (``embed_inputs``: the batch carries precomputed embeddings).
+
+Entry points: ``forward`` (teacher-forced logits), ``loss_fn`` (next-token
+CE + MoE aux), ``prefill`` (build KV caches), ``decode_step`` (one token,
+donated caches).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from ..nn import flags as _flags
+from ..nn.moe import moe_apply, moe_init
+from ..distributed.sharding import logical_shard
+from ..nn.losses import vocab_parallel_ce, fused_linear_ce
+from ..configs import ArchConfig
+
+__all__ = ["init", "forward", "loss_fn", "init_decode_state", "prefill",
+           "decode_step"]
+
+
+def _block_init(key: jax.Array, cfg: ArchConfig, dtype) -> dict:
+    kb, km = jax.random.split(key)
+    p = nn.block_init(kb, cfg.d_model, n_heads=cfg.n_heads,
+                      kv_heads=cfg.kv_heads, head_dim=cfg.hd, d_ff=cfg.d_ff,
+                      mlp_kind=cfg.mlp_kind, norm=cfg.norm,
+                      qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm, dtype=dtype)
+    if cfg.n_experts:
+        del p["mlp"]
+        p["moe"] = moe_init(km, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                            dtype=dtype)
+    return p
+
+
+def init(key: jax.Array, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    ke, kb, kh = jax.random.split(key, 3)
+    p = {
+        "embed": nn.embedding_init(ke, cfg.vocab_padded, cfg.d_model,
+                                   dtype=dtype),
+        "blocks": nn.stack_init(kb, cfg.n_layers,
+                                lambda k: _block_init(k, cfg, dtype)),
+        "ln_f": (nn.rmsnorm_init if cfg.norm == "rms"
+                 else nn.layernorm_init)(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = nn.dense_init(kh, cfg.d_model, cfg.vocab_padded,
+                                  bias=False, dtype=dtype)
+    return p
+
+
+def _rope_tables(cfg: ArchConfig, batch: dict, positions: jax.Array):
+    """cos/sin [B?, S, hd/2]; M-RoPE if the config says so."""
+    if cfg.mrope_sections is not None:
+        pos_thw = batch.get("pos_thw")
+        if pos_thw is None:  # text-only: all three ids coincide
+            pos_thw = jnp.broadcast_to(positions, (3,) + positions.shape)
+        return nn.mrope_freqs(pos_thw, cfg.hd, cfg.mrope_sections,
+                              cfg.rope_theta)
+    return nn.rope_freqs(positions, cfg.hd, cfg.rope_theta)
+
+
+def _body(cfg: ArchConfig, impl: str, static_window=None):
+    """Scan body: (layer_params, x-or-(x,aux), per_layer, cache)."""
+    norm_apply = nn.rmsnorm_apply if cfg.norm == "rms" else nn.layernorm_apply
+
+    def body(lp, carry, aux, cache):
+        x, aux_sum, cos, sin = carry
+        x = logical_shard(x, "batch", None, None)
+        # uniform window patterns pass statically (required by the pallas
+        # kernel, which specializes per window value)
+        window = static_window if static_window is not None else aux
+        h, new_cache = nn.attention.mha_apply(
+            lp["attn"], norm_apply(lp["ln1"], x), cos=cos, sin=sin,
+            causal=True, window=window, cache=cache, impl=impl,
+            n_heads=cfg.n_heads, kv_heads=cfg.kv_heads, head_dim=cfg.hd)
+        x = x + h
+        hin = norm_apply(lp["ln2"], x)
+        if cfg.n_experts:
+            h, aux_l = moe_apply(lp["moe"], hin, top_k=cfg.moe_top_k,
+                                 capacity_factor=cfg.capacity_factor)
+            aux_sum = aux_sum + aux_l
+        else:
+            h = nn.mlp_apply(lp["mlp"], hin, kind=cfg.mlp_kind)
+        x = logical_shard(x + h, "batch", None, None)
+        return (x, aux_sum, cos, sin), new_cache
+
+    return body
+
+
+def _run_stack(params, cfg: ArchConfig, x, cos, sin, *, caches=None,
+               impl="xla", remat="none"):
+    wins = cfg.windows()
+    static_window = wins[0] if len(set(wins)) == 1 else None
+    body = _body(cfg, impl, static_window)
+    windows = jnp.asarray(wins, jnp.int32)
+
+    def scan_body(carry, scanned):
+        lp, win, cache = scanned
+        (x, aux, c, s), new_cache = body(lp, carry, win, cache)
+        return (x, aux, c, s), new_cache
+
+    if remat == "full":
+        scan_body = jax.checkpoint(scan_body)
+    elif remat == "dots":
+        scan_body = jax.checkpoint(
+            scan_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    carry0 = (x, jnp.zeros((), jnp.float32), cos, sin)
+    if _flags.unroll_enabled():
+        carry = carry0
+        new_caches = caches
+        sl = lambda t, i: jax.tree.map(lambda a: a[i], t)
+        ncs = []
+        L = jax.tree_util.tree_leaves(params["blocks"])[0].shape[0]
+        for i in range(L):
+            carry, nc_i = scan_body(carry, (sl(params["blocks"], i),
+                                            windows[i],
+                                            sl(caches, i) if caches is not None else None))
+            ncs.append(nc_i)
+        (x, aux, _, _) = carry
+        new_caches = (jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+                      if caches is not None else None)
+        return x, aux, new_caches
+    (x, aux, _, _), new_caches = jax.lax.scan(
+        scan_body, carry0, (params["blocks"], windows, caches))
+    return x, aux, new_caches
+
+
+def _logits(params, cfg: ArchConfig, x):
+    norm_apply = nn.rmsnorm_apply if cfg.norm == "rms" else nn.layernorm_apply
+    x = norm_apply(params["ln_f"], x)
+    if cfg.tie_embeddings:
+        w = params["embed"]["emb"]
+        logits = x @ w.T
+    else:
+        logits = nn.dense_apply(params["head"], x)
+    # keep the vocab dim TP-sharded: without this GSPMD may materialize
+    # full-vocab logits per device (DESIGN §6)
+    return logical_shard(logits, "batch", None, "model")
+
+
+def _hidden(params, cfg: ArchConfig, batch: dict, *, impl="xla",
+            remat="none"):
+    """Final normed hidden states [B,S,d] (+ MoE aux)."""
+    if cfg.embed_inputs:
+        x = batch["embeds"]
+        B, S = x.shape[:2]
+    else:
+        ids = batch["tokens"]
+        B, S = ids.shape
+        x = nn.embedding_apply(params["embed"], ids)
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cos, sin = _rope_tables(cfg, batch, positions)
+    x, aux, _ = _run_stack(params, cfg, x, cos, sin, impl=impl, remat=remat)
+    norm_apply = nn.rmsnorm_apply if cfg.norm == "rms" else nn.layernorm_apply
+    return norm_apply(params["ln_f"], x), aux
+
+
+def _head_w(params, cfg: ArchConfig):
+    return (params["embed"]["emb"].T if cfg.tie_embeddings
+            else params["head"]["w"])
+
+
+def forward(params, cfg: ArchConfig, batch: dict, *, impl: str = "xla",
+            remat: str = "none"):
+    """Teacher-forced logits [B,S,Vp] (+ MoE aux loss)."""
+    if cfg.embed_inputs:
+        x = batch["embeds"]
+        B, S = x.shape[:2]
+    else:
+        ids = batch["tokens"]
+        B, S = ids.shape
+        x = nn.embedding_apply(params["embed"], ids)
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cos, sin = _rope_tables(cfg, batch, positions)
+    x, aux, _ = _run_stack(params, cfg, x, cos, sin, impl=impl, remat=remat)
+    return _logits(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, *, impl: str = "xla",
+            remat: str = "none", aux_weight: float = 0.01):
+    x, aux = _hidden(params, cfg, batch, impl=impl, remat=remat)
+    ce = fused_linear_ce(x, _head_w(params, cfg), batch["labels"])
+    return ce + aux_weight * aux / max(cfg.n_layers, 1)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Stacked per-layer KV caches [L, B, T, kvh, hd]."""
+    L = cfg.n_layers
+    mk = lambda: jnp.zeros((L, batch, max_len, cfg.kv_heads, cfg.hd), dtype)
+    return {"k": mk(), "v": mk(), "idx": jnp.zeros((L,), jnp.int32)}
+
+
+def prefill(params, cfg: ArchConfig, batch: dict, max_len: int, *,
+            impl: str = "xla", cache_dtype=jnp.bfloat16):
+    """Process the prompt, returning (last-token logits, filled caches)."""
+    if cfg.embed_inputs:
+        x = batch["embeds"]; B, S = x.shape[:2]
+    else:
+        ids = batch["tokens"]; B, S = ids.shape
+        x = nn.embedding_apply(params["embed"], ids)
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cos, sin = _rope_tables(cfg, batch, positions)
+    caches = init_decode_state(cfg, B, max_len, cache_dtype)
+    x, _, caches = _run_stack(params, cfg, x, cos, sin, caches=caches,
+                              impl=impl)
+    return _logits(params, cfg, x[:, -1:]), caches
+
+
+def decode_step(params, cfg: ArchConfig, state: dict, batch: dict, *,
+                impl: str = "xla"):
+    """One decode step. ``batch['tokens']`` [B,1] (or embeds [B,1,d]).
+    ``state`` caches are donated by the serving loop."""
+    if cfg.embed_inputs:
+        x = batch["embeds"]; B = x.shape[0]
+    else:
+        ids = batch["tokens"]; B = ids.shape[0]
+        x = nn.embedding_apply(params["embed"], ids)
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    pos = jnp.broadcast_to(state["idx"][0], (B, 1))
+    cos, sin = _rope_tables(cfg, batch, pos)
+    x, _, state = _run_stack(params, cfg, x, cos, sin, caches=state,
+                             impl=impl)
+    return _logits(params, cfg, x), state

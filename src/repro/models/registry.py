@@ -1,0 +1,73 @@
+"""Model registry: ArchConfig -> model module + ShapeDtypeStruct input specs.
+
+``input_specs`` follows the shannon/kernels dry-run pattern: weak-type-
+correct, shardable stand-ins for every model input, no device allocation.
+Decode-state specs come from ``jax.eval_shape`` over the model's own
+``init_decode_state`` so they always match the real pytree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ArchConfig, Shape
+from . import lm, rwkv_lm, hymba, encdec
+
+__all__ = ["get_model", "input_specs", "decode_state_specs", "decode_cache_len"]
+
+_FAMILY = {"dense": lm, "moe": lm, "vlm": lm, "ssm": rwkv_lm,
+           "hybrid": hymba, "encdec": encdec}
+
+
+def get_model(cfg: ArchConfig):
+    return _FAMILY[cfg.family]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def decode_cache_len(cfg: ArchConfig, shape: Shape) -> int:
+    """KV/cache length for decode shapes (whisper: decoder-side length)."""
+    if cfg.family == "encdec":
+        return max(shape.seq_len // encdec.DEC_FRAC, 8)
+    return shape.seq_len
+
+
+def input_specs(cfg: ArchConfig, shape: Shape, *, act_dtype=jnp.bfloat16
+                ) -> dict:
+    """Model-input ShapeDtypeStructs for (cfg, shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    if cfg.family == "encdec":
+        sd = max(S // encdec.DEC_FRAC, 8)
+        if kind == "train":
+            return {"embeds": _sds((B, S, cfg.d_model), act_dtype),
+                    "tokens": _sds((B, sd), jnp.int32),
+                    "labels": _sds((B, sd), jnp.int32)}
+        if kind == "prefill":
+            return {"embeds": _sds((B, S, cfg.d_model), act_dtype),
+                    "tokens": _sds((B, sd), jnp.int32)}
+        return {"tokens": _sds((B, 1), jnp.int32)}
+    if cfg.embed_inputs:                      # vlm stub frontend
+        if kind == "train":
+            return {"embeds": _sds((B, S, cfg.d_model), act_dtype),
+                    "labels": _sds((B, S), jnp.int32)}
+        if kind == "prefill":
+            return {"embeds": _sds((B, S, cfg.d_model), act_dtype)}
+        return {"embeds": _sds((B, 1, cfg.d_model), act_dtype)}
+    if kind in ("train",):
+        return {"tokens": _sds((B, S), jnp.int32),
+                "labels": _sds((B, S), jnp.int32)}
+    if kind == "prefill":
+        return {"tokens": _sds((B, S), jnp.int32)}
+    return {"tokens": _sds((B, 1), jnp.int32)}
+
+
+def decode_state_specs(cfg: ArchConfig, shape: Shape,
+                       cache_dtype=jnp.bfloat16):
+    model = get_model(cfg)
+    T = decode_cache_len(cfg, shape)
+    return jax.eval_shape(
+        lambda: model.init_decode_state(cfg, shape.global_batch, T,
+                                        cache_dtype))

@@ -1,0 +1,99 @@
+"""RWKV6 language model (attention-free; arXiv:2404.05892)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from ..nn import flags as _flags
+from ..nn.rwkv import (rwkv_block_init, rwkv_block_apply, rwkv_init_state)
+from ..distributed.sharding import logical_shard
+from ..nn.losses import vocab_parallel_ce, fused_linear_ce
+from ..configs import ArchConfig
+
+__all__ = ["init", "forward", "loss_fn", "init_decode_state", "prefill",
+           "decode_step"]
+
+
+def init(key: jax.Array, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    ke, kb, kh = jax.random.split(key, 3)
+    return {
+        "embed": nn.embedding_init(ke, cfg.vocab_padded, cfg.d_model,
+                                   dtype=dtype),
+        "blocks": nn.stack_init(
+            kb, cfg.n_layers,
+            lambda k: rwkv_block_init(k, cfg.d_model, n_heads=cfg.n_heads,
+                                      head_dim=cfg.hd, d_ff=cfg.d_ff,
+                                      dtype=dtype)),
+        "ln_f": nn.layernorm_init(cfg.d_model, dtype),
+        "head": nn.dense_init(kh, cfg.d_model, cfg.vocab_padded, bias=False,
+                              dtype=dtype),
+    }
+
+
+def _run(params, cfg: ArchConfig, x, *, states=None, impl="xla",
+         remat="none"):
+    def scan_body(x, scanned):
+        lp, st = scanned
+        x = logical_shard(x, "batch", None, None)
+        x, new_st = rwkv_block_apply(lp, x, n_heads=cfg.n_heads,
+                                     head_dim=cfg.hd, state=st, impl=impl)
+        return x, new_st
+    if remat == "full":
+        scan_body = jax.checkpoint(scan_body)
+    if _flags.unroll_enabled():
+        sl = lambda t, i: jax.tree.map(lambda a: a[i], t)
+        outs = []
+        L = jax.tree_util.tree_leaves(params["blocks"])[0].shape[0]
+        for i in range(L):
+            x, st_i = scan_body(x, (sl(params["blocks"], i),
+                                    sl(states, i) if states is not None else None))
+            outs.append(st_i)
+        new_states = (jax.tree.map(lambda *a: jnp.stack(a), *outs)
+                      if states is not None else None)
+        return x, new_states
+    x, new_states = jax.lax.scan(scan_body, x, (params["blocks"], states))
+    return x, new_states
+
+
+def forward(params, cfg: ArchConfig, batch: dict, *, impl="xla",
+            remat="none"):
+    x = nn.embedding_apply(params["embed"], batch["tokens"])
+    x, _ = _run(params, cfg, x, impl=impl, remat=remat)
+    x = nn.layernorm_apply(params["ln_f"], x)
+    logits = logical_shard(nn.dense_apply(params["head"], x),
+                           "batch", None, "model")
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, *, impl="xla",
+            remat="none", aux_weight: float = 0.0):
+    x = nn.embedding_apply(params["embed"], batch["tokens"])
+    x, _ = _run(params, cfg, x, impl=impl, remat=remat)
+    x = nn.layernorm_apply(params["ln_f"], x)
+    return fused_linear_ce(x, params["head"]["w"], batch["labels"])
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """O(1) recurrent state per layer (max_len unused — that's the point)."""
+    L = cfg.n_layers
+    st = rwkv_init_state(batch, cfg.n_heads, cfg.hd, cfg.d_model, dtype)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape), st)
+
+
+def prefill(params, cfg: ArchConfig, batch: dict, max_len: int, *,
+            impl="xla", cache_dtype=jnp.bfloat16):
+    B = batch["tokens"].shape[0]
+    states = init_decode_state(cfg, B, max_len, cache_dtype)
+    x = nn.embedding_apply(params["embed"], batch["tokens"])
+    x, states = _run(params, cfg, x, states=states, impl=impl)
+    x = nn.layernorm_apply(params["ln_f"], x[:, -1:])
+    return nn.dense_apply(params["head"], x), states
+
+
+def decode_step(params, cfg: ArchConfig, state, batch: dict, *, impl="xla"):
+    x = nn.embedding_apply(params["embed"], batch["tokens"])
+    x, state = _run(params, cfg, x, states=state)
+    x = nn.layernorm_apply(params["ln_f"], x)
+    return nn.dense_apply(params["head"], x), state

@@ -1,0 +1,24 @@
+"""Minimal pure-JAX neural substrate (flax/haiku are unavailable offline).
+
+Convention: every module is an ``<name>_init(key, ...) -> params`` /
+``<name>_apply(params, x, ...) -> y`` pair of pure functions; params are
+plain dict pytrees so they shard, scan, checkpoint and donate like any
+pytree.  Layer stacks for the big models are ``jax.lax.scan`` over params
+stacked on a leading axis (MaxText-style), which keeps HLO size and compile
+time independent of depth.
+"""
+from .linear import dense_init, dense_apply, embedding_init, embedding_apply
+from .norms import layernorm_init, layernorm_apply, rmsnorm_init, rmsnorm_apply
+from .rope import rope_freqs, apply_rope, mrope_freqs
+from . import attention
+from .attention import mha_init, mha_apply
+from .transformer import (block_init, block_apply, stack_init, stack_apply,
+                          mlp_init, mlp_apply)
+
+__all__ = [
+    "dense_init", "dense_apply", "embedding_init", "embedding_apply",
+    "layernorm_init", "layernorm_apply", "rmsnorm_init", "rmsnorm_apply",
+    "rope_freqs", "apply_rope", "mrope_freqs", "attention",
+    "mha_init", "mha_apply", "block_init", "block_apply",
+    "stack_init", "stack_apply", "mlp_init", "mlp_apply",
+]

@@ -1,0 +1,195 @@
+"""Multi-head attention with GQA, qk-norm, sliding windows, KV cache.
+
+One implementation serves every assigned architecture:
+ - GQA via ``kv_heads < n_heads`` (grouped einsum, no materialized repeat);
+ - per-layer sliding windows as a *traced* scalar (``window <= 0`` = full
+   attention), so heterogeneous stacks (gemma3's 5:1 local:global) run as a
+   single ``lax.scan`` body;
+ - optional qk-norm (qwen3), QKV bias (qwen1.5), cross-attention (whisper);
+ - decode path with a donated KV cache (``cache["idx"]`` write position);
+ - ``impl`` selects the math backend: "xla" (dry-run / CPU default) or
+   "pallas" (TPU flash kernels, validated in interpret mode — DESIGN §7).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import flags
+from .linear import dense_init, dense_apply
+from .norms import rmsnorm_init, rmsnorm_apply
+from .rope import apply_rope
+
+__all__ = ["mha_init", "mha_apply", "attend", "init_kv_cache"]
+
+NEG_INF = -1e30
+
+
+def mha_init(key: jax.Array, d_model: int, *, n_heads: int,
+             kv_heads: int | None = None, head_dim: int | None = None,
+             qkv_bias: bool = False, out_bias: bool = False,
+             qk_norm: bool = False, dtype=jnp.float32) -> dict:
+    kv_heads = kv_heads or n_heads
+    head_dim = head_dim or d_model // n_heads
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "q": dense_init(kq, d_model, n_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "k": dense_init(kk, d_model, kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "v": dense_init(kv, d_model, kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "o": dense_init(ko, n_heads * head_dim, d_model, bias=out_bias, dtype=dtype),
+    }
+    if qk_norm:
+        p["qn"] = rmsnorm_init(head_dim, dtype)
+        p["kn"] = rmsnorm_init(head_dim, dtype)
+    return p
+
+
+def init_kv_cache(batch: int, max_len: int, kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> dict:
+    return {"k": jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+            "v": jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+            "idx": jnp.zeros((), jnp.int32)}
+
+
+def _grouped_scores(q, k):
+    """q [B,S,Hq,hd], k [B,T,Hkv,hd] -> scores [B,Hkv,G,S,T] (f32)."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, hd)
+    return jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                      k.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+
+
+def _grouped_out(probs, v):
+    """probs [B,Hkv,G,S,T], v [B,T,Hkv,hd] -> [B,S,Hq*hd]."""
+    B, Hkv, G, S, T = probs.shape
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, Hkv * G * v.shape[-1])
+
+
+def _attend_dense(q, k, v, *, causal, window, q_offset, kv_len):
+    S, T = q.shape[1], k.shape[1]
+    i = jnp.arange(S)[:, None] + q_offset
+    j = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= j <= i
+    w = jnp.asarray(window)
+    ok &= (w <= 0) | ((i - j) < w)
+    if kv_len is not None:
+        ok &= j < kv_len
+    scores = _grouped_scores(q, k)
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _grouped_out(probs, v).astype(q.dtype)
+
+
+def _attend_chunked(q, k, v, *, causal, window, q_offset, kv_len,
+                    q_chunk: int = 512):
+    """Flash-style chunked attention in pure XLA: scan over query blocks
+    with online-softmax accumulation, so the S x T score matrix is never
+    materialized (peak temp ~ q_chunk x T per (kv-head, group)).  This is
+    the memory-sane fallback the dry-run lowers when the Pallas kernel is
+    not selected; each chunk is rematerialized in the backward pass."""
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    nc = -(-S // q_chunk)
+    pad = nc * q_chunk - S
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qc = qp.reshape(B, nc, q_chunk, Hq, hd).transpose(1, 0, 2, 3, 4)
+    j = jnp.arange(T)[None, :]
+    w = jnp.asarray(window)
+
+    def chunk(ci, qi):
+        i = ci * q_chunk + jnp.arange(q_chunk)[:, None] + q_offset
+        ok = jnp.ones((q_chunk, T), bool)
+        if causal:
+            ok &= j <= i
+        ok &= (w <= 0) | ((i - j) < w)
+        if kv_len is not None:
+            ok &= j < kv_len
+        s = _grouped_scores(qi, k)                       # [B,Hkv,G,qc,T]
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+        m = s.max(-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = p.sum(-1, keepdims=True)
+        o = jnp.einsum("bkgst,btkh->bskgh", p / jnp.maximum(l, 1e-30),
+                       v.astype(jnp.float32))
+        return o.reshape(B, q_chunk, Hq * hd)
+
+    chunk = jax.checkpoint(chunk)
+    if flags.unroll_enabled():
+        # cost-measurement lowering: python loop so XLA counts every chunk
+        outs = [chunk(jnp.asarray(ci), qc[ci]) for ci in range(nc)]
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        # deployable lowering: sequential map keeps one chunk live at a time
+        outs = jax.lax.map(lambda args: chunk(*args), (jnp.arange(nc), qc))
+        out = outs.transpose(1, 0, 2, 3).reshape(B, nc * q_chunk, Hq * hd)
+    return out[:, :S].astype(q.dtype)
+
+
+def attend(q, k, v, *, causal: bool = True, window=-1,
+           q_offset=0, kv_len=None, impl: str = "xla",
+           q_chunk: int = 512) -> jax.Array:
+    """Core attention math. ``window``/``q_offset``/``kv_len`` may be traced.
+
+    q position i (global ``i + q_offset``) may see kv position j iff
+      j <= i+q_offset              (if causal)
+      i+q_offset - j < window      (if window > 0)
+      j < kv_len                   (if kv_len given; masks unwritten cache)
+    """
+    if impl == "pallas":
+        from ..kernels.flash_attention import flash_attention as _fa
+        return _fa(q, k, v, causal=causal, window=window)
+    if q.shape[1] > q_chunk:
+        return _attend_chunked(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, kv_len=kv_len,
+                               q_chunk=q_chunk)
+    return _attend_dense(q, k, v, causal=causal, window=window,
+                         q_offset=q_offset, kv_len=kv_len)
+
+
+def mha_apply(p: dict, x: jax.Array, *, cos=None, sin=None,
+              causal: bool = True, window=-1, xkv: jax.Array | None = None,
+              cache: dict | None = None, impl: str = "xla",
+              n_heads: int, kv_heads: int, head_dim: int):
+    """Returns (out, new_cache). ``xkv`` switches to cross-attention (no
+    rope/cache-append on q side; kv from encoder memory). With ``cache``,
+    ``x`` is the current step's tokens (decode: S == 1)."""
+    B, S, _ = x.shape
+    q = dense_apply(p["q"], x).reshape(B, S, n_heads, head_dim)
+    src = xkv if xkv is not None else x
+    Tkv = src.shape[1]
+    k = dense_apply(p["k"], src).reshape(B, Tkv, kv_heads, head_dim)
+    v = dense_apply(p["v"], src).reshape(B, Tkv, kv_heads, head_dim)
+    if "qn" in p:
+        q = rmsnorm_apply(p["qn"], q)
+        k = rmsnorm_apply(p["kn"], k)
+    if cos is not None and xkv is None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = cache
+    q_offset = 0
+    kv_len = None
+    if cache is not None and xkv is None:
+        idx = cache["idx"]
+        ck = jax.lax.dynamic_update_slice(cache["k"],
+                                          k.astype(cache["k"].dtype),
+                                          (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"],
+                                          v.astype(cache["v"].dtype),
+                                          (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv, "idx": idx + S}
+        k, v = ck, cv
+        q_offset = idx
+        kv_len = idx + S
+
+    out = attend(q, k, v, causal=causal and xkv is None, window=window,
+                 q_offset=q_offset, kv_len=kv_len, impl=impl)
+    return dense_apply(p["o"], out), new_cache

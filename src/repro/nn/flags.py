@@ -1,0 +1,32 @@
+"""Global lowering-mode flags.
+
+``force_unroll()``: context manager that makes every structured loop
+(layer-stack scan, attention query-chunk map, CE chunk scan, WKV chunk
+scan) lower as a python-unrolled chain instead of ``lax.scan``/``lax.map``.
+
+Why: XLA's ``cost_analysis()`` counts a while-loop body ONCE regardless of
+trip count, so flop/byte/collective numbers from the memory-optimal scanned
+lowering are ~L x undercounted.  The dry-run compiles tiny L=1/L=2 unrolled
+variants under this flag purely for cost measurement; the deployable
+artifact keeps the scanned (memory-optimal) form.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_UNROLL = False
+
+
+def unroll_enabled() -> bool:
+    return _UNROLL
+
+
+@contextlib.contextmanager
+def force_unroll(enabled: bool = True):
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = enabled
+    try:
+        yield
+    finally:
+        _UNROLL = prev

@@ -1,0 +1,35 @@
+"""Dense / embedding primitives."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["dense_init", "dense_apply", "embedding_init", "embedding_apply"]
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, *, bias: bool = True,
+               dtype=jnp.float32, scale: float | None = None) -> dict:
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+               * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embedding_init(key: jax.Array, vocab: int, d: int, *,
+                   dtype=jnp.float32, scale: float = 0.02) -> dict:
+    return {"emb": (jax.random.normal(key, (vocab, d), jnp.float32)
+                    * scale).astype(dtype)}
+
+
+def embedding_apply(p: dict, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["emb"], ids, axis=0)

@@ -1,0 +1,78 @@
+"""Vocab-parallel cross-entropy (Megatron-style).
+
+With TP-sharded logits [batch, seq, vocab/'model'], a naive
+``log_softmax + take_along_axis`` makes GSPMD re-replicate the full logits
+(we measured a 64 GiB all-reduce + all-gather pair per step on gemma3).
+This formulation keeps every elementwise op shard-local; the only cross-
+shard traffic is two [batch, seq] f32 all-reduces (max and sum-exp) plus
+one for the label term — O(tokens), not O(tokens x vocab).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import logical_shard
+from .flags import unroll_enabled
+
+__all__ = ["vocab_parallel_ce"]
+
+
+def vocab_parallel_ce(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE. logits [B,S,V] (V possibly TP-sharded),
+    labels [B,S] int32."""
+    lf = logical_shard(logits.astype(jnp.float32), "batch", None, "model")
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    onehot = logical_shard(
+        jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32),
+        "batch", None, "model")
+    ll = jnp.sum(lf * onehot, axis=-1)
+    return jnp.mean(lse - ll)
+
+
+def fused_linear_ce(x: jax.Array, w: jax.Array, labels: jax.Array, *,
+                    chunk: int = 512) -> jax.Array:
+    """Chunked fused-projection CE: never materializes [B,S,V] logits.
+
+    ``x`` [B,S,d] final hidden states, ``w`` [d,V] head weights (pass
+    ``emb.T`` for tied embeddings), ``labels`` [B,S].  The sequence is
+    scanned in ``chunk``-sized pieces; each piece projects, computes the
+    vocab-parallel CE sum, and is rematerialized in the backward pass —
+    peak temp drops from O(S*V) to O(chunk*V) per device.
+    """
+    B, S, d = x.shape
+    if S <= chunk:
+        return vocab_parallel_ce(
+            (x @ w).astype(jnp.float32), labels)
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xc = x.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def piece(xi, li):
+        logits = logical_shard((xi @ w).astype(jnp.float32),
+                               "batch", None, "model")
+        m = jax.lax.stop_gradient(jnp.max(logits, -1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), -1)) + m[..., 0]
+        onehot = logical_shard(
+            jax.nn.one_hot(li, logits.shape[-1], dtype=jnp.float32),
+            "batch", None, "model")
+        ll = jnp.sum(logits * onehot, -1)
+        valid = (li >= 0).astype(jnp.float32)
+        return jnp.sum((lse - ll) * valid)
+
+    if unroll_enabled():
+        tot = jnp.zeros((), jnp.float32)
+        for ci in range(nc):
+            tot = tot + piece(xc[ci], lc[ci])
+    else:
+        def scan_body(t, args):
+            return t + piece(*args), None
+        tot, _ = jax.lax.scan(scan_body, jnp.zeros((), jnp.float32),
+                              (xc, lc))
+    return tot / (B * S)

@@ -1,0 +1,101 @@
+"""Top-k token-choice MoE with capacity (GShard/Switch semantics).
+
+Dispatch is sort-based (argsort by expert id + per-expert position via
+searchsorted) rather than one-hot-matmul: no [tokens, E, C] tensor is ever
+materialized, so the layer scales to 128 experts at 1M tokens.  Tokens over
+an expert's capacity are dropped (standard capacity semantics); the router
+adds the Switch load-balancing auxiliary loss.
+
+Expert weights are stacked [E, ...] so expert-parallelism is a single
+PartitionSpec on the leading axis; under pjit the token->expert resharding
+becomes the all-to-all GSPMD inserts at the dispatch/combine gathers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .linear import dense_init
+from ..distributed.sharding import logical_shard
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key: jax.Array, d: int, d_ff: int, n_experts: int, *,
+             dtype=jnp.float32) -> dict:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    import numpy as np
+    sc = 1.0 / np.sqrt(d)
+    scf = 1.0 / np.sqrt(d_ff)
+    return {
+        "router": dense_init(kr, d, n_experts, bias=False, dtype=jnp.float32),
+        "gate": (jax.random.normal(kg, (n_experts, d, d_ff), jnp.float32)
+                 * sc).astype(dtype),
+        "up": (jax.random.normal(ku, (n_experts, d, d_ff), jnp.float32)
+               * sc).astype(dtype),
+        "down": (jax.random.normal(kd, (n_experts, d_ff, d), jnp.float32)
+                 * scf).astype(dtype),
+    }
+
+
+def moe_apply(p: dict, x: jax.Array, *, top_k: int,
+              capacity_factor: float = 1.25) -> tuple[jax.Array, jax.Array]:
+    """x [B,S,d] -> (out [B,S,d], aux_loss scalar).
+
+    GShard-style GROUPED dispatch (§Perf iteration 2): each batch element
+    is an independent dispatch group with per-group capacity, so the sort/
+    position computation is local to the group.  Under pjit with batch
+    sharded over (pod, data), every sort is shard-local — the only
+    cross-device traffic left is the token->expert exchange itself, which
+    GSPMD lowers as the canonical MoE all-to-all.  (The previous global-
+    argsort formulation made XLA emit a distributed sort over B*S*k
+    elements per layer: the 1.8e6 ms collective term on qwen3-moe.)
+    """
+    B, S, d = x.shape
+    E = p["gate"].shape[0]
+
+    logits = (x.astype(jnp.float32) @ p["router"]["w"])         # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, top_k)                        # [B,S,k]
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * sum_e (frac tokens to e) * (mean router prob e)
+    me = probs.mean((0, 1))
+    ce = jnp.zeros(E, jnp.float32).at[idx.reshape(-1)].add(
+        jnp.ones(B * S * top_k, jnp.float32)) / (B * S * top_k)
+    aux = E * jnp.sum(me * ce)
+
+    SK = S * top_k
+    C = max(1, int(SK / E * capacity_factor))   # per-group capacity
+
+    def dispatch_one(xg, idx_g, w_g):
+        """One group (= one sequence): xg [S,d], idx/w [S,k]."""
+        flat_e = idx_g.reshape(SK)
+        flat_w = w_g.reshape(SK).astype(xg.dtype)
+        src = jnp.repeat(jnp.arange(S), top_k)
+        order = jnp.argsort(flat_e, stable=True)
+        se, ssrc, sw = flat_e[order], src[order], flat_w[order]
+        seg_start = jnp.searchsorted(se, jnp.arange(E))
+        pos = jnp.arange(SK) - seg_start[se]
+        keep = pos < C
+        slot = se * C + jnp.minimum(pos, C - 1)
+        vals = xg[ssrc] * keep[:, None].astype(xg.dtype)
+        xe = jnp.zeros((E * C, d), xg.dtype).at[slot].add(vals)
+        return xe.reshape(E, C, d), (slot, ssrc, sw, keep)
+
+    xe, meta = jax.vmap(dispatch_one)(x, idx, w)    # xe [B,E,C,d]
+    xe = logical_shard(xe, "batch", "model", None, None)   # DP x EP
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["gate"])) \
+        * jnp.einsum("becd,edf->becf", xe, p["up"])
+    ye = jnp.einsum("becf,efd->becd", h, p["down"])
+    ye = logical_shard(ye, "batch", "model", None, None)
+
+    def combine_one(ye_g, m):
+        slot, ssrc, sw, keep = m
+        contrib = ye_g.reshape(E * C, d)[slot] \
+            * (sw * keep.astype(ye_g.dtype))[:, None]
+        return jnp.zeros((S, d), ye_g.dtype).at[ssrc].add(contrib)
+
+    out = jax.vmap(combine_one)(ye, meta)
+    return out, aux

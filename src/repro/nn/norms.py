@@ -1,0 +1,30 @@
+"""LayerNorm / RMSNorm (always computed in f32, cast back)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["layernorm_init", "layernorm_apply", "rmsnorm_init", "rmsnorm_apply"]
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = jnp.square(xf - mu).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32)
+            + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.square(xf).mean(-1, keepdims=True) + eps)
+    return (y * p["g"].astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,50 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE (arXiv:2409.12191) splits the head dim into three sections rotated
+by (temporal, height, width) position ids; for the text backbone all three
+ids coincide, which is what the stubbed-frontend configs use.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["rope_freqs", "apply_rope", "mrope_freqs"]
+
+
+def rope_freqs(positions: jax.Array, head_dim: int,
+               theta: float = 10000.0) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables of shape [..., seq, head_dim/2] (f32)."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_freqs(pos_thw: jax.Array, head_dim: int, sections: tuple[int, int, int],
+                theta: float = 10000.0) -> tuple[jax.Array, jax.Array]:
+    """M-RoPE cos/sin. ``pos_thw``: [3, ...seq] (temporal/height/width ids);
+    ``sections``: half-dim split (sums to head_dim//2)."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos_thw.astype(jnp.float32)[..., None] * inv  # [3, ..., half]
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang, 0, -2),                      # [..., 3, half]
+        sec_id[(None,) * (ang.ndim - 2) + (None, slice(None))], axis=-2
+    )[..., 0, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate ``x`` [..., seq, heads, head_dim] by tables [..., seq, hd/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s],
+                           axis=-1).astype(x.dtype)

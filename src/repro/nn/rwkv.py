@@ -1,0 +1,211 @@
+"""RWKV6 "Finch" block (arXiv:2404.05892): data-dependent decay WKV.
+
+Time-mix recurrence per head (head_dim n):
+    y_t = r_t @ (diag(u) k_t^T v_t + S_t)
+    S_{t+1} = diag(w_t) S_t + k_t^T v_t
+with per-channel decay w_t = exp(-exp(w0 + lora_w(x_t)))  (data-dependent),
+token-shift interpolation on every projection input, per-head GroupNorm and
+SiLU(g) output gating.  Channel-mix is the squared-ReLU RWKV FFN.
+
+The training path scans time in jnp (``wkv_scan``); the TPU hot path is the
+chunked Pallas kernel ``kernels/rwkv6_scan`` validated against this oracle.
+Decode carries O(1) state: (S [B,H,n,n], last token for the shifts).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import flags as _flags
+from .linear import dense_apply, dense_init
+from .norms import layernorm_init, layernorm_apply, rmsnorm_init
+
+__all__ = ["rwkv_block_init", "rwkv_block_apply", "rwkv_decode_step",
+           "rwkv_init_state", "wkv_scan"]
+
+_MIX = ("r", "k", "v", "w", "g")
+
+
+def rwkv_block_init(key: jax.Array, d: int, *, n_heads: int, head_dim: int,
+                    d_ff: int, lora_rank: int = 32, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 16)
+    H, n = n_heads, head_dim
+    assert H * n == d, (H, n, d)
+    p = {
+        "ln1": layernorm_init(d, dtype), "ln2": layernorm_init(d, dtype),
+        # token-shift mix coefficients per projection
+        "mu": {m: jnp.full((d,), 0.5, dtype) for m in _MIX},
+        "r": dense_init(ks[0], d, d, bias=False, dtype=dtype),
+        "k": dense_init(ks[1], d, d, bias=False, dtype=dtype),
+        "v": dense_init(ks[2], d, d, bias=False, dtype=dtype),
+        "g": dense_init(ks[3], d, d, bias=False, dtype=dtype),
+        "o": dense_init(ks[4], d, d, bias=False, dtype=dtype),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x W1) W2))
+        "w0": jnp.zeros((d,), jnp.float32) - 6.0,   # decays near 1 (RWKV init); also keeps the chunked scan numerically stable
+        "w1": dense_init(ks[5], d, lora_rank, bias=False, dtype=dtype),
+        "w2": dense_init(ks[6], lora_rank, d, bias=False, dtype=dtype),
+        "u": jnp.zeros((H, n), jnp.float32),          # bonus for current token
+        "gn": layernorm_init(n, dtype),               # per-head group norm
+        # channel mix
+        "mu_c": {m: jnp.full((d,), 0.5, dtype) for m in ("k", "r")},
+        "ck": dense_init(ks[7], d, d_ff, bias=False, dtype=dtype),
+        "cv": dense_init(ks[8], d_ff, d, bias=False, dtype=dtype),
+        "cr": dense_init(ks[9], d, d, bias=False, dtype=dtype),
+    }
+    return p
+
+
+def _shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """Token shift: x_{t-1} (zeros or carried ``last`` at t=0)."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def wkv_scan(r, k, v, w, u, s0):
+    """WKV6 recurrence. r,k,v,w: [B,T,H,n]; u: [H,n]; s0: [B,H,n,n].
+    Returns (y [B,T,H,n], sT)."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp                      # [B,H,n]
+        kv = kt[..., :, None] * vt[..., None, :]  # [B,H,n,n]
+        y = jnp.einsum("bhi,bhij->bhj", rt, u[..., None] * kv + s)
+        s = wt[..., None] * s + kv
+        return s, y
+    rs, ks_, vs, ws = (jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+                       for t in (r, k, v, w))
+    sT, ys = jax.lax.scan(step, s0.astype(jnp.float32), (rs, ks_, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), sT
+
+
+def wkv_chunked(r, k, v, w, u, s0, *, chunk: int = 32):
+    """Chunk-parallel WKV6 (GLA-style, arXiv:2312.06635 §4).
+
+    Within a chunk of length C, with per-channel decays w_t and cumulative
+    products cum_t = prod_{i<=t} w_i:
+        r~_t = r_t * cum_{t-1},   k~_s = k_s / cum_s
+        y_t  = r~_t @ S_0 + sum_{s<t} (r~_t . k~_s) v_s + (r_t.u.k_t) v_t
+        S_C  = cum_C * S_0 + sum_s (cum_C / cum_s) k_s^T v_s
+    turning T sequential steps into T/C chunk matmuls — the math the Pallas
+    kernel ``kernels/rwkv6_scan`` implements on TPU, exposed here in jnp so
+    the model's training path is matmul-bound (and XLA-countable) too.
+    Chunks run in a python loop (static count); f32 throughout.
+    """
+    B, T, H, n = r.shape
+    if _flags.unroll_enabled():
+        # cost-measurement lowering: a handful of large chunks keeps the
+        # unrolled HLO small; intra-chunk wkv flops are <1% of block flops
+        # so the chunk-size dependence of the count is negligible, and the
+        # variant is never executed (numerics don't matter).
+        chunk = max(chunk, -(-T // 8))
+    nc = -(-T // chunk)
+    pad = nc * chunk - T
+    def pf(x, val=0.0):
+        return jnp.pad(x.astype(jnp.float32),
+                       ((0, 0), (0, pad), (0, 0), (0, 0)),
+                       constant_values=val)
+    rp, kp, vp = pf(r), pf(k), pf(v)
+    wp = pf(w, 1.0)            # pad decay with 1 (identity)
+    s = s0.astype(jnp.float32)
+    causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+    uf = u.astype(jnp.float32)
+
+    def one_chunk(s, blk):
+        rc, kc, vc, wc = blk
+        lw = jnp.log(jnp.maximum(wc, 1e-30))
+        cum = jnp.exp(jnp.cumsum(lw, axis=1))           # [B,C,H,n]
+        cum_prev = cum / wc                              # cum_{t-1}
+        rt = rc * cum_prev
+        kt = kc / jnp.maximum(cum, 1e-30)
+        inter = jnp.einsum("bchn,bhnm->bchm", rt, s)
+        scores = jnp.einsum("bchn,bdhn->bhcd", rt, kt) * causal[None, None]
+        diag = jnp.einsum("bchn,hn,bchn->bch", rc, uf, kc)
+        intra = jnp.einsum("bhcd,bdhm->bchm", scores, vc) \
+            + diag[..., None] * vc
+        cend = cum[:, -1]                                # [B,H,n]
+        s = cend[..., None] * s \
+            + jnp.einsum("bchn,bchm->bhnm",
+                         (cend[:, None] / jnp.maximum(cum, 1e-30)) * kc, vc)
+        return s, inter + intra
+
+    blocks = tuple(t.reshape(t.shape[0], nc, chunk, *t.shape[2:]
+                             ).transpose(1, 0, 2, 3, 4)
+                   for t in (rp, kp, vp, wp))
+    if _flags.unroll_enabled():
+        ys = []
+        for ci in range(nc):
+            s, yi = one_chunk(s, tuple(b[ci] for b in blocks))
+            ys.append(yi)
+        y = jnp.concatenate(ys, axis=1)[:, :T]
+        return y, s
+    s, ys = jax.lax.scan(one_chunk, s, blocks)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(rp.shape[0], nc * chunk,
+                                            rp.shape[2], rp.shape[3])[:, :T]
+    return y, s
+
+
+def rwkv_init_state(batch: int, n_heads: int, head_dim: int, d: int,
+                    dtype=jnp.float32) -> dict:
+    return {"s": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+            "x_tm": jnp.zeros((batch, d), dtype),
+            "xc_tm": jnp.zeros((batch, d), dtype)}
+
+
+def _time_mix(p, xn, x_prev, *, n_heads, head_dim, state_s, impl="xla"):
+    """Shared by train (seq) and decode (T=1). xn: [B,T,d] normed input;
+    x_prev: [B,T,d] shifted sequence. Returns (out, new_state_s)."""
+    B, T, d = xn.shape
+    H, n = n_heads, head_dim
+    proj = {m: _mix(xn, x_prev, p["mu"][m]) for m in _MIX}
+    r = dense_apply(p["r"], proj["r"]).reshape(B, T, H, n)
+    k = dense_apply(p["k"], proj["k"]).reshape(B, T, H, n)
+    v = dense_apply(p["v"], proj["v"]).reshape(B, T, H, n)
+    g = dense_apply(p["g"], proj["g"])
+    lora = dense_apply(p["w2"], jnp.tanh(dense_apply(p["w1"], proj["w"])))
+    w = jnp.exp(-jnp.exp(p["w0"] + lora.astype(jnp.float32)))
+    w = w.reshape(B, T, H, n)
+    if impl == "pallas" and T > 1:
+        from ..kernels import rwkv6_scan as rk
+        y, sT = rk.wkv6(r, k, v, w, p["u"], state_s)
+    elif T > 1:
+        y, sT = wkv_chunked(r, k, v, w, p["u"], state_s)
+    else:
+        y, sT = wkv_scan(r, k, v, w, p["u"], state_s)
+    yn = layernorm_apply(p["gn"], y.astype(xn.dtype))          # [B,T,H,n]
+    out = dense_apply(p["o"], (yn.reshape(B, T, d)
+                               * jax.nn.silu(g)))
+    return out, sT
+
+
+def rwkv_block_apply(p: dict, x: jax.Array, *, n_heads: int, head_dim: int,
+                     state: dict | None = None, impl: str = "xla"):
+    """Full block (time-mix + channel-mix). x [B,T,d].
+    With ``state`` (decode, T==1) the shifts come from carried tokens."""
+    B, T, d = x.shape
+    s0 = state["s"] if state is not None else \
+        jnp.zeros((B, n_heads, head_dim, head_dim), jnp.float32)
+
+    xn = layernorm_apply(p["ln1"], x)
+    xs = _shift(xn, state["x_tm"] if state is not None else None)
+    att, sT = _time_mix(p, xn, xs, n_heads=n_heads, head_dim=head_dim,
+                        state_s=s0, impl=impl)
+    x = x + att
+
+    xc = layernorm_apply(p["ln2"], x)
+    xcs = _shift(xc, state["xc_tm"] if state is not None else None)
+    kx = _mix(xc, xcs, p["mu_c"]["k"])
+    rx = _mix(xc, xcs, p["mu_c"]["r"])
+    kk = jnp.square(jax.nn.relu(dense_apply(p["ck"], kx)))
+    x = x + jax.nn.sigmoid(dense_apply(p["cr"], rx)) * dense_apply(p["cv"], kk)
+
+    new_state = None
+    if state is not None:
+        new_state = {"s": sT, "x_tm": xn[:, -1], "xc_tm": xc[:, -1]}
+    return x, new_state
+
+
+def rwkv_decode_step(p, x, state, *, n_heads, head_dim):
+    return rwkv_block_apply(p, x, n_heads=n_heads, head_dim=head_dim,
+                            state=state)

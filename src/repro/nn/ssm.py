@@ -1,0 +1,81 @@
+"""Mamba-style selective SSM head for the hymba hybrid block (arXiv:2411.13676).
+
+Diagonal selective state-space:
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t      h: [d_inner, N]
+    y_t = (h_t @ C_t) + D * x_t
+with input-dependent (dt, B, C), causal depthwise conv front, SiLU gates.
+Decode carries (h, conv window) — O(1) per token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .linear import dense_apply, dense_init
+
+__all__ = ["ssm_init", "ssm_apply", "ssm_init_state"]
+
+
+def ssm_init(key: jax.Array, d: int, *, state: int = 16, conv: int = 4,
+             dt_rank: int | None = None, dtype=jnp.float32) -> dict:
+    dt_rank = dt_rank or max(1, d // 16)
+    ks = jax.random.split(key, 6)
+    import numpy as np
+    return {
+        "conv": (jax.random.normal(ks[0], (conv, d), jnp.float32)
+                 / np.sqrt(conv)).astype(dtype),
+        "wbc": dense_init(ks[1], d, 2 * state, bias=False, dtype=dtype),
+        "wdt1": dense_init(ks[2], d, dt_rank, bias=False, dtype=dtype),
+        "wdt2": dense_init(ks[3], dt_rank, d, bias=True, dtype=dtype),
+        "A_log": jnp.log(jnp.arange(1, state + 1, dtype=jnp.float32)
+                         )[None, :].repeat(d, 0),       # [d, N]
+        "D": jnp.ones((d,), jnp.float32),
+    }
+
+
+def ssm_init_state(batch: int, d: int, state: int, conv: int,
+                   dtype=jnp.float32) -> dict:
+    return {"h": jnp.zeros((batch, d, state), jnp.float32),
+            "cwin": jnp.zeros((batch, conv - 1, d), dtype)}
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array,
+                 cwin: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x [B,T,d], kernel [K,d]."""
+    K = kernel.shape[0]
+    pad = (jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+           if cwin is None else cwin)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * kernel[i] for i in range(K))
+    return y, xp[:, -(K - 1):] if K > 1 else pad
+
+
+def ssm_apply(p: dict, x: jax.Array, *, state: dict | None = None):
+    """x [B,T,d] -> (y [B,T,d], new_state)."""
+    B, T, d = x.shape
+    N = p["A_log"].shape[1]
+    xc, cwin = _causal_conv(x, p["conv"],
+                            state["cwin"] if state is not None else None)
+    xc = jax.nn.silu(xc)
+    bc = dense_apply(p["wbc"], xc).astype(jnp.float32)
+    Bt, Ct = bc[..., :N], bc[..., N:]
+    dt = jax.nn.softplus(dense_apply(
+        p["wdt2"], dense_apply(p["wdt1"], xc)).astype(jnp.float32))  # [B,T,d]
+    A = -jnp.exp(p["A_log"])                                          # [d,N]
+    decay = jnp.exp(dt[..., None] * A)                                # [B,T,d,N]
+    inp = (dt * xc.astype(jnp.float32))[..., None] * Bt[..., None, :]
+
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((B, d, N), jnp.float32))
+
+    def step(h, z):
+        dec, u, c = z
+        h = dec * h + u
+        y = jnp.einsum("bdn,bn->bd", h, c)
+        return h, y
+    hT, ys = jax.lax.scan(step, h0,
+                          (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(inp, 1, 0),
+                           jnp.moveaxis(Ct, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype) + xc * p["D"].astype(x.dtype)
+    new_state = {"h": hT, "cwin": cwin} if state is not None else None
+    return y, new_state

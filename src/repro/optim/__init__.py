@@ -1,0 +1,6 @@
+from .adamw import adamw, sgd, apply_updates, global_norm, clip_by_global_norm
+from .schedule import cosine_with_warmup, constant, linear_warmup
+
+__all__ = ["adamw", "sgd", "apply_updates", "global_norm",
+           "clip_by_global_norm", "cosine_with_warmup", "constant",
+           "linear_warmup"]

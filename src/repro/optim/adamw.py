@@ -1,0 +1,109 @@
+"""Minimal optax-style optimizers (optax is unavailable offline).
+
+An optimizer is a pair of pure functions:
+  init(params)                        -> opt_state
+  update(grads, opt_state, params)    -> (updates, opt_state)
+Updates are applied with ``apply_updates`` (params + updates).  All state is
+a pytree of arrays, so the whole thing shards/checkpoints like any pytree.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["GradientTransformation", "adamw", "sgd", "apply_updates",
+           "global_norm", "clip_by_global_norm"]
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: object
+    nu: object
+
+
+def adamw(lr: float | Callable = 1e-3, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          max_grad_norm: float | None = None) -> GradientTransformation:
+    """AdamW with optional global-norm clipping.
+
+    ``lr`` may be a float or a ``step -> lr`` schedule.  Moments are kept in
+    f32 regardless of param dtype (mixed-precision-safe).
+    """
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(zeros, params),
+                          jax.tree.map(zeros, params))
+
+    def update(grads, state: AdamWState, params):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, g32)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+
+        def upd(m, v, p):
+            u = -(lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps))
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamWState(step, mu, nu)
+
+    return GradientTransformation(init, update)
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    mom: object
+
+
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.9,
+        max_grad_norm: float | None = None) -> GradientTransformation:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return SGDState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                     params))
+
+    def update(grads, state: SGDState, params):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        mom = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                           state.mom, grads)
+        updates = jax.tree.map(lambda m: -lr_fn(step) * m, mom)
+        return updates, SGDState(step, mom)
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,3 @@
+from .fault_tolerance import TrainLoop, StragglerMonitor
+
+__all__ = ["TrainLoop", "StragglerMonitor"]

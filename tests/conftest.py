@@ -1,0 +1,6 @@
+import os
+import sys
+import pathlib
+
+# src layout without install
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))

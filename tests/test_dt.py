@@ -1,0 +1,96 @@
+"""DNNFuser decision transformer + Seq2Seq: causality, learnability,
+conditional one-shot inference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DTConfig, FusionEnv, PAPER_ACCEL, S2SConfig,
+                        TrainConfig, TrajectoryDataset, collect_teacher_data,
+                        dnnfuser_infer, dt_apply, dt_init, dt_loss,
+                        s2s_apply, s2s_init, s2s_loss, s2s_infer,
+                        train_model, GSamplerConfig)
+from repro.workloads import vgg16
+
+MB = 2 ** 20
+CFG = DTConfig(max_steps=20)
+
+
+def _rand_batch(rng, B, T):
+    return {"rtg": jnp.asarray(rng.random((B, T)), jnp.float32),
+            "states": jnp.asarray(rng.random((B, T, 8)), jnp.float32),
+            "actions": jnp.asarray(rng.random((B, T)), jnp.float32),
+            "mask": jnp.ones((B, T), jnp.float32)}
+
+
+def test_dt_causality():
+    """Prediction at step t must not depend on actions/states at steps > t
+    and not on the action at step t itself."""
+    rng = np.random.default_rng(0)
+    params = dt_init(jax.random.PRNGKey(0), CFG)
+    b = _rand_batch(rng, 1, CFG.max_steps)
+    base = dt_apply(params, CFG, b["rtg"], b["states"], b["actions"])
+    t = 7
+    # perturb future state + current/future actions
+    s2 = b["states"].at[:, t + 1:].set(0.123)
+    a2 = b["actions"].at[:, t:].set(-0.777)
+    pert = dt_apply(params, CFG, b["rtg"], s2, a2)
+    np.testing.assert_allclose(np.asarray(base)[:, : t + 1],
+                               np.asarray(pert)[:, : t + 1], atol=1e-5)
+
+
+def test_dt_overfits_tiny_dataset():
+    rng = np.random.default_rng(1)
+    N, T = 8, 20
+    ds = TrajectoryDataset(
+        rtg=rng.random((N, T)).astype(np.float32),
+        states=rng.random((N, T, 8)).astype(np.float32),
+        actions=rng.random((N, T)).astype(np.float32),
+        mask=np.ones((N, T), np.float32))
+    params = dt_init(jax.random.PRNGKey(0), CFG)
+    loss0 = float(dt_loss(params, CFG, {k: jnp.asarray(v) for k, v in
+                                        ds.sample(rng, 8).items()}))
+    params, log = train_model(lambda p, b: dt_loss(p, CFG, b), params, ds,
+                              TrainConfig(steps=150, batch_size=8, lr=1e-3,
+                                          log_every=50))
+    assert log["final_loss"] < loss0 * 0.2, (loss0, log["final_loss"])
+
+
+@pytest.fixture(scope="module")
+def trained_mapper():
+    wl = vgg16()
+    ds = collect_teacher_data(
+        [wl], PAPER_ACCEL, batch=64, budgets_mb=[16, 48], max_steps=20,
+        top_k=4, ga_cfg=GSamplerConfig(generations=20, seed=0),
+        augment_jitter=1)
+    params = dt_init(jax.random.PRNGKey(0), CFG)
+    params, _ = train_model(lambda p, b: dt_loss(p, CFG, b), params, ds,
+                            TrainConfig(steps=250, batch_size=16))
+    return wl, params
+
+
+def test_dt_inference_valid_on_unseen_condition(trained_mapper):
+    wl, params = trained_mapper
+    env = FusionEnv(wl, PAPER_ACCEL, batch=64, budget_bytes=24 * MB,
+                    nmax=20)
+    res = dnnfuser_infer(params, CFG, env)
+    assert res.valid                       # conditioning respects budget
+    assert res.speedup > 0.75              # never catastrophically bad
+    assert res.n_model_calls == wl.n + 1   # one-shot: N+1 tiny forwards
+
+
+def test_s2s_trains_and_infers():
+    rng = np.random.default_rng(2)
+    wl = vgg16()
+    ds = collect_teacher_data(
+        [wl], PAPER_ACCEL, batch=64, budgets_mb=[32], max_steps=20,
+        top_k=3, ga_cfg=GSamplerConfig(generations=12, seed=0),
+        augment_jitter=0)
+    cfg = S2SConfig(max_steps=20)
+    params = s2s_init(jax.random.PRNGKey(0), cfg)
+    params, log = train_model(lambda p, b: s2s_loss(p, cfg, b), params, ds,
+                              TrainConfig(steps=150, batch_size=8))
+    env = FusionEnv(wl, PAPER_ACCEL, batch=64, budget_bytes=32 * MB,
+                    nmax=20)
+    res = s2s_infer(params, cfg, env)
+    assert res.valid and np.isfinite(res.latency)

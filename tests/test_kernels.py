@@ -1,0 +1,98 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.core import cost_model as cm
+from repro.core.accel import PAPER_ACCEL
+from repro.workloads import resnet18, vgg16
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,hd", [
+    (1, 128, 2, 2, 64), (2, 256, 4, 2, 64), (1, 256, 8, 1, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, -1), (False, -1),
+                                           (True, 96)])
+def test_flash_attention_sweep(B, S, Hq, Hkv, hd, dtype, causal, window):
+    q = jnp.asarray(RNG.normal(size=(B, S, Hq, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, S, Hkv, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, S, Hkv, hd)), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              bq=128, bk=128, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,T,Hq,Hkv,hd,kv_len", [
+    (1, 1024, 4, 4, 64, 800), (2, 2048, 8, 2, 64, 2048),
+    (1, 1024, 8, 1, 128, 513),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(B, T, Hq, Hkv, hd, kv_len, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, 1, Hq, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, T, Hkv, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, T, Hkv, hd)), dtype)
+    out = ops.flash_decode(q, k, v, kv_len, bk=256, interpret=True)
+    want = ref.decode_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,T,H,n,chunk", [
+    (1, 64, 2, 32, 32), (2, 130, 3, 64, 64), (1, 256, 1, 16, 64),
+])
+def test_wkv6_sweep(B, T, H, n, chunk):
+    r, k, v = (jnp.asarray(RNG.normal(size=(B, T, H, n)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(RNG.uniform(0.75, 0.9995, size=(B, T, H, n)),
+                    jnp.float32)
+    u = jnp.asarray(RNG.normal(size=(H, n)), jnp.float32)
+    s0 = jnp.asarray(RNG.normal(size=(B, H, n, n)), jnp.float32)
+    y, sT = ops.wkv6(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    yr, sr = ref.wkv6_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=5e-5, atol=5e-5)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sr),
+                               rtol=5e-5, atol=5e-5)
+
+
+@pytest.mark.parametrize("wl_fn,batch", [(vgg16, 64), (resnet18, 32)])
+def test_fusion_eval_sweep(wl_fn, batch):
+    hw = PAPER_ACCEL
+    w = wl_fn(batch=batch)
+    wl = cm.pack_workload(w, hw, nmax=64)
+    pop = np.stack([cm.random_strategy(RNG, w.n, 64, batch)
+                    for _ in range(64)])
+    lat, peak, traf = ops.fusion_eval_population(
+        pop, wl, batch=float(batch), hw=hw, interpret=True)
+    rl, rp, rt = ref.fusion_eval_ref(pop, wl, batch=batch,
+                                     budget_bytes=20 * 2 ** 20, hw=hw)
+    np.testing.assert_allclose(np.asarray(lat), np.asarray(rl), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(peak), np.asarray(rp), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(traf), np.asarray(rt), rtol=1e-5)
+
+
+def test_model_pallas_path_matches_xla():
+    """attn_impl='pallas' end-to-end equals the XLA path (reduced arch)."""
+    from repro.configs import get_config
+    from repro.models import get_model
+    cfg = get_config("qwen3_8b", reduced=True)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (2, 128)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    lx, _ = model.forward(params, cfg, batch, impl="xla")
+    lp, _ = model.forward(params, cfg, batch, impl="pallas")
+    np.testing.assert_allclose(np.asarray(lx), np.asarray(lp),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,61 @@
+"""G-Sampler + baseline searcher behaviour."""
+import numpy as np
+import pytest
+
+from repro.core import (FusionEnv, GSamplerConfig, PAPER_ACCEL,
+                        BASELINE_METHODS, gsampler_search)
+from repro.core.baselines import random_search
+from repro.workloads import resnet18, vgg16
+
+MB = 2 ** 20
+
+
+@pytest.fixture(scope="module")
+def env():
+    return FusionEnv(resnet18(), PAPER_ACCEL, batch=64,
+                     budget_bytes=20 * MB)
+
+
+def test_gsampler_valid_and_beats_baseline(env):
+    res = gsampler_search(env, GSamplerConfig(generations=25, seed=0))
+    assert res.valid
+    assert res.speedup > 1.0
+    assert res.n_evals <= 26 * 40   # sampling budget honored
+
+
+def test_gsampler_beats_random(env):
+    res = gsampler_search(env, GSamplerConfig(generations=25, seed=0))
+    rnd = random_search(env, budget=1000, seed=0)
+    gs_obj = res.latency if res.valid else np.inf
+    rnd_obj = rnd.latency if rnd.valid else np.inf
+    assert gs_obj < rnd_obj
+
+
+def test_gsampler_improves_over_generations(env):
+    res = gsampler_search(env, GSamplerConfig(generations=30, seed=1))
+    hist = [h for h in res.history if h > 0]
+    assert hist and max(hist) >= hist[0]
+
+
+def test_gsampler_respects_budget_constraint(env):
+    for seed in range(3):
+        res = gsampler_search(env, GSamplerConfig(generations=15, seed=seed))
+        assert res.peak_mem <= env.budget_bytes * (1 + 1e-6)
+
+
+@pytest.mark.parametrize("method", sorted(BASELINE_METHODS))
+def test_baselines_run_within_budget(env, method):
+    r = BASELINE_METHODS[method](env, budget=400, seed=0)
+    assert r.n_evals <= 400
+    assert np.isfinite(r.latency)
+
+
+def test_elites_are_distinct_and_valid(env):
+    res = gsampler_search(env, GSamplerConfig(generations=20, seed=2),
+                          top_k=6)
+    seen = set()
+    for s in res.elites:
+        _, peak, valid = env.speedup(s)
+        assert valid
+        seen.add(s[: env.n + 1].tobytes())
+    assert len(seen) == len(res.elites)
