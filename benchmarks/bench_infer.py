@@ -1,0 +1,123 @@
+"""Perf-regression harness for one-shot inference (DESIGN.md §9).
+
+Times the three serving paths on vgg16/resnet18 and writes
+``BENCH_infer.json`` so later PRs have a wall-clock baseline to not
+regress:
+
+ - ``host_ms``:   the Python-loop reference rollout (N+1 jitted full-sequence
+                  forwards + full cost-model prefix evaluations, NumPy
+                  round-trips every step);
+ - ``fused_ms``:  the device-resident ``lax.scan`` rollout (KV-cached decode
+                  + O(1) ``prefix_step`` env transition + on-device budget
+                  guard), one device call per episode;
+ - ``batch``:     ``dnnfuser_infer_batch`` serving a stacked grid of
+                  (batch, budget) conditions in ONE device call — reported
+                  as conditions/sec.
+
+Weights are random-init (timing does not depend on training); all numbers
+are post-jit steady-state medians.
+
+    PYTHONPATH=src python benchmarks/bench_infer.py [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import statistics
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (DTConfig, FusionEnv, PAPER_ACCEL, dt_init,
+                        dnnfuser_infer, dnnfuser_infer_fused,
+                        dnnfuser_infer_batch)
+from repro.workloads import resnet18, vgg16
+
+MB = float(2 ** 20)
+
+
+def _median_time(fn, reps: int) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts)
+
+
+def bench_workload(wl, params, cfg, *, budget_mb: float, batch: int,
+                   n_conditions: int, reps: int) -> dict:
+    env = FusionEnv(wl, PAPER_ACCEL, batch=batch, budget_bytes=budget_mb * MB,
+                    nmax=cfg.max_steps)
+    # warm the jit caches
+    host = dnnfuser_infer(params, cfg, env)
+    fused = dnnfuser_infer_fused(params, cfg, env)
+    assert (host.strategy == fused.strategy).all(), \
+        "fused rollout diverged from host reference"
+
+    t_host = _median_time(lambda: dnnfuser_infer(params, cfg, env),
+                          max(2, reps // 3))
+    t_fused = _median_time(lambda: dnnfuser_infer_fused(params, cfg, env),
+                           reps)
+
+    batches = np.full(n_conditions, float(batch), np.float32)
+    budgets = (np.linspace(8.0, 64.0, n_conditions) * MB).astype(np.float32)
+    dnnfuser_infer_batch(params, cfg, env, batches, budgets)   # warm
+    t_batch = _median_time(
+        lambda: dnnfuser_infer_batch(params, cfg, env, batches, budgets),
+        max(2, reps // 2))
+
+    return {
+        "workload": wl.name,
+        "n_layers": wl.n,
+        "batch": batch,
+        "budget_mb": budget_mb,
+        "host_ms": t_host * 1e3,
+        "fused_ms": t_fused * 1e3,
+        "fused_speedup_x": t_host / t_fused,
+        "batch_conditions": n_conditions,
+        "batch_ms": t_batch * 1e3,
+        "batch_conditions_per_s": n_conditions / t_batch,
+        "batch_ms_per_condition": t_batch * 1e3 / n_conditions,
+    }
+
+
+def run(quick: bool = False, out: str = "BENCH_infer.json") -> dict:
+    cfg = DTConfig(max_steps=20)
+    params = dt_init(jax.random.PRNGKey(0), cfg)
+    reps = 3 if quick else 10
+    n_conditions = 32 if quick else 64
+    rows = []
+    for wl_fn in (vgg16, resnet18):
+        r = bench_workload(wl_fn(), params, cfg, budget_mb=20.0, batch=64,
+                           n_conditions=n_conditions, reps=reps)
+        rows.append(r)
+        print(f"{r['workload']:9s}: host {r['host_ms']:7.1f} ms | fused "
+              f"{r['fused_ms']:6.2f} ms ({r['fused_speedup_x']:5.1f}x) | "
+              f"batch[{n_conditions}] {r['batch_ms']:7.1f} ms = "
+              f"{r['batch_conditions_per_s']:7.1f} cond/s")
+    report = {
+        "bench": "infer",
+        "device": jax.devices()[0].platform,
+        "quick": quick,
+        "results": rows,
+    }
+    path = pathlib.Path(out)
+    path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {path}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer reps / conditions (CI smoke)")
+    ap.add_argument("--out", default="BENCH_infer.json")
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

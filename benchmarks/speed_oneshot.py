@@ -1,20 +1,28 @@
 """The 66x-127x one-shot-vs-search speed claim (paper §5.2).
 
 Measures wall time of a full G-Sampler search vs a single DNNFuser
-autoregressive inference on the same (workload, condition).  Two framings
-are reported honestly:
+autoregressive inference on the same (workload, condition).  Framings
+reported honestly:
  - vs OUR vectorized-JAX G-Sampler (itself ~50x faster than the paper's,
    thanks to one vmapped cost-model call per generation);
  - vs the paper's reported G-Sampler time (0.66-1.27 min) — the
-   apples-to-apples analogue of their Table 1 comparison.
+   apples-to-apples analogue of their Table 1 comparison;
+ - host vs FUSED rollout (``fused-vs-host``): the device-resident
+   ``lax.scan`` one-shot against the Python-loop reference, plus batched
+   serving throughput (conditions/sec for a stacked grid of (batch, budget)
+   conditions in one device call) — DESIGN.md §9.
+
+A machine-readable summary lands in ``artifacts/bench/speed_oneshot.json``.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
 
-from repro.core import dnnfuser_infer, gsampler_search
+from repro.core import (dnnfuser_infer, dnnfuser_infer_batch,
+                        dnnfuser_infer_fused, gsampler_search)
 from repro.workloads import resnet18, vgg16
 
 from . import common as C
@@ -22,6 +30,8 @@ from . import common as C
 
 def run(quick: bool = False):
     rows = []
+    report = []
+    n_cond = 32
     print("\n=== One-shot inference vs search speed")
     for wl_fn, name, paper_gs_min in [(vgg16, "vgg16", 0.66),
                                       (resnet18, "resnet18", 1.27)]:
@@ -29,7 +39,8 @@ def run(quick: bool = False):
         env = C.env_for(wl, 64, 20.0, max_steps=20)
         ds = C.teacher_dataset([wl], 64, C.TRAIN_BUDGETS, 20, f"{name}_b64")
         dtp, dtc, _ = C.train_dt(ds, f"{name}_b64", max_steps=20)
-        dnnfuser_infer(dtp, dtc, env)        # warm the jit cache
+        dnnfuser_infer(dtp, dtc, env)        # warm the jit caches
+        dnnfuser_infer_fused(dtp, dtc, env)
         t0 = time.perf_counter()
         gs = gsampler_search(env)
         t_gs = time.perf_counter() - t0
@@ -38,15 +49,43 @@ def run(quick: bool = False):
         for _ in range(reps):
             df = dnnfuser_infer(dtp, dtc, env)
         t_df = (time.perf_counter() - t0) / reps
-        ratio = t_gs / t_df
-        ratio_paper = paper_gs_min * 60.0 / t_df
-        print(f"{name:9s}: GS search {t_gs:6.2f}s | DF one-shot "
-              f"{t_df*1e3:6.0f}ms | {ratio:6.1f}x vs our GS | "
-              f"{ratio_paper:7.0f}x vs paper GS "
-              f"(speedups: GS {gs.speedup:.2f} DF {df.speedup:.2f})")
-        rows.append((f"speed/{name}", t_df * 1e6,
-                     f"gs_s={t_gs:.2f};ratio_ours={ratio:.1f};"
-                     f"ratio_vs_paper_gs={ratio_paper:.0f}"))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            ff = dnnfuser_infer_fused(dtp, dtc, env)
+        t_ff = (time.perf_counter() - t0) / reps
+        batches = np.full(n_cond, 64.0, np.float32)
+        budgets = (np.linspace(8.0, 64.0, n_cond) * C.MB).astype(np.float32)
+        dnnfuser_infer_batch(dtp, dtc, env, batches, budgets)   # warm
+        t0 = time.perf_counter()
+        bf = dnnfuser_infer_batch(dtp, dtc, env, batches, budgets)
+        t_bf = time.perf_counter() - t0
+        ratio = t_gs / t_ff
+        ratio_paper = paper_gs_min * 60.0 / t_ff
+        print(f"{name:9s}: GS search {t_gs:6.2f}s | DF host "
+              f"{t_df*1e3:6.0f}ms | fused {t_ff*1e3:6.1f}ms "
+              f"({t_df/t_ff:5.1f}x fused-vs-host) | {ratio:6.1f}x vs our GS "
+              f"| {ratio_paper:7.0f}x vs paper GS "
+              f"(speedups: GS {gs.speedup:.2f} DF {df.speedup:.2f} "
+              f"fused {ff.speedup:.2f})")
+        print(f"{'':9s}  batched serving: {n_cond} conditions in "
+              f"{t_bf*1e3:.0f}ms = {n_cond/t_bf:.0f} cond/s "
+              f"({int(bf['valid'].sum())}/{n_cond} valid)")
+        rows.append((f"speed/{name}", t_ff * 1e6,
+                     f"gs_s={t_gs:.2f};host_ms={t_df*1e3:.0f};"
+                     f"fused_vs_host={t_df/t_ff:.1f};ratio_ours={ratio:.1f};"
+                     f"ratio_vs_paper_gs={ratio_paper:.0f};"
+                     f"batch_cond_per_s={n_cond/t_bf:.0f}"))
+        report.append(dict(
+            workload=name, gs_s=t_gs, host_ms=t_df * 1e3,
+            fused_ms=t_ff * 1e3, fused_vs_host_x=t_df / t_ff,
+            oneshot_vs_our_gs_x=ratio, oneshot_vs_paper_gs_x=ratio_paper,
+            batch_conditions=n_cond, batch_ms=t_bf * 1e3,
+            batch_conditions_per_s=n_cond / t_bf,
+            gs_speedup=gs.speedup, df_speedup=df.speedup,
+            fused_speedup=ff.speedup))
+    out = C.ART / "speed_oneshot.json"
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {out}")
     return rows
 
 

@@ -8,25 +8,44 @@ one-shot conditional inference (infer).
 """
 from .accel import AccelConfig, PAPER_ACCEL
 from .cost_model import (SYNC, CostOut, evaluate, evaluate_population,
-                         baseline_no_fusion, prefix_trace, pack_workload)
-from .env import FusionEnv, STATE_DIM, encode_action, decode_action
+                         evaluate_population_stats, baseline_no_fusion,
+                         prefix_trace, pack_workload, PrefixConsts,
+                         PrefixCarry, prefix_consts, prefix_init,
+                         prefix_step, prefix_out, prefix_probe_peak,
+                         prefix_scan)
+from .env import (FusionEnv, STATE_DIM, encode_action, decode_action,
+                  encode_action_jnp, decode_action_jnp, EnvConsts, env_make,
+                  env_reset, env_observe, env_step, env_final)
 from .gsampler import GSamplerConfig, GSamplerResult, gsampler_search
 from .baselines import BASELINE_METHODS, run_baseline, SearchResult
 from .a2c import a2c_search
-from .model import DTConfig, dt_init, dt_apply, dt_loss
-from .seq2seq import S2SConfig, s2s_init, s2s_apply, s2s_loss
+from .model import (DTConfig, dt_init, dt_apply, dt_loss, dt_cache_init,
+                    dt_prefill, dt_decode_step)
+from .seq2seq import (S2SConfig, s2s_init, s2s_apply, s2s_loss, s2s_encode,
+                      s2s_decode_start, s2s_decode_step, s2s_stream_init,
+                      s2s_stream_step)
 from .dataset import TrajectoryDataset, collect_teacher_data, merge_datasets
 from .train import TrainConfig, train_model, make_train_step
-from .infer import InferResult, dnnfuser_infer, s2s_infer
+from .infer import (InferResult, dnnfuser_infer, s2s_infer,
+                    dnnfuser_infer_fused, s2s_infer_fused,
+                    dnnfuser_infer_batch)
 
 __all__ = [
     "AccelConfig", "PAPER_ACCEL", "SYNC", "CostOut", "evaluate",
-    "evaluate_population", "baseline_no_fusion", "prefix_trace",
-    "pack_workload", "FusionEnv", "STATE_DIM", "encode_action",
-    "decode_action", "GSamplerConfig", "GSamplerResult", "gsampler_search",
+    "evaluate_population", "evaluate_population_stats", "baseline_no_fusion",
+    "prefix_trace", "pack_workload", "PrefixConsts", "PrefixCarry",
+    "prefix_consts", "prefix_init", "prefix_step", "prefix_out",
+    "prefix_probe_peak", "prefix_scan", "FusionEnv", "STATE_DIM",
+    "encode_action",
+    "decode_action", "encode_action_jnp", "decode_action_jnp", "EnvConsts",
+    "env_make", "env_reset", "env_observe", "env_step", "env_final",
+    "GSamplerConfig", "GSamplerResult", "gsampler_search",
     "BASELINE_METHODS", "run_baseline", "SearchResult", "a2c_search",
-    "DTConfig", "dt_init", "dt_apply", "dt_loss", "S2SConfig", "s2s_init",
-    "s2s_apply", "s2s_loss", "TrajectoryDataset", "collect_teacher_data",
-    "merge_datasets", "TrainConfig", "train_model", "make_train_step",
-    "InferResult", "dnnfuser_infer", "s2s_infer",
+    "DTConfig", "dt_init", "dt_apply", "dt_loss", "dt_cache_init",
+    "dt_prefill", "dt_decode_step", "S2SConfig", "s2s_init", "s2s_apply",
+    "s2s_loss", "s2s_encode", "s2s_decode_start", "s2s_decode_step",
+    "s2s_stream_init", "s2s_stream_step", "TrajectoryDataset",
+    "collect_teacher_data", "merge_datasets", "TrainConfig", "train_model",
+    "make_train_step", "InferResult", "dnnfuser_infer", "s2s_infer",
+    "dnnfuser_infer_fused", "s2s_infer_fused", "dnnfuser_infer_batch",
 ]

@@ -28,7 +28,10 @@ import numpy as np
 from .accel import AccelConfig
 
 __all__ = ["SYNC", "CostOut", "evaluate", "evaluate_population",
-           "baseline_no_fusion", "prefix_trace", "pack_workload"]
+           "evaluate_population_stats", "baseline_no_fusion", "prefix_trace",
+           "pack_workload", "PrefixConsts", "PrefixCarry", "prefix_consts",
+           "prefix_init", "prefix_step", "prefix_out", "prefix_probe_peak",
+           "prefix_scan"]
 
 SYNC = -1  # strategy sentinel: flush activation off-chip after this layer
 _UTIL_MIN = 1.0 / 4096.0
@@ -71,11 +74,12 @@ def _prep_strategy(strategy: jax.Array, mask: jax.Array, batch: float) -> tuple:
     return sync, stage_mb, mbe
 
 
-@functools.partial(jax.jit, static_argnames=("hw", "nseg"))
-def evaluate(wl: dict, strategy: jax.Array, batch: jax.Array,
-             budget_bytes: jax.Array, hw: AccelConfig, *,
-             nseg: int | None = None) -> CostOut:
-    """Cost of one strategy. All inputs may be traced except ``hw``/``nseg``."""
+def _evaluate_full(wl: dict, strategy: jax.Array, batch: jax.Array,
+                   budget_bytes: jax.Array, hw: AccelConfig,
+                   nseg: int | None = None):
+    """``evaluate`` body, additionally returning the group decomposition
+    (``gid`` [P] and per-group activation memory ``M_g`` [nseg]) that search
+    heuristics (G-Sampler repair) use to pick split/shrink targets."""
     A, W, F, OE, UC = wl["A"], wl["W"], wl["F"], wl["OE"], wl["UC"]
     mask, skip, n = wl["mask"], wl["SKIP"], wl["n"]
     P = A.shape[0]
@@ -143,7 +147,16 @@ def evaluate(wl: dict, strategy: jax.Array, batch: jax.Array,
     traffic = jnp.sum(T_g)
     n_groups = jnp.sum(nonempty.astype(jnp.int32))
     valid = peak_mem <= jnp.asarray(budget_bytes, jnp.float32)
-    return CostOut(latency, peak_mem, traffic, valid, n_groups)
+    return CostOut(latency, peak_mem, traffic, valid, n_groups), gid, M_g
+
+
+@functools.partial(jax.jit, static_argnames=("hw", "nseg"))
+def evaluate(wl: dict, strategy: jax.Array, batch: jax.Array,
+             budget_bytes: jax.Array, hw: AccelConfig, *,
+             nseg: int | None = None) -> CostOut:
+    """Cost of one strategy. All inputs may be traced except ``hw``/``nseg``."""
+    out, _, _ = _evaluate_full(wl, strategy, batch, budget_bytes, hw, nseg)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("hw",))
@@ -176,6 +189,21 @@ def evaluate_population(wl: dict, strategies: jax.Array, batch: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("hw",))
+def evaluate_population_stats(wl: dict, strategies: jax.Array,
+                              batch: jax.Array, budget_bytes: jax.Array,
+                              hw: AccelConfig):
+    """Like :func:`evaluate_population` but also returns the per-strategy
+    group decomposition: ``(CostOut [pop], gid [pop, P], M_g [pop, P])``.
+
+    ``gid[p, i]`` is the fused-group id of position ``i`` in strategy ``p``
+    and ``M_g[p, g]`` that group's staged-activation peak — everything a
+    constraint-repair operator needs to find the worst group and its span
+    in one device call (DESIGN.md §3)."""
+    return jax.vmap(
+        lambda s: _evaluate_full(wl, s, batch, budget_bytes, hw))(strategies)
+
+
+@functools.partial(jax.jit, static_argnames=("hw",))
 def prefix_trace(wl: dict, strategy: jax.Array, batch: jax.Array,
                  budget_bytes: jax.Array, hw: AccelConfig) -> CostOut:
     """Partial-strategy trace for RL state decoration (paper Eq. 2).
@@ -193,6 +221,358 @@ def prefix_trace(wl: dict, strategy: jax.Array, batch: jax.Array,
         return evaluate(wl, s, batch, budget_bytes, hw)
 
     return jax.vmap(at_t)(jnp.arange(P))
+
+
+# ---------------------------------------------------------------------------
+# Incremental prefix evaluation (scan-carry form, DESIGN.md §9).
+#
+# ``prefix_trace`` above re-evaluates the whole chain once per position —
+# O(P^2) work for a rollout that queries the environment at every step.  The
+# carry form below maintains the exact same quantity — the cost of the
+# strategy with positions ``< t`` applied and the rest forced to SYNC —
+# as O(1)-per-step running state, so a full autoregressive episode is O(P)
+# and lives inside one ``jax.lax.scan`` with zero host syncs.
+#
+# Invariant: positions ``>= t`` forced to SYNC are each a singleton
+# (unfused) group whose cost is independent of the prefix, so their
+# latency/traffic suffix-sums and memory suffix-max are precomputed once
+# (``PrefixConsts``).  The carry tracks the closed-group aggregates plus the
+# component sums of the one open (not-yet-synced) group.
+# ---------------------------------------------------------------------------
+
+
+class PrefixConsts(NamedTuple):
+    """Per-(workload, batch, budget) constants for the prefix carry.
+
+    All fields are jnp arrays (``batch``/``budget`` may be traced, e.g. under
+    a vmap over serving conditions); the ``AccelConfig`` stays a static
+    Python argument to the ``prefix_*`` functions."""
+    A: jax.Array          # [P] act bytes/sample (position 0 = network input)
+    A_prev: jax.Array     # [P] producer act bytes
+    W: jax.Array          # [P] weight bytes
+    F: jax.Array          # [P] MACs/sample
+    OE: jax.Array         # [P] output elems (utilization model)
+    UC: jax.Array         # [P] utilization cap
+    skip: jax.Array       # [P] residual source position or -1
+    has_skip: jax.Array   # [P] bool
+    mask: jax.Array       # [P] valid layer positions
+    n: jax.Array          # num layers
+    B: jax.Array          # batch (f32)
+    budget: jax.Array     # bytes (f32)
+    sm: jax.Array         # [P] singleton(all-SYNC) group peak mem
+    st: jax.Array         # [P] singleton group off-chip traffic
+    slat: jax.Array       # [P] singleton group latency
+    hold0: jax.Array      # [P] same-group skip-hold term of a singleton
+    SLAT: jax.Array       # [P+2] suffix sum of slat (SLAT[i] = sum_{j>=i})
+    SPEAK: jax.Array      # [P+2] suffix max of sm
+    STRAF: jax.Array      # [P+2] suffix sum of st
+    SGRP: jax.Array       # [P+2] suffix count of layers (i32)
+
+
+class PrefixCarry(NamedTuple):
+    """Running state after committing actions for positions ``< t``."""
+    t: jax.Array          # next position to act on (i32)
+    g_start: jax.Array    # first position of the open group (i32)
+    open_len: jax.Array   # committed members of the open group (i32)
+    last_mb: jax.Array    # micro-batch of the last committed member (f32)
+    c_sum: jax.Array      # open-group compute seconds
+    t_sum: jax.Array      # open-group off-chip bytes
+    o_sum: jax.Array      # open-group on-chip bytes
+    m_sum: jax.Array      # open-group staged-act bytes
+    w_sum: jax.Array      # open-group micro-batch waves
+    lat: jax.Array        # closed groups: total latency
+    peak: jax.Array       # closed groups: max group memory
+    traf: jax.Array       # closed groups: total traffic
+    groups: jax.Array     # closed groups: count (i32)
+
+
+def _suffix_sum(x: jax.Array, pad: int = 2) -> jax.Array:
+    s = jnp.cumsum(x[::-1])[::-1]
+    return jnp.concatenate([s, jnp.zeros((pad,), x.dtype)])
+
+
+def _suffix_max(x: jax.Array, pad: int = 2) -> jax.Array:
+    s = jax.lax.cummax(x[::-1])[::-1]
+    return jnp.concatenate([s, jnp.zeros((pad,), x.dtype)])
+
+
+def prefix_consts(wl: dict, batch: jax.Array, budget_bytes: jax.Array,
+                  hw: AccelConfig) -> PrefixConsts:
+    """Precompute the per-position constants of the forced-SYNC suffix.
+
+    A forced-SYNC position is a singleton group: unfused, so its effective
+    micro-batch is the full batch, its staged output one sample, and its
+    working set clamped to the streaming buffer — none of which depends on
+    the actions taken for the prefix (see ``evaluate``)."""
+    A, W, F = wl["A"], wl["W"], wl["F"]
+    OE, UC = wl["OE"], wl["UC"]
+    mask, skip, n = wl["mask"], wl["SKIP"], wl["n"]
+    P = A.shape[0]
+    pos = jnp.arange(P)
+    B = jnp.asarray(batch, jnp.float32)
+    fmask = mask.astype(jnp.float32)
+    A_prev = jnp.roll(A, 1).at[0].set(0.0)
+    src = jnp.clip(skip, 0, P - 1)
+    has = (skip >= 0) & mask
+    Asrc = A[src]
+    # position 0 shares gid 0 with the first group, so a residual edge from
+    # the network input into position 1 is same-group even for a singleton
+    same0 = has & (skip == 0) & (pos == 1)
+    hold0 = jnp.where(same0, B * Asrc, 0.0)
+    cross = jnp.where(has & ~same0, 2.0 * B * Asrc, 0.0)
+    util_B = jnp.clip(B * OE / (hw.npe * hw.pe_lanes), _UTIL_MIN, UC)
+    comp_B = B * F / hw.peak_macs / util_B
+    sm = jnp.minimum(A + B * A_prev + hold0, hw.stream_buf_bytes) * fmask
+    st = (B * A_prev + B * A + W + cross) * fmask
+    so = B * (A_prev + A) + W
+    slat = (jnp.maximum(jnp.maximum(comp_B, st / hw.bw_offchip),
+                        so / hw.bw_onchip) + hw.t_pass + hw.t_sync) * fmask
+    return PrefixConsts(
+        A=A, A_prev=A_prev, W=W, F=F, OE=OE, UC=UC,
+        skip=skip, has_skip=has, mask=mask, n=n, B=B,
+        budget=jnp.asarray(budget_bytes, jnp.float32),
+        sm=sm, st=st, slat=slat, hold0=hold0,
+        SLAT=_suffix_sum(slat), SPEAK=_suffix_max(sm),
+        STRAF=_suffix_sum(st),
+        SGRP=_suffix_sum(fmask).astype(jnp.int32))
+
+
+def prefix_init(consts: PrefixConsts) -> PrefixCarry:
+    f0 = jnp.float32(0.0)
+    i0 = jnp.int32(0)
+    return PrefixCarry(t=i0, g_start=jnp.int32(1), open_len=i0,
+                       last_mb=jnp.float32(1.0), c_sum=f0, t_sum=f0,
+                       o_sum=f0, m_sum=f0, w_sum=f0, lat=f0, peak=f0,
+                       traf=f0, groups=i0)
+
+
+def _tree_select(pred, a, b):
+    return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _gather(consts: PrefixConsts, i: jax.Array):
+    """Per-position terms at (clipped) position ``i``."""
+    P = consts.A.shape[0]
+    j = jnp.clip(i, 0, P - 1)
+    return (consts.A[j], consts.A_prev[j], consts.W[j], consts.F[j],
+            consts.OE[j], consts.UC[j], consts.skip[j], consts.has_skip[j])
+
+
+def _same_group(consts: PrefixConsts, src, has, g_start):
+    """gid[src] == gid[i] for ``i`` in the open group starting at g_start
+    (position 0 always carries gid 0, the id of the first group)."""
+    return has & ((src >= g_start) | ((src == 0) & (g_start == 1)))
+
+
+def prefix_step(consts: PrefixConsts, carry: PrefixCarry, action,
+                hw: AccelConfig) -> PrefixCarry:
+    """Commit ``action`` for position ``carry.t`` (O(1) work).
+
+    Matches ``evaluate`` semantics exactly: a non-SYNC action extends the
+    open group (fused-style terms); a SYNC action closes it — as a
+    precomputed singleton when the group would hold one sync'd position, or
+    by reducing the carried component sums.  Position 0 is the network-input
+    pseudo tensor and contributes nothing."""
+    c = consts
+    i = carry.t
+    B = c.B
+    lanes = hw.npe * hw.pe_lanes
+    a = jnp.asarray(action, jnp.float32)
+    Ai, Api, Wi, Fi, OEi, UCi, srci, hasi = _gather(c, i)
+    Asrc = c.A[jnp.clip(srci, 0, c.A.shape[0] - 1)]
+    same = _same_group(c, srci, hasi, carry.g_start)
+    is_tail_n = i == c.n
+
+    # --- non-SYNC: extend the open group (fused-style contributions) -------
+    mb = jnp.clip(a, 1.0, B)
+    head = carry.open_len == 0
+    waves = jnp.ceil(B / mb)
+    util = jnp.clip(mb * OEi / lanes, _UTIL_MIN, UCi)
+    comp = B * Fi / hw.peak_macs / util
+    mem = (mb * Ai + jnp.where(head, mb * Api, 0.0)
+           + jnp.where(same, mb * Asrc, 0.0))
+    tr = (jnp.where(head, B * Api, 0.0) + jnp.where(is_tail_n, B * Ai, 0.0)
+          + Wi * waves + jnp.where(hasi & ~same, 2.0 * B * Asrc, 0.0))
+    o = B * (Api + Ai) + Wi * waves
+    carry_ns = carry._replace(
+        t=i + 1, open_len=carry.open_len + 1, last_mb=mb,
+        c_sum=carry.c_sum + comp, t_sum=carry.t_sum + tr,
+        o_sum=carry.o_sum + o, m_sum=carry.m_sum + mem,
+        w_sum=carry.w_sum + waves)
+
+    # --- SYNC: close the open group ----------------------------------------
+    # fused close: the sync position rides the producer's micro-batch with a
+    # 1-sample staged FIFO; singleton close: the precomputed all-SYNC terms.
+    mbe = carry.last_mb
+    waves_s = jnp.ceil(B / mbe)
+    util_s = jnp.clip(mbe * OEi / lanes, _UTIL_MIN, UCi)
+    comp_s = B * Fi / hw.peak_macs / util_s
+    mem_s = Ai + jnp.where(same, mbe * Asrc, 0.0)
+    tr_s = (B * Ai + Wi * waves_s
+            + jnp.where(hasi & ~same, 2.0 * B * Asrc, 0.0))
+    o_s = B * (Api + Ai) + Wi * waves_s
+    Mg = carry.m_sum + mem_s
+    Cg = carry.c_sum + comp_s
+    Tg = carry.t_sum + tr_s
+    Og = carry.o_sum + o_s
+    Wg = carry.w_sum + waves_s
+    Lg = (jnp.maximum(jnp.maximum(Cg, Tg / hw.bw_offchip),
+                      Og / hw.bw_onchip) + Wg * hw.t_pass + hw.t_sync)
+    single = carry.open_len == 0
+    j = jnp.clip(i, 0, c.A.shape[0] - 1)
+    Lc = jnp.where(single, c.slat[j], Lg)
+    Mc = jnp.where(single, c.sm[j], Mg)
+    Tc = jnp.where(single, c.st[j], Tg)
+    f0 = jnp.float32(0.0)
+    carry_sy = PrefixCarry(
+        t=i + 1, g_start=i + 1, open_len=jnp.int32(0),
+        last_mb=jnp.float32(1.0), c_sum=f0, t_sum=f0, o_sum=f0, m_sum=f0,
+        w_sum=f0, lat=carry.lat + Lc, peak=jnp.maximum(carry.peak, Mc),
+        traf=carry.traf + Tc, groups=carry.groups + 1)
+
+    out = _tree_select(a < 0.0, carry_sy, carry_ns)
+    return _tree_select(i == 0, carry._replace(t=jnp.int32(1)), out)
+
+
+def prefix_out(consts: PrefixConsts, carry: PrefixCarry,
+               hw: AccelConfig) -> CostOut:
+    """CostOut of the carried prefix: actions ``< t`` applied, rest SYNC.
+
+    Identical quantity to ``prefix_trace`` entry ``t`` (and to a full
+    ``evaluate`` once ``t == n + 1``), assembled in O(1) from the carry,
+    one forced-SYNC close of the open group, and the precomputed suffix
+    aggregates."""
+    c = consts
+    t = carry.t
+    B = c.B
+    lanes = hw.npe * hw.pe_lanes
+    n1 = c.n + 1
+    tc = jnp.clip(t, 0, c.SLAT.shape[0] - 2)
+
+    # case A — no open group: closed + all-SYNC suffix from t
+    latA = carry.lat + c.SLAT[tc]
+    peakA = jnp.maximum(carry.peak, c.SPEAK[tc])
+    trafA = carry.traf + c.STRAF[tc]
+    grpA = carry.groups + c.SGRP[tc]
+
+    # case B — open group force-closed by the SYNC at t, suffix from t+1
+    Ai, Api, Wi, Fi, OEi, UCi, srci, hasi = _gather(c, t)
+    Asrc = c.A[jnp.clip(srci, 0, c.A.shape[0] - 1)]
+    same = _same_group(c, srci, hasi, carry.g_start)
+    mbe = carry.last_mb
+    waves_t = jnp.ceil(B / mbe)
+    util_t = jnp.clip(mbe * OEi / lanes, _UTIL_MIN, UCi)
+    comp_t = B * Fi / hw.peak_macs / util_t
+    mem_t = Ai + jnp.where(same, mbe * Asrc, 0.0)
+    tr_t = (B * Ai + Wi * waves_t
+            + jnp.where(hasi & ~same, 2.0 * B * Asrc, 0.0))
+    o_t = B * (Api + Ai) + Wi * waves_t
+    Mg = carry.m_sum + mem_t
+    Cg = carry.c_sum + comp_t
+    Tg = carry.t_sum + tr_t
+    Og = carry.o_sum + o_t
+    Wg = carry.w_sum + waves_t
+    Lg = (jnp.maximum(jnp.maximum(Cg, Tg / hw.bw_offchip),
+                      Og / hw.bw_onchip) + Wg * hw.t_pass + hw.t_sync)
+    latB = carry.lat + Lg + c.SLAT[tc + 1]
+    peakB = jnp.maximum(jnp.maximum(carry.peak, Mg), c.SPEAK[tc + 1])
+    trafB = carry.traf + Tg + c.STRAF[tc + 1]
+    grpB = carry.groups + 1 + c.SGRP[tc + 1]
+
+    # case C — t == n+1, the episode is complete: close the open group
+    # as-is.  A 1-member group is unfused and re-derived from the singleton
+    # constants (full-batch pass, staged output at its own micro-batch,
+    # streaming-buffer clamp); >= 2 members close from the carried sums.
+    jn = jnp.clip(c.n, 0, c.A.shape[0] - 1)
+    memC1 = jnp.minimum(
+        carry.last_mb * c.A[jn] + B * c.A_prev[jn] + c.hold0[jn],
+        hw.stream_buf_bytes)
+    latC1 = carry.lat + c.slat[jn]
+    peakC1 = jnp.maximum(carry.peak, memC1)
+    trafC1 = carry.traf + c.st[jn]
+    LgC = (jnp.maximum(jnp.maximum(carry.c_sum,
+                                   carry.t_sum / hw.bw_offchip),
+                       carry.o_sum / hw.bw_onchip)
+           + carry.w_sum * hw.t_pass + hw.t_sync)
+    latC2 = carry.lat + LgC
+    peakC2 = jnp.maximum(carry.peak, carry.m_sum)
+    trafC2 = carry.traf + carry.t_sum
+
+    open0 = carry.open_len == 0
+    open1 = carry.open_len == 1
+    latC = jnp.where(open0, carry.lat, jnp.where(open1, latC1, latC2))
+    peakC = jnp.where(open0, carry.peak, jnp.where(open1, peakC1, peakC2))
+    trafC = jnp.where(open0, carry.traf, jnp.where(open1, trafC1, trafC2))
+    grpC = carry.groups + jnp.where(open0, 0, 1)
+
+    done = t >= n1
+    lat = jnp.where(done, latC, jnp.where(open0, latA, latB))
+    peak = jnp.where(done, peakC, jnp.where(open0, peakA, peakB))
+    traf = jnp.where(done, trafC, jnp.where(open0, trafA, trafB))
+    grp = jnp.where(done, grpC, jnp.where(open0, grpA, grpB))
+    return CostOut(lat, peak, traf, peak <= c.budget, grp)
+
+
+def prefix_probe_peak(consts: PrefixConsts, carry: PrefixCarry, action,
+                      hw: AccelConfig) -> jax.Array:
+    """Peak memory of the probe strategy (``action`` at position ``t``,
+    everything after forced SYNC) — the quantity the inference-time budget
+    guard tests, without the latency/roofline math of a full
+    ``prefix_step`` + ``prefix_out`` round trip.
+
+    Equals ``prefix_out(prefix_step(carry, action)).peak_mem`` for a
+    non-SYNC ``action`` (the guard never probes SYNC)."""
+    c = consts
+    i = carry.t
+    B = c.B
+    mb = jnp.clip(jnp.asarray(action, jnp.float32), 1.0, B)
+    Ai, Api, _, _, _, _, srci, hasi = _gather(c, i)
+    Asrc = c.A[jnp.clip(srci, 0, c.A.shape[0] - 1)]
+    same = _same_group(c, srci, hasi, carry.g_start)
+    head = carry.open_len == 0
+    mem_t = (mb * Ai + jnp.where(head, mb * Api, 0.0)
+             + jnp.where(same, mb * Asrc, 0.0))
+    tc = jnp.clip(i + 1, 0, c.A.shape[0] - 1)
+    A1, src1, has1 = c.A[tc], c.skip[tc], c.has_skip[tc]
+    same1 = _same_group(c, src1, has1, carry.g_start)
+    mem_s = A1 + jnp.where(same1, mb * c.A[jnp.clip(src1, 0,
+                                                    c.A.shape[0] - 1)], 0.0)
+    # t < n: fused group [g_start..t+1] + all-SYNC suffix from t+2
+    sfx = jnp.clip(i + 2, 0, c.SLAT.shape[0] - 1)
+    peak_mid = jnp.maximum(carry.m_sum + mem_t + mem_s, c.SPEAK[sfx])
+    # t == n: the strategy is complete after this action
+    jn = jnp.clip(c.n, 0, c.A.shape[0] - 1)
+    mem_single = jnp.minimum(mb * c.A[jn] + B * c.A_prev[jn] + c.hold0[jn],
+                             hw.stream_buf_bytes)
+    peak_end = jnp.where(head, mem_single, carry.m_sum + mem_t)
+    grp = jnp.where(i >= c.n, peak_end, peak_mid)
+    # t > n: inactive lane — nothing left to commit
+    grp = jnp.where(i > c.n, jnp.float32(0.0), grp)
+    # t == 0: the input pseudo-tensor carries no cost; all-SYNC chain
+    grp = jnp.where(i == 0, c.SPEAK[1], grp)
+    return jnp.maximum(carry.peak, grp)
+
+
+@functools.partial(jax.jit, static_argnames=("hw",))
+def prefix_scan(wl: dict, strategy: jax.Array, batch: jax.Array,
+                budget_bytes: jax.Array, hw: AccelConfig):
+    """Carry-based equivalent of :func:`prefix_trace`.
+
+    Returns ``(trace, final)``: ``trace`` is a CostOut with leading axis
+    ``P`` whose entry ``t`` matches ``prefix_trace`` entry ``t``, and
+    ``final`` the full-strategy CostOut — all from one O(P) scan instead of
+    P full evaluations."""
+    consts = prefix_consts(wl, batch, budget_bytes, hw)
+    carry = prefix_init(consts)
+
+    def step(carry, a):
+        out = prefix_out(consts, carry, hw)
+        new = prefix_step(consts, carry, a, hw)
+        carry = _tree_select(carry.t <= consts.n, new, carry)
+        return carry, out
+
+    carry, trace = jax.lax.scan(step, carry, strategy)
+    return trace, prefix_out(consts, carry, hw)
 
 
 def random_strategy(rng: np.random.Generator, n: int, nmax: int, batch: int,

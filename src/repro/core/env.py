@@ -16,6 +16,7 @@ available given the strategy so far.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +25,9 @@ import numpy as np
 from . import cost_model as cm
 from .accel import AccelConfig
 
-__all__ = ["FusionEnv", "STATE_DIM", "encode_action", "decode_action"]
+__all__ = ["FusionEnv", "STATE_DIM", "encode_action", "decode_action",
+           "encode_action_jnp", "decode_action_jnp", "EnvConsts", "env_make",
+           "env_reset", "env_observe", "env_step", "env_final"]
 
 STATE_DIM = 8
 _LOG_CAP = np.log1p(2 ** 24)
@@ -43,8 +46,107 @@ def decode_action(y: float | np.ndarray, batch: int) -> np.ndarray:
     return np.where(y < 0.0, cm.SYNC, mb).astype(np.int32)
 
 
-def _shape_feats(shape6: np.ndarray) -> np.ndarray:
-    return (np.log1p(shape6) / _LOG_CAP).astype(np.float32)
+def encode_action_jnp(a: jax.Array, batch: jax.Array) -> jax.Array:
+    """Traced twin of :func:`encode_action` (``batch`` may be traced)."""
+    a = jnp.asarray(a, jnp.float32)
+    return jnp.where(a < 0.0, -0.5, a / batch).astype(jnp.float32)
+
+
+def decode_action_jnp(y: jax.Array, batch: jax.Array) -> jax.Array:
+    """Traced twin of :func:`decode_action` (round-half-even like np.rint)."""
+    y = jnp.asarray(y, jnp.float32)
+    mb = jnp.clip(jnp.round(y * batch), 1.0, batch)
+    return jnp.where(y < 0.0, cm.SYNC, mb).astype(jnp.int32)
+
+
+def _shape_feats(shape6) -> jax.Array:
+    """Log-normalized 6-loop shape features (state dims 0..5).
+
+    The model's input contract: both the NumPy reference env and the
+    device-resident env_make featurize through this one function."""
+    return (jnp.log1p(jnp.asarray(shape6, jnp.float32)) /
+            _LOG_CAP).astype(jnp.float32)
+
+
+def _budget_feat(budget_bytes) -> jax.Array:
+    """Log-normalized requested budget (state dim 6); shared like
+    :func:`_shape_feats`. ``budget_bytes`` may be traced."""
+    b = jnp.asarray(budget_bytes, jnp.float32)
+    return (jnp.log1p(b / 2 ** 20) / np.log1p(1024.0)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Pure-JAX environment (DESIGN.md §9).
+#
+# The device-resident counterpart of :class:`FusionEnv`: the episode state
+# is a ``cost_model.PrefixCarry``, the transition an O(1) ``prefix_step``,
+# and the observation an O(1) ``prefix_out`` — so a whole rollout fuses into
+# one ``jax.lax.scan`` (see ``infer.dnnfuser_infer_fused``) and a stack of
+# (batch, budget) serving conditions vmaps over ``env_make``.  FusionEnv
+# below stays the NumPy reference path with identical semantics.
+# ---------------------------------------------------------------------------
+
+
+class EnvConsts(NamedTuple):
+    pc: cm.PrefixConsts       # also carries B / budget / n (single source)
+    base_lat: jax.Array       # no-fusion baseline latency
+    shape_feats: jax.Array    # [P, 6] log-normalized 6-loop shapes
+    budget_feat: jax.Array
+
+    @property
+    def B(self):
+        return self.pc.B
+
+    @property
+    def budget(self):
+        return self.pc.budget
+
+    @property
+    def n(self):
+        return self.pc.n
+
+
+def env_make(wl: dict, batch: jax.Array, budget_bytes: jax.Array,
+             hw: AccelConfig) -> EnvConsts:
+    """Build per-condition constants. ``batch``/``budget_bytes`` may be
+    traced (vmapped serving conditions); ``hw`` stays static."""
+    B = jnp.asarray(batch, jnp.float32)
+    budget = jnp.asarray(budget_bytes, jnp.float32)
+    pc = cm.prefix_consts(wl, B, budget, hw)
+    base = cm.baseline_no_fusion(wl, B, hw).latency
+    return EnvConsts(pc=pc, base_lat=base,
+                     shape_feats=_shape_feats(wl["SHAPE6"]),
+                     budget_feat=_budget_feat(budget))
+
+
+def env_reset(consts: EnvConsts) -> cm.PrefixCarry:
+    return cm.prefix_init(consts.pc)
+
+
+def env_observe(consts: EnvConsts, state: cm.PrefixCarry,
+                hw: AccelConfig):
+    """(conditioning reward r_hat_t, state vector s_t) — paper Eq. 2."""
+    out = cm.prefix_out(consts.pc, state, hw)
+    mem_avail = jnp.maximum(
+        0.0, (consts.budget - out.peak_mem) / consts.budget)
+    perf = consts.base_lat / jnp.maximum(out.latency, 1e-12)
+    feats = consts.shape_feats[jnp.minimum(state.t, consts.n)]
+    svec = jnp.concatenate([
+        feats, consts.budget_feat[None],
+        jnp.log1p(perf)[None]]).astype(jnp.float32)
+    return mem_avail.astype(jnp.float32), svec
+
+
+def env_step(consts: EnvConsts, state: cm.PrefixCarry, action,
+             hw: AccelConfig) -> cm.PrefixCarry:
+    """Pure transition: commit ``action`` for position ``state.t``."""
+    return cm.prefix_step(consts.pc, state, action, hw)
+
+
+def env_final(consts: EnvConsts, state: cm.PrefixCarry,
+              hw: AccelConfig) -> cm.CostOut:
+    """Full-strategy CostOut once all n+1 actions are committed."""
+    return cm.prefix_out(consts.pc, state, hw)
 
 
 @dataclass
@@ -61,13 +163,18 @@ class FusionEnv:
         self.wl = cm.pack_workload(self.workload, self.hw, self.nmax)
         self.wl_np = {k: np.asarray(v) for k, v in self.wl.items()}
         self.n = int(self.workload.n)
-        self.shape_feats = _shape_feats(
-            np.asarray(self.workload.arrays(self.nmax)["SHAPE6"]))
+        self.shape_feats = np.asarray(_shape_feats(
+            np.asarray(self.workload.arrays(self.nmax)["SHAPE6"])))
         self._base = cm.baseline_no_fusion(self.wl, float(self.batch), self.hw)
         self.baseline_latency = float(self._base.latency)
-        self._budget_feat = np.float32(
-            np.log1p(self.budget_bytes / 2 ** 20) / np.log1p(1024.0))
+        self._budget_feat = np.float32(_budget_feat(self.budget_bytes))
         self.reset()
+
+    def jax_consts(self) -> EnvConsts:
+        """EnvConsts for the device-resident scan rollout over the same
+        (workload, batch, budget) condition this reference env models."""
+        return env_make(self.wl, float(self.batch), float(self.budget_bytes),
+                        self.hw)
 
     # -- episode API ---------------------------------------------------------
     def reset(self) -> np.ndarray:

@@ -22,7 +22,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import cost_model as cm
-from . import ref_model
 from .accel import AccelConfig
 
 __all__ = ["GSamplerConfig", "GSamplerResult", "gsampler_search", "naive_uniform_mb"]
@@ -74,29 +73,42 @@ def naive_uniform_mb(env, max_mb: int | None = None) -> np.ndarray:
     return best
 
 
-def _repair(env, strat: np.ndarray, cfg: GSamplerConfig,
-            rng: np.random.Generator) -> np.ndarray:
-    """Constraint repair: while over budget, split or shrink the worst group."""
-    s = strat.copy()
+def _repair_population(env, pop: np.ndarray, cfg: GSamplerConfig,
+                       rng: np.random.Generator) -> np.ndarray:
+    """Constraint repair for a whole brood at once: while any child is over
+    budget, split or shrink its worst fused group.
+
+    One vmapped ``cost_model.evaluate_population_stats`` call per repair
+    round replaces the pure-Python per-child ``ref_model`` probes (the old
+    hot spot: population x repair_tries reference evaluations per
+    generation); the returned per-group memory + group-id arrays supply the
+    split/shrink targets."""
+    s = pop.copy()
+    mask = np.asarray(env.wl_np["mask"])
     for _ in range(cfg.repair_tries):
-        info = ref_model.evaluate_ref(env.wl_np, s, env.batch,
-                                      env.budget_bytes, env.hw)
-        if info["valid"]:
+        out, gid, M_g = cm.evaluate_population_stats(
+            env.wl, jnp.asarray(s), float(env.batch),
+            float(env.budget_bytes), env.hw)
+        invalid = ~np.asarray(out.valid)
+        if not invalid.any():
             break
-        worst = max(info["groups"], key=lambda g: g.mem)
-        if worst.end > worst.start and rng.random() < 0.5:
-            mid = (worst.start + worst.end) // 2
-            s[mid] = cm.SYNC                       # split the group
-        else:
-            span = s[worst.start: worst.end + 1]
-            mbs = np.where(span > 1, span, 0)
-            if mbs.max() > 1:
-                j = worst.start + int(np.argmax(mbs))
-                s[j] = max(1, s[j] // 2)           # shrink largest stage
-            elif worst.end > worst.start:
-                s[(worst.start + worst.end) // 2] = cm.SYNC
+        gid = np.asarray(gid)
+        M_g = np.asarray(M_g)
+        for i in np.where(invalid)[0]:
+            worst = int(np.argmax(M_g[i]))
+            span = np.where((gid[i] == worst) & mask)[0]
+            start, end = int(span[0]), int(span[-1])
+            if end > start and rng.random() < 0.5:
+                s[i, (start + end) // 2] = cm.SYNC     # split the group
             else:
-                break                              # single layer already minimal
+                seg = s[i, start: end + 1]
+                mbs = np.where(seg > 1, seg, 0)
+                if mbs.max() > 1:
+                    j = start + int(np.argmax(mbs))
+                    s[i, j] = max(1, s[i, j] // 2)     # shrink largest stage
+                elif end > start:
+                    s[i, (start + end) // 2] = cm.SYNC
+                # else: single layer already minimal — leave it
     return s
 
 
@@ -156,9 +168,9 @@ def gsampler_search(env, cfg: GSamplerConfig = GSamplerConfig(),
                         child[j] = int(rng.integers(1, B + 1))
             if child[0] < 1:
                 child[0] = int(rng.integers(1, B + 1))
-            child = _repair(env, child, cfg, rng)
             nxt.append(child)
-        pop = np.stack(nxt)
+        brood = _repair_population(env, np.stack(nxt[cfg.elite:]), cfg, rng)
+        pop = np.concatenate([np.stack(nxt[: cfg.elite]), brood])
 
     # final evaluation
     out = cm.evaluate_population(env.wl, jnp.asarray(pop), float(B),

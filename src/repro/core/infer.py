@@ -6,6 +6,18 @@ the conditioning reward supplied by the requested memory budget — and emits
 micro-batch a_t; the environment updates s_{t+1}/r_{t+1}.  One rollout
 (= N+1 tiny forward passes) replaces an entire 2k-sample search, which is
 the 66x-127x speed claim benchmarked in ``benchmarks/speed_oneshot.py``.
+
+Two implementations (DESIGN.md §9):
+ - the host reference ``_rollout``: a Python loop that re-runs a jitted
+   full-sequence forward and a full cost-model evaluation per step, with
+   NumPy round-trips — kept as the readable oracle;
+ - the device-resident ``dnnfuser_infer_fused``: one jitted
+   ``jax.lax.scan`` fusing KV-cached single-token decode, the O(1)
+   ``prefix_step`` environment transition and a ``lax.while_loop``
+   halve-or-sync budget guard — zero host syncs inside the episode.
+   ``dnnfuser_infer_batch`` vmaps it over a stacked batch of
+   (batch, budget) serving conditions in one device call — the serving
+   primitive ``examples/serve_mapper.py`` and the benchmarks fan out over.
 """
 from __future__ import annotations
 
@@ -17,12 +29,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .env import FusionEnv, STATE_DIM, decode_action, encode_action
-from .model import DTConfig, dt_apply
-from .seq2seq import S2SConfig, s2s_apply
+from .env import (FusionEnv, STATE_DIM, decode_action, encode_action,
+                  decode_action_jnp, encode_action_jnp, env_make,
+                  env_observe, env_reset, env_step, env_final)
+from .model import DTConfig, dt_apply, dt_cache_init, dt_prefill, dt_decode_step
+from .seq2seq import S2SConfig, s2s_apply, s2s_stream_init, s2s_stream_step
+from .accel import AccelConfig
 from . import cost_model as cm
 
-__all__ = ["InferResult", "dnnfuser_infer", "s2s_infer"]
+__all__ = ["InferResult", "dnnfuser_infer", "s2s_infer",
+           "dnnfuser_infer_fused", "s2s_infer_fused", "dnnfuser_infer_batch"]
 
 
 @dataclass
@@ -88,10 +104,151 @@ def _rollout(forward, params, cfg, env: FusionEnv, *, repair: bool) -> InferResu
 
 def dnnfuser_infer(params, cfg: DTConfig, env: FusionEnv, *,
                    repair: bool = True) -> InferResult:
-    """Conditional autoregressive inference of DNNFuser."""
+    """Conditional autoregressive inference of DNNFuser (host reference)."""
     return _rollout(_dt_forward, params, cfg, env, repair=repair)
 
 
 def s2s_infer(params, cfg: S2SConfig, env: FusionEnv, *,
               repair: bool = True) -> InferResult:
     return _rollout(_s2s_forward, params, cfg, env, repair=repair)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident fused rollout (DESIGN.md §9).
+# ---------------------------------------------------------------------------
+
+
+def _model_iface(kind: str, params, cfg):
+    """(init, prefill, step) closures with a uniform pytree model state."""
+    if kind == "dt":
+        return (lambda: dt_cache_init(cfg),
+                lambda st, r, s: dt_prefill(params, cfg, st, r[None], s[None]),
+                lambda st, r, s, ap: dt_decode_step(params, cfg, st, r[None],
+                                                    s[None], ap[None]))
+    if kind == "s2s":
+        def prefill(st, r, s):
+            return s2s_stream_step(params, cfg, st, r[None], s[None],
+                                   jnp.zeros((1,), jnp.float32))
+        return (lambda: s2s_stream_init(cfg),
+                prefill,
+                lambda st, r, s, ap: s2s_stream_step(params, cfg, st, r[None],
+                                                     s[None], ap[None]))
+    raise ValueError(kind)
+
+
+def _fused_episode(params, cfg, wl, batch, budget_bytes, hw: AccelConfig,
+                   repair: bool, kind: str) -> dict:
+    """One (workload, batch, budget) episode, fully traced.
+
+    All control flow the host loop does in Python — the per-step env
+    observation, the model call, the halve-or-sync budget guard and the env
+    transition — runs inside one ``lax.scan`` (guard: ``lax.while_loop``),
+    so the episode lowers to a single device program with no host syncs.
+    """
+    consts = env_make(wl, batch, budget_bytes, hw)
+    B, budget, n = consts.B, consts.budget, consts.n
+    P = wl["A"].shape[0]
+    minit, mprefill, mstep = _model_iface(kind, params, cfg)
+
+    def guard(carry, a):
+        """The host probe loop: shrink / sync until the staged prefix plus
+        an all-SYNC suffix fits the budget (paper's inference-time
+        constraint guard).  Probes via the peak-only fast path."""
+        def cond(av):
+            return (av >= 1) & (cm.prefix_probe_peak(consts.pc, carry, av,
+                                                     hw) > budget)
+        def body(av):
+            return jnp.where(av > 1, av // 2, jnp.int32(cm.SYNC))
+        return jax.lax.while_loop(cond, body, a)
+
+    # --- t = 0: prefill (r_0, s_0); the input micro-batch cannot sync ------
+    carry0 = env_reset(consts)
+    r0, s0 = env_observe(consts, carry0, hw)
+    pred0, mstate = mprefill(minit(), r0, s0)
+    a0 = jnp.maximum(decode_action_jnp(pred0[0], B), 1)
+    carry = env_step(consts, carry0, a0, hw)
+    actions = jnp.full((P,), cm.SYNC, jnp.int32).at[0].set(a0)
+
+    def step(sc, t):
+        carry, mstate, a_prev, actions = sc
+        active = t <= n
+        r_t, s_t = env_observe(consts, carry, hw)
+        pred, mstate = mstep(mstate, r_t, s_t, encode_action_jnp(a_prev, B))
+        a = decode_action_jnp(pred[0], B)
+        if repair:
+            a = guard(carry, a)
+        a = jnp.where(active, a, jnp.int32(cm.SYNC))
+        new_carry = env_step(consts, carry, a, hw)
+        carry = cm._tree_select(active, new_carry, carry)
+        actions = actions.at[t].set(a)
+        a_prev = jnp.where(active, a, a_prev)
+        return (carry, mstate, a_prev, actions), None
+
+    (carry, _, _, actions), _ = jax.lax.scan(
+        step, (carry, mstate, a0, actions), jnp.arange(1, P))
+    out = env_final(consts, carry, hw)
+    return dict(strategy=actions, latency=out.latency,
+                peak_mem=out.peak_mem, valid=out.valid,
+                speedup=consts.base_lat / jnp.maximum(out.latency, 1e-12),
+                baseline_latency=consts.base_lat)
+
+
+@partial(jax.jit, static_argnames=("cfg", "hw", "repair", "kind"))
+def _fused_one(params, cfg, wl, batch, budget_bytes, hw, repair, kind):
+    return _fused_episode(params, cfg, wl, batch, budget_bytes, hw,
+                          repair, kind)
+
+
+@partial(jax.jit, static_argnames=("cfg", "hw", "repair", "kind"))
+def _fused_batch(params, cfg, wl, batches, budgets, hw, repair, kind):
+    return jax.vmap(
+        lambda b, m: _fused_episode(params, cfg, wl, b, m, hw, repair, kind)
+    )(batches, budgets)
+
+
+def _fused_infer(kind, params, cfg, env: FusionEnv, repair) -> InferResult:
+    t0 = time.perf_counter()
+    out = _fused_one(params, cfg, env.wl, float(env.batch),
+                     float(env.budget_bytes), env.hw, repair, kind)
+    strat = np.asarray(out["strategy"])          # device sync = episode end
+    wall = time.perf_counter() - t0
+    return InferResult(strat, float(out["speedup"]), float(out["latency"]),
+                       float(out["peak_mem"]), bool(out["valid"]), wall,
+                       env.n + 1)
+
+
+def dnnfuser_infer_fused(params, cfg: DTConfig, env: FusionEnv, *,
+                         repair: bool = True) -> InferResult:
+    """Device-resident one-shot inference: emits the same strategy as
+    :func:`dnnfuser_infer` from a single jitted scan."""
+    return _fused_infer("dt", params, cfg, env, repair)
+
+
+def s2s_infer_fused(params, cfg: S2SConfig, env: FusionEnv, *,
+                    repair: bool = True) -> InferResult:
+    """Fused seq2seq rollout (streaming-encoder contract, see seq2seq)."""
+    return _fused_infer("s2s", params, cfg, env, repair)
+
+
+def dnnfuser_infer_batch(params, cfg: DTConfig, env_or_wl, batches,
+                         budgets_bytes, hw: AccelConfig | None = None, *,
+                         repair: bool = True) -> dict:
+    """Serve a stacked batch of (batch, budget) conditions in ONE device
+    call over a packed workload.
+
+    ``env_or_wl``: a FusionEnv (condition fields ignored) or a packed
+    workload dict from ``cost_model.pack_workload``.  ``batches`` and
+    ``budgets_bytes`` are same-length 1-D arrays; returns a dict of stacked
+    arrays (strategy [C, P] int32, latency/peak_mem/speedup/valid [C]).
+    This is the serving primitive the throughput benchmarks and
+    ``examples/serve_mapper.py`` fan out over."""
+    if isinstance(env_or_wl, FusionEnv):
+        wl, hw = env_or_wl.wl, env_or_wl.hw
+    else:
+        wl = env_or_wl
+        if hw is None:
+            raise ValueError("hw is required with a packed workload")
+    batches = jnp.asarray(batches, jnp.float32)
+    budgets = jnp.asarray(budgets_bytes, jnp.float32)
+    out = _fused_batch(params, cfg, wl, batches, budgets, hw, repair, "dt")
+    return {k: np.asarray(v) for k, v in out.items()}

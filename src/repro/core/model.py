@@ -21,7 +21,8 @@ import jax.numpy as jnp
 from .. import nn
 from .env import STATE_DIM
 
-__all__ = ["DTConfig", "dt_init", "dt_apply", "dt_loss"]
+__all__ = ["DTConfig", "dt_init", "dt_apply", "dt_loss", "dt_cache_init",
+           "dt_prefill", "dt_decode_step"]
 
 
 @dataclass(frozen=True)
@@ -84,6 +85,75 @@ def dt_apply(params: dict, cfg: DTConfig, rtg: jax.Array, states: jax.Array,
     x = nn.layernorm_apply(params["ln_f"], x)
     s_tok = x.reshape(B, T, 3, d)[:, :, 1]       # state-token outputs
     return nn.dense_apply(params["head"], s_tok)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# KV-cached single-token decode (DESIGN.md §9).
+#
+# One autoregressive step of ``dt_apply`` re-run over the full
+# ``3 * max_steps`` token sequence costs O(T^2); with a per-block KV cache a
+# step appends at most 3 tokens — (a_{t-1}, r_t, s_t) — and attends over the
+# cached prefix, so an episode is O(T) per step and the whole rollout fits
+# in one ``jax.lax.scan`` (see ``infer``).  Matches ``dt_apply`` logits to
+# float32 round-off because the math and causal mask are identical.
+# ---------------------------------------------------------------------------
+
+
+def dt_cache_init(cfg: DTConfig, batch: int = 1) -> list:
+    """Per-block KV caches over the flat (r, s, a) token stream."""
+    return [nn.attention.init_kv_cache(batch, 3 * cfg.max_steps,
+                                       cfg.n_heads, cfg.head_dim,
+                                       dtype=cfg.dtype)
+            for _ in range(cfg.n_blocks)]
+
+
+def _dt_blocks_cached(params: dict, cfg: DTConfig, x: jax.Array,
+                      caches: list):
+    new_caches = []
+    for blk, cch in zip(params["blocks"], caches):
+        x, cch, _ = nn.block_apply(blk, x, n_heads=cfg.n_heads,
+                                   kv_heads=cfg.n_heads,
+                                   head_dim=cfg.head_dim, mlp_kind="gelu",
+                                   norm="layer", causal=True, cache=cch)
+        new_caches.append(cch)
+    x = nn.layernorm_apply(params["ln_f"], x)
+    return nn.dense_apply(params["head"], x)[..., 0], new_caches
+
+
+def dt_prefill(params: dict, cfg: DTConfig, cache: list, r0: jax.Array,
+               s0: jax.Array):
+    """Start an episode: feed (r_0, s_0), predict a_0.
+
+    r0 [B], s0 [B, STATE_DIM] -> (pred_a0 [B], cache)."""
+    typ = params["type"]["emb"]
+    time0 = nn.embedding_apply(params["time"], jnp.asarray(0))
+    tok_r = nn.dense_apply(params["emb_r"], r0[..., None]) + typ[0] + time0
+    tok_s = nn.dense_apply(params["emb_s"], s0) + typ[1] + time0
+    preds, cache = _dt_blocks_cached(params, cfg,
+                                     jnp.stack([tok_r, tok_s], axis=1), cache)
+    return preds[:, 1], cache
+
+
+def dt_decode_step(params: dict, cfg: DTConfig, cache: list, r_t: jax.Array,
+                   s_t: jax.Array, a_prev: jax.Array):
+    """One decode step t >= 1: append (a_{t-1}, r_t, s_t), predict a_t.
+
+    ``a_prev`` is the *encoded* action chosen at step t-1 (see
+    ``env.encode_action``); the step index is recovered from the cache write
+    position (idx == 3t - 1), so the caller only threads the cache pytree.
+    Returns (pred_a_t [B], cache)."""
+    idx = cache[0]["idx"]
+    t = (idx + 1) // 3
+    typ = params["type"]["emb"]
+    time_prev = nn.embedding_apply(params["time"], t - 1)
+    time_t = nn.embedding_apply(params["time"], t)
+    tok_a = (nn.dense_apply(params["emb_a"], a_prev[..., None])
+             + typ[2] + time_prev)
+    tok_r = nn.dense_apply(params["emb_r"], r_t[..., None]) + typ[0] + time_t
+    tok_s = nn.dense_apply(params["emb_s"], s_t) + typ[1] + time_t
+    preds, cache = _dt_blocks_cached(
+        params, cfg, jnp.stack([tok_a, tok_r, tok_s], axis=1), cache)
+    return preds[:, 2], cache
 
 
 def dt_loss(params: dict, cfg: DTConfig, batch: dict) -> jax.Array:

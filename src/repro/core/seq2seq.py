@@ -17,7 +17,9 @@ import jax.numpy as jnp
 from .. import nn
 from .env import STATE_DIM
 
-__all__ = ["S2SConfig", "s2s_init", "s2s_apply", "s2s_loss"]
+__all__ = ["S2SConfig", "s2s_init", "s2s_apply", "s2s_loss", "s2s_encode",
+           "s2s_decode_start", "s2s_decode_step", "s2s_stream_init",
+           "s2s_stream_step"]
 
 
 @dataclass(frozen=True)
@@ -33,14 +35,19 @@ def _lstm_init(key, d_in, d_h, dtype):
             "wh": nn.dense_init(k2, d_h, 4 * d_h, bias=False, dtype=dtype)}
 
 
+def _lstm_cell(p, x, h, c):
+    """One LSTM step: x [B,d_in], (h, c) [B,d_h] -> (h, c)."""
+    z = nn.dense_apply(p["wx"], x) + nn.dense_apply(p["wh"], h)
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
 def _lstm_scan(p, xs, h0, c0):
     """xs [B,T,d_in] -> outputs [B,T,d_h], final (h, c)."""
     def cell(carry, x):
-        h, c = carry
-        z = nn.dense_apply(p["wx"], x) + nn.dense_apply(p["wh"], h)
-        i, f, g, o = jnp.split(z, 4, axis=-1)
-        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
-        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        h, c = _lstm_cell(p, x, *carry)
         return (h, c), h
     (h, c), ys = jax.lax.scan(cell, (h0, c0), jnp.swapaxes(xs, 0, 1))
     return jnp.swapaxes(ys, 0, 1), (h, c)
@@ -79,6 +86,85 @@ def s2s_apply(params: dict, cfg: S2SConfig, rtg: jax.Array,
     out = nn.dense_apply(params["head2"],
                          jax.nn.relu(nn.dense_apply(params["head1"], ys)))
     return out[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# Incremental decode (DESIGN.md §9).
+#
+# The LSTM analogue of a KV cache is the recurrent (h, c) state.  Two entry
+# points:
+#  - exact: ``s2s_encode`` runs the full encoder once (known condition
+#    sequence), then ``s2s_decode_step`` replays the teacher-forced decoder
+#    cell-by-cell — bit-equal to ``s2s_apply``.
+#  - streaming: ``s2s_stream_step`` for the device-resident rollout, where
+#    future states do not exist yet.  The encoder LSTM advances alongside
+#    the decoder and seeds it at t=0.  (The host rollout instead re-encodes
+#    a zero-padded sequence every step; neither matches teacher forcing
+#    exactly — the condition sequence is generated on the fly — so the
+#    streaming form is the documented serving contract.)
+# ---------------------------------------------------------------------------
+
+
+def _enc_in(params, r_t, s_t):
+    x = jnp.concatenate([s_t, r_t[..., None]], -1)
+    return jax.nn.relu(nn.dense_apply(params["enc_fc"],
+                                      jax.nn.relu(nn.dense_apply(params["enc_in"], x))))
+
+
+def _dec_in(params, r_t, s_t, a_prev):
+    x = jnp.concatenate([s_t, r_t[..., None], a_prev[..., None]], -1)
+    return jax.nn.relu(nn.dense_apply(params["dec_fc"],
+                                      jax.nn.relu(nn.dense_apply(params["dec_in"], x))))
+
+
+def _head(params, h):
+    return nn.dense_apply(params["head2"],
+                          jax.nn.relu(nn.dense_apply(params["head1"], h)))[..., 0]
+
+
+def s2s_encode(params: dict, cfg: S2SConfig, rtg: jax.Array,
+               states: jax.Array):
+    """Full-sequence encoder, identical to the one inside ``s2s_apply``."""
+    B = rtg.shape[0]
+    h = _enc_in(params, rtg, states)
+    h0 = jnp.zeros((B, cfg.hidden), rtg.dtype)
+    _, (he, ce) = _lstm_scan(params["enc_lstm"], h, h0, h0)
+    return he, ce
+
+
+def s2s_decode_start(enc_state) -> dict:
+    he, ce = enc_state
+    return {"h": he, "c": ce}
+
+
+def s2s_decode_step(params: dict, cfg: S2SConfig, cache: dict,
+                    r_t: jax.Array, s_t: jax.Array, a_prev: jax.Array):
+    """One decoder cell step; exact replay of teacher-forced ``s2s_apply``
+    when seeded from ``s2s_encode``.  Returns (pred [B], cache)."""
+    g = _dec_in(params, r_t, s_t, a_prev)
+    h, c = _lstm_cell(params["dec_lstm"], g, cache["h"], cache["c"])
+    return _head(params, h), {"h": h, "c": c}
+
+
+def s2s_stream_init(cfg: S2SConfig, batch: int = 1,
+                    dtype=jnp.float32) -> dict:
+    z = jnp.zeros((batch, cfg.hidden), dtype)
+    return {"eh": z, "ec": z, "h": z, "c": z, "t": jnp.zeros((), jnp.int32)}
+
+
+def s2s_stream_step(params: dict, cfg: S2SConfig, cache: dict,
+                    r_t: jax.Array, s_t: jax.Array, a_prev: jax.Array):
+    """Streaming decode for on-the-fly rollouts: advance the encoder on
+    (s_t, r_t), seed the decoder from it at t=0, step the decoder."""
+    ex = _enc_in(params, r_t, s_t)
+    eh, ec = _lstm_cell(params["enc_lstm"], ex, cache["eh"], cache["ec"])
+    first = cache["t"] == 0
+    h = jnp.where(first, eh, cache["h"])
+    c = jnp.where(first, ec, cache["c"])
+    pred, dc = s2s_decode_step(params, cfg, {"h": h, "c": c},
+                               r_t, s_t, a_prev)
+    return pred, {"eh": eh, "ec": ec, "h": dc["h"], "c": dc["c"],
+                  "t": cache["t"] + 1}
 
 
 def s2s_loss(params: dict, cfg: S2SConfig, batch: dict) -> jax.Array:
