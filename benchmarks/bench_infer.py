@@ -17,7 +17,15 @@ regress:
 Weights are random-init (timing does not depend on training); all numbers
 are post-jit steady-state medians.
 
+``--check BASELINE.json`` turns the harness into a regression GATE: after
+timing, the fused-rollout and batched-serving latencies are compared
+per-workload against the committed baseline and the process exits non-zero
+if any exceeds ``--tol`` x baseline — the CI perf job runs
+``--quick --check BENCH_infer.json`` so a fused-path regression fails the
+build instead of hiding in a JSON artifact.
+
     PYTHONPATH=src python benchmarks/bench_infer.py [--quick] [--out PATH]
+        [--check BASELINE.json] [--tol 2.5]
 """
 from __future__ import annotations
 
@@ -110,13 +118,74 @@ def run(quick: bool = False, out: str = "BENCH_infer.json") -> dict:
     return report
 
 
+GATED_METRICS = ("fused_ms", "batch_ms_per_condition")
+
+
+def check_regression(report: dict, baseline_path: str, tol: float) -> list:
+    """Compare ``report`` to the committed baseline; returns a list of
+    human-readable failures (empty = gate passes).
+
+    Only the device-resident serving metrics are gated (``GATED_METRICS``);
+    the host-reference path is informational.  ``tol`` is a ratio — CI
+    machines differ from the machine that wrote the baseline, so the gate
+    catches order-of-magnitude regressions (a lost jit cache, an accidental
+    host sync in the scan), not single-percent noise."""
+    base = json.loads(pathlib.Path(baseline_path).read_text())
+    if base.get("quick") != report.get("quick"):
+        # quick and full runs amortize dispatch overhead over different
+        # condition counts — comparing across modes quietly skews the margin
+        return [f"baseline {baseline_path} was written with "
+                f"quick={base.get('quick')} but this run used "
+                f"quick={report.get('quick')}; regenerate the baseline in "
+                f"the same mode"]
+    by_wl = {r["workload"]: r for r in base.get("results", [])}
+    failures, compared = [], 0
+    for row in report["results"]:
+        ref = by_wl.get(row["workload"])
+        if ref is None:
+            continue
+        for metric in GATED_METRICS:
+            if metric not in ref:
+                continue
+            compared += 1
+            new, old = row[metric], ref[metric]
+            if new > old * tol:
+                failures.append(
+                    f"{row['workload']}.{metric}: {new:.2f} ms > "
+                    f"{tol:.1f}x baseline {old:.2f} ms")
+    if compared == 0:
+        # a gate that compares nothing must not go green: a renamed
+        # workload / truncated baseline would otherwise disable the gate
+        failures.append(
+            f"no comparable (workload, metric) pairs between this run and "
+            f"{baseline_path} — regenerate the baseline")
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fewer reps / conditions (CI smoke)")
     ap.add_argument("--out", default="BENCH_infer.json")
+    ap.add_argument("--check", metavar="BASELINE",
+                    help="fail (exit 1) if serving latency regresses more "
+                         "than --tol x this baseline JSON")
+    ap.add_argument("--tol", type=float, default=2.5,
+                    help="allowed ratio vs the baseline (default 2.5)")
     args = ap.parse_args()
-    run(quick=args.quick, out=args.out)
+    if args.check and pathlib.Path(args.out).resolve() == \
+            pathlib.Path(args.check).resolve():
+        args.out = "artifacts/bench/BENCH_infer_check.json"
+        pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    report = run(quick=args.quick, out=args.out)
+    if args.check:
+        failures = check_regression(report, args.check, args.tol)
+        if failures:
+            print("PERF REGRESSION vs", args.check)
+            for f in failures:
+                print("  ", f)
+            raise SystemExit(1)
+        print(f"perf gate OK (tol {args.tol}x vs {args.check})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,84 @@
+"""Teacher-corpus generation benchmark (DESIGN.md §10).
+
+Times the two corpus pipelines over the same (workload x budget) condition
+grid and writes ``BENCH_teacher.json``:
+
+ - ``host_s``: ``collect_teacher_data`` — one host GA per condition (each
+   generation is a vmapped fitness call, but selection/mutation/repair
+   round-trip through NumPy and conditions run serially);
+ - ``grid_s``: ``generate_teacher_corpus`` — ONE jitted GA program over the
+   whole grid plus ONE fused decoration program (``compile_s`` is reported
+   separately: the program is condition-count-polymorphic only in data, so
+   production sweeps amortize it).
+
+    PYTHONPATH=src python benchmarks/bench_teacher.py [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+from repro.core import (GSamplerConfig, PAPER_ACCEL, collect_teacher_data,
+                        generate_teacher_corpus)
+from repro.workloads import resnet18, vgg16
+
+
+def run(quick: bool = False, out: str = "BENCH_teacher.json") -> dict:
+    workloads = [vgg16(), resnet18()]
+    budgets = [12.0, 24.0] if quick else [8.0, 16.0, 24.0, 32.0, 48.0, 64.0]
+    gens = 10 if quick else 50
+    cfg = GSamplerConfig(generations=gens, seed=0)
+    nmax = 20
+    n_cond = len(workloads) * len(budgets)
+
+    t0 = time.perf_counter()
+    ds_grid = generate_teacher_corpus(
+        workloads, PAPER_ACCEL, batch=64, budgets_mb=budgets, max_steps=nmax,
+        ga_cfg=cfg, seed=0)
+    t_grid_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    generate_teacher_corpus(
+        workloads, PAPER_ACCEL, batch=64, budgets_mb=budgets, max_steps=nmax,
+        ga_cfg=cfg, seed=0)
+    t_grid = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ds_host = collect_teacher_data(
+        workloads, PAPER_ACCEL, batch=64, budgets_mb=budgets, max_steps=nmax,
+        ga_cfg=cfg, seed=0)
+    t_host = time.perf_counter() - t0
+
+    report = {
+        "bench": "teacher",
+        "quick": quick,
+        "n_conditions": n_cond,
+        "generations": gens,
+        "host_s": t_host,
+        "grid_s": t_grid,
+        "grid_compile_s": t_grid_cold - t_grid,
+        "grid_speedup_x": t_host / t_grid,
+        "host_trajectories": len(ds_host),
+        "grid_trajectories": len(ds_grid),
+    }
+    print(f"{n_cond} conditions x {gens} gens: host {t_host:6.1f} s | grid "
+          f"{t_grid:6.1f} s ({report['grid_speedup_x']:.1f}x, "
+          f"+{report['grid_compile_s']:.1f} s one-time compile) | "
+          f"{len(ds_host)} vs {len(ds_grid)} trajectories")
+    path = pathlib.Path(out)
+    path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {path}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_teacher.json")
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,30 +1,87 @@
-"""End-to-end training driver with the fusion mapper in the loop.
+"""End-to-end training driver with a LEARNED fusion mapper in the loop.
 
     PYTHONPATH=src python examples/train_with_mapper.py [--arch gemma3_1b]
 
-The arch is lowered to a fusion workload; the mapper picks the input
-micro-batch under an activation budget; the trainer uses it as the
-gradient-accumulation micro-batch; the loop checkpoints asynchronously and
-resumes if re-run (kill it mid-way and run again to see).  On real TPU
-hardware drop ``--reduced`` and raise the sizes — this is the same
-``launch/train.py`` path the dry-run lowers for the 16x16 mesh.
+Stage 1 trains the DNNFuser mapper itself for this arch: the arch is
+lowered to an LM-block fusion workload, the device-grid G-Sampler teacher
+sweeps a grid of activation budgets in one fused program
+(``generate_teacher_corpus``), and the sharded imitation trainer fits the
+decision transformer, checkpointing under ``artifacts/mapper_<arch>`` —
+re-runs warm-start from the checkpoint instead of retraining.
+
+Stage 2 is the original driver: the (now learned) mapper one-shot-infers
+the input micro-batch under the activation budget, the trainer uses it as
+the gradient-accumulation micro-batch, and the loop checkpoints
+asynchronously and resumes if re-run (kill it mid-way and run again to
+see).  On real TPU hardware drop ``--reduced`` and raise the sizes — this
+is the same ``launch/train.py`` path the dry-run lowers for the 16x16 mesh.
 """
 import argparse
 
+import jax
+
+from repro.checkpoint import Checkpointer
+from repro.core import (DTConfig, GSamplerConfig, PAPER_ACCEL, TrainConfig,
+                        dt_init, dt_loss, generate_teacher_corpus,
+                        restore_params, train_model)
+from repro.configs import get_config
+from repro.distributed.sharding import data_parallel_mesh
 from repro.launch.train import train
+from repro.workloads.lm_workloads import lm_workload
+
+
+def train_mapper(arch: str, *, seq_len: int, global_batch: int,
+                 ckpt_dir: str, steps: int = 400):
+    """Teacher-corpus -> sharded imitation training for one arch's LM
+    workload; resumes from ``ckpt_dir`` when already trained."""
+    cfg = get_config(arch, reduced=True)
+    wl = lm_workload(cfg, seq_len=seq_len, batch=global_batch, mode="train")
+    T = max(16, wl.n + 1)
+    dt_cfg = DTConfig(max_steps=T)
+    if (Checkpointer(ckpt_dir).latest_step() or 0) >= steps:
+        # fully trained: skip the (expensive) teacher GA entirely
+        params = restore_params(ckpt_dir,
+                                dt_init(jax.random.PRNGKey(0), dt_cfg))
+        print(f"[mapper-train] checkpoint {ckpt_dir} complete; reusing it")
+        return params, dt_cfg
+    corpus = generate_teacher_corpus(
+        [wl], PAPER_ACCEL, batch=global_batch,
+        budgets_mb=[4.0, 8.0, 16.0, 24.0, 48.0],
+        max_steps=T, ga_cfg=GSamplerConfig(generations=25, seed=0), seed=0)
+    params, log = train_model(
+        lambda p, b: dt_loss(p, dt_cfg, b),
+        dt_init(jax.random.PRNGKey(0), dt_cfg), corpus,
+        TrainConfig(steps=steps, batch_size=32, log_every=100,
+                    ckpt_every=steps // 2),
+        mesh=data_parallel_mesh(), ckpt_dir=ckpt_dir)
+    print(f"[mapper-train] {len(corpus)} teacher trajectories, "
+          f"resumed from step {log['start_step']}, "
+          f"final loss {log['final_loss'] if log['losses'] else 'cached'}")
+    return params, dt_cfg
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3_1b")
     ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--gsampler", action="store_true",
+                    help="skip mapper training; fall back to a fresh "
+                         "G-Sampler search (the teacher)")
     args = ap.parse_args()
+
+    dt_params = dt_cfg = None
+    if not args.gsampler:
+        dt_params, dt_cfg = train_mapper(
+            args.arch, seq_len=128, global_batch=8,
+            ckpt_dir=f"artifacts/mapper_{args.arch}")
 
     loop, info = train(args.arch, steps=args.steps, global_batch=8,
                        seq_len=128, reduced=True,
                        ckpt_dir=f"artifacts/example_train_{args.arch}",
-                       use_mapper=True, act_budget_mb=8.0)
-    print(f"\nmapper chose micro_batch={info['micro_batch']} "
+                       use_mapper=True, act_budget_mb=8.0,
+                       dt_params=dt_params, dt_cfg=dt_cfg)
+    src = "G-Sampler search" if dt_params is None else "one-shot DNNFuser"
+    print(f"\nmapper ({src}) chose micro_batch={info['micro_batch']} "
           f"(grad_accum={info['grad_accum']}), modeled fusion speedup "
           f"{info['speedup']:.2f}x")
     print("loss curve:", [(s, round(l, 3)) for s, l in loop.losses])

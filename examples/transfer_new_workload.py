@@ -1,42 +1,65 @@
 """Transfer learning (paper §5.4): adapt the general mapper to a NEW
-workload with 10% of the training.
+workload with ~10% of the training, warm-started from a checkpoint.
 
     PYTHONPATH=src python examples/transfer_new_workload.py
+
+Pre-training uses the device-grid teacher (one fused GA program over the
+VGG16/ResNet18 x budget grid) and the sharded imitation trainer, and
+checkpoints under ``artifacts/transfer_pretrain`` — re-runs skip straight
+to fine-tuning.  ``fine_tune`` then warm-starts from that checkpoint on an
+MnasNet corpus with unseen budget conditions.
 """
 import jax
 
-from repro.core import (DTConfig, FusionEnv, PAPER_ACCEL, TrainConfig,
-                        collect_teacher_data, dnnfuser_infer, dt_init,
-                        dt_loss, gsampler_search, train_model)
+from repro.checkpoint import Checkpointer
+from repro.core import (DTConfig, FusionEnv, GSamplerConfig, PAPER_ACCEL,
+                        TrainConfig, dnnfuser_infer_fused, dt_init, dt_loss,
+                        fine_tune, generate_teacher_corpus, gsampler_search,
+                        train_model)
+from repro.distributed.sharding import data_parallel_mesh
 from repro.workloads import mnasnet_b1, resnet18, vgg16
 
 MB = 2 ** 20
 T = 56
+CKPT = "artifacts/transfer_pretrain"
 
 
 def main():
-    print("pre-training the general mapper on VGG16 + ResNet18 ...")
-    ds_gen = collect_teacher_data([vgg16(), resnet18()], PAPER_ACCEL,
-                                  batch=64, budgets_mb=[16, 32, 48, 64],
-                                  max_steps=T)
     cfg = DTConfig(max_steps=T)
-    params = dt_init(jax.random.PRNGKey(0), cfg)
-    params, _ = train_model(lambda p, b: dt_loss(p, cfg, b), params, ds_gen,
-                            TrainConfig(steps=300, batch_size=16))
+    loss_fn = lambda p, b: dt_loss(p, cfg, b)
+    mesh = data_parallel_mesh()
+
+    print("pre-training the general mapper on VGG16 + ResNet18 "
+          "(grid teacher, sharded trainer; resumes from checkpoint) ...")
+    if (Checkpointer(CKPT).latest_step() or 0) >= 300:
+        print(f"  checkpoint {CKPT} complete; skipping teacher + training")
+    else:
+        ds_gen = generate_teacher_corpus(
+            [vgg16(), resnet18()], PAPER_ACCEL, batch=64,
+            budgets_mb=[16, 32, 48, 64], max_steps=T, seed=0)
+        _, log = train_model(
+            loss_fn, dt_init(jax.random.PRNGKey(0), cfg), ds_gen,
+            TrainConfig(steps=300, batch_size=16, ckpt_every=150),
+            mesh=mesh, ckpt_dir=CKPT)
+        print(f"  {len(ds_gen)} teacher trajectories; "
+              f"start_step={log['start_step']}, "
+              f"final loss {log['final_loss']}")
 
     print("transfer: fine-tuning on MnasNet with 10% of the steps ...")
     wl = mnasnet_b1()
-    ds_new = collect_teacher_data([wl], PAPER_ACCEL, batch=64,
-                                  budgets_mb=[25, 45], max_steps=T)
-    params, log = train_model(lambda p, b: dt_loss(p, cfg, b), params,
-                              ds_new, TrainConfig(steps=30, batch_size=16,
-                                                  lr=1e-4))
+    ds_new = generate_teacher_corpus([wl], PAPER_ACCEL, batch=64,
+                                     budgets_mb=[25, 45], max_steps=T,
+                                     seed=1)
+    params, log = fine_tune(
+        loss_fn, CKPT, ds_new,
+        TrainConfig(steps=30, batch_size=16, lr=1e-4, warmup=5),
+        template=dt_init(jax.random.PRNGKey(0), cfg), mesh=mesh)
     print(f"fine-tune loss {log['final_loss']:.4f} in {log['wall_s']:.0f}s")
 
     for cond in (25.0, 35.0, 55.0):
         env = FusionEnv(wl, PAPER_ACCEL, batch=64, budget_bytes=cond * MB,
                         nmax=T)
-        df = dnnfuser_infer(params, cfg, env)
+        df = dnnfuser_infer_fused(params, cfg, env)
         gs = gsampler_search(env)
         print(f"  {cond:4.0f}MB: Transfer-DF "
               f"{df.speedup:5.2f}x (valid={df.valid})  vs  GS full search "

@@ -1,3 +1,5 @@
-from .checkpointer import Checkpointer, save_pytree, restore_pytree
+from .checkpointer import (Checkpointer, save_pytree, restore_pytree,
+                           restore_subtree)
 
-__all__ = ["Checkpointer", "save_pytree", "restore_pytree"]
+__all__ = ["Checkpointer", "save_pytree", "restore_pytree",
+           "restore_subtree"]

@@ -24,7 +24,8 @@ import threading
 import jax
 import numpy as np
 
-__all__ = ["Checkpointer", "save_pytree", "restore_pytree"]
+__all__ = ["Checkpointer", "save_pytree", "restore_pytree",
+           "restore_subtree"]
 
 
 def _flatten(tree):
@@ -65,6 +66,30 @@ def save_pytree(tree, path: pathlib.Path):
     tmp.rename(path)
 
 
+def _rebuild(arrays: dict, template, *, shardings=None):
+    """Fill ``template``'s structure from a flat {path: ndarray} dict in
+    template flatten order, casting to template leaf dtypes (bf16 etc.) and
+    optionally placing leaves sharded — the ONE template-rebuild path, used
+    by both ``restore_pytree`` and ``restore_subtree``."""
+    import jax.numpy as jnp
+    keyed, _ = _flatten(template)
+    _, treedef = jax.tree_util.tree_flatten(template)
+    flat_sh = None
+    if shardings is not None:
+        flat_sh, _ = jax.tree_util.tree_flatten(
+            shardings, is_leaf=lambda x: hasattr(x, "spec"))
+    restored = []
+    for i, (k, tmpl_leaf) in enumerate(keyed.items()):
+        arr = arrays[k]
+        tmpl_dtype = getattr(tmpl_leaf, "dtype", np.asarray(tmpl_leaf).dtype)
+        if str(arr.dtype) != str(tmpl_dtype):
+            arr = jnp.asarray(arr).astype(tmpl_dtype)  # handles bf16 etc.
+        if flat_sh is not None:
+            arr = jax.device_put(arr, flat_sh[i])
+        restored.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
 def restore_pytree(path: pathlib.Path, template=None, *, shardings=None,
                    verify: bool = True):
     """Restore; with ``template`` the exact pytree structure/dtypes are
@@ -86,27 +111,25 @@ def restore_pytree(path: pathlib.Path, template=None, *, shardings=None,
 
     if template is None:
         return arrays
-    keyed, treedef = _flatten(template)
-    leaves_sorted = sorted(keyed)
-    assert set(leaves_sorted) == set(arrays), "checkpoint/template mismatch"
-    flat_template, treedef = jax.tree_util.tree_flatten(template)
-    # rebuild in template order
-    keyed2, _ = _flatten(template)
-    ordered = [arrays[k] for k in keyed2]  # dict preserves flatten order
-    restored = []
-    if shardings is not None:
-        flat_sh, _ = jax.tree_util.tree_flatten(
-            shardings, is_leaf=lambda x: hasattr(x, "spec"))
-    import jax.numpy as jnp
-    for i, (k, tmpl_leaf) in enumerate(keyed2.items()):
-        tmpl_dtype = getattr(tmpl_leaf, "dtype", np.asarray(tmpl_leaf).dtype)
-        arr = arrays[k]
-        if str(arr.dtype) != str(tmpl_dtype):
-            arr = jnp.asarray(arr).astype(tmpl_dtype)  # handles bf16 etc.
-        if shardings is not None:
-            arr = jax.device_put(arr, flat_sh[i])
-        restored.append(arr)
-    return jax.tree_util.tree_unflatten(treedef, restored)
+    keyed, _ = _flatten(template)
+    assert set(keyed) == set(arrays), "checkpoint/template mismatch"
+    return _rebuild(arrays, template, shardings=shardings)
+
+
+def restore_subtree(path: pathlib.Path, prefix: str, template, *,
+                    verify: bool = True):
+    """Restore only the leaves under ``<prefix>/`` into ``template``'s
+    structure — e.g. warm-starting params from a {params, opt_state}
+    training checkpoint without reconstructing the optimizer pytree."""
+    arrays = restore_pytree(path, None, verify=verify)
+    keyed, _ = _flatten(template)
+    sub = {}
+    for k in keyed:
+        key = f"{prefix}/{k}"
+        if key not in arrays:
+            raise KeyError(f"checkpoint {path} has no leaf {key}")
+        sub[k] = arrays[key]
+    return _rebuild(sub, template)
 
 
 class Checkpointer:
@@ -120,6 +143,14 @@ class Checkpointer:
 
     def _dir(self, step: int) -> pathlib.Path:
         return self.root / f"ckpt_{step:08d}"
+
+    def path(self, step: int | None = None) -> pathlib.Path:
+        """Directory of checkpoint ``step`` (default: latest).  The public
+        step->path mapping for partial restores (``restore_subtree``)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.root}")
+        return self._dir(step)
 
     def steps(self) -> list[int]:
         return sorted(int(p.name.split("_")[1]) for p in self.root.iterdir()

@@ -9,14 +9,16 @@ one-shot conditional inference (infer).
 from .accel import AccelConfig, PAPER_ACCEL
 from .cost_model import (SYNC, CostOut, evaluate, evaluate_population,
                          evaluate_population_stats, baseline_no_fusion,
-                         prefix_trace, pack_workload, PrefixConsts,
-                         PrefixCarry, prefix_consts, prefix_init,
-                         prefix_step, prefix_out, prefix_probe_peak,
-                         prefix_scan)
+                         prefix_trace, pack_workload, stack_workloads,
+                         PrefixConsts, PrefixCarry, prefix_consts,
+                         prefix_init, prefix_step, prefix_out,
+                         prefix_probe_peak, prefix_scan, evaluate_grid,
+                         evaluate_grid_stats, baseline_grid)
 from .env import (FusionEnv, STATE_DIM, encode_action, decode_action,
                   encode_action_jnp, decode_action_jnp, EnvConsts, env_make,
                   env_reset, env_observe, env_step, env_final)
-from .gsampler import GSamplerConfig, GSamplerResult, gsampler_search
+from .gsampler import (GSamplerConfig, GSamplerResult, gsampler_search,
+                       GridTeacherResult, gsampler_search_grid)
 from .baselines import BASELINE_METHODS, run_baseline, SearchResult
 from .a2c import a2c_search
 from .model import (DTConfig, dt_init, dt_apply, dt_loss, dt_cache_init,
@@ -24,8 +26,11 @@ from .model import (DTConfig, dt_init, dt_apply, dt_loss, dt_cache_init,
 from .seq2seq import (S2SConfig, s2s_init, s2s_apply, s2s_loss, s2s_encode,
                       s2s_decode_start, s2s_decode_step, s2s_stream_init,
                       s2s_stream_step)
-from .dataset import TrajectoryDataset, collect_teacher_data, merge_datasets
-from .train import TrainConfig, train_model, make_train_step
+from .dataset import (TrajectoryDataset, collect_teacher_data,
+                      merge_datasets, generate_teacher_corpus,
+                      window_dataset, returns_to_go)
+from .train import (TrainConfig, train_model, make_train_step, fine_tune,
+                    restore_params)
 from .infer import (InferResult, dnnfuser_infer, s2s_infer,
                     dnnfuser_infer_fused, s2s_infer_fused,
                     dnnfuser_infer_batch)
@@ -35,17 +40,21 @@ __all__ = [
     "evaluate_population", "evaluate_population_stats", "baseline_no_fusion",
     "prefix_trace", "pack_workload", "PrefixConsts", "PrefixCarry",
     "prefix_consts", "prefix_init", "prefix_step", "prefix_out",
-    "prefix_probe_peak", "prefix_scan", "FusionEnv", "STATE_DIM",
+    "prefix_probe_peak", "prefix_scan", "stack_workloads", "evaluate_grid",
+    "evaluate_grid_stats", "baseline_grid", "FusionEnv", "STATE_DIM",
     "encode_action",
     "decode_action", "encode_action_jnp", "decode_action_jnp", "EnvConsts",
     "env_make", "env_reset", "env_observe", "env_step", "env_final",
     "GSamplerConfig", "GSamplerResult", "gsampler_search",
+    "GridTeacherResult", "gsampler_search_grid",
     "BASELINE_METHODS", "run_baseline", "SearchResult", "a2c_search",
     "DTConfig", "dt_init", "dt_apply", "dt_loss", "dt_cache_init",
     "dt_prefill", "dt_decode_step", "S2SConfig", "s2s_init", "s2s_apply",
     "s2s_loss", "s2s_encode", "s2s_decode_start", "s2s_decode_step",
     "s2s_stream_init", "s2s_stream_step", "TrajectoryDataset",
-    "collect_teacher_data", "merge_datasets", "TrainConfig", "train_model",
-    "make_train_step", "InferResult", "dnnfuser_infer", "s2s_infer",
+    "collect_teacher_data", "merge_datasets", "generate_teacher_corpus",
+    "window_dataset", "returns_to_go", "TrainConfig", "train_model",
+    "make_train_step", "fine_tune", "restore_params", "InferResult",
+    "dnnfuser_infer", "s2s_infer",
     "dnnfuser_infer_fused", "s2s_infer_fused", "dnnfuser_infer_batch",
 ]

@@ -29,9 +29,10 @@ from .accel import AccelConfig
 
 __all__ = ["SYNC", "CostOut", "evaluate", "evaluate_population",
            "evaluate_population_stats", "baseline_no_fusion", "prefix_trace",
-           "pack_workload", "PrefixConsts", "PrefixCarry", "prefix_consts",
-           "prefix_init", "prefix_step", "prefix_out", "prefix_probe_peak",
-           "prefix_scan"]
+           "pack_workload", "stack_workloads", "PrefixConsts", "PrefixCarry",
+           "prefix_consts", "prefix_init", "prefix_step", "prefix_out",
+           "prefix_probe_peak", "prefix_scan", "evaluate_grid",
+           "evaluate_grid_stats", "baseline_grid"]
 
 SYNC = -1  # strategy sentinel: flush activation off-chip after this layer
 _UTIL_MIN = 1.0 / 4096.0
@@ -54,6 +55,17 @@ def pack_workload(workload, hw: AccelConfig, nmax: int = 64) -> dict[str, jnp.nd
     out["mask"] = jnp.asarray(arrs["mask"])
     out["n"] = jnp.asarray(arrs["n"], dtype=jnp.int32)
     return out
+
+
+def stack_workloads(wls: list[dict]) -> dict[str, jnp.ndarray]:
+    """Stack packed workloads (same ``nmax``) along a leading condition axis.
+
+    The stacked dict vmaps through every cost-model entry point — this is
+    what lets a heterogeneous (workload, budget) condition grid evaluate in
+    one device program (``evaluate_grid``, DESIGN §10).  Entry ``c`` may
+    repeat a workload (one copy per memory condition)."""
+    keys = wls[0].keys()
+    return {k: jnp.stack([w[k] for w in wls]) for k in keys}
 
 
 def _prep_strategy(strategy: jax.Array, mask: jax.Array, batch: float) -> tuple:
@@ -201,6 +213,47 @@ def evaluate_population_stats(wl: dict, strategies: jax.Array,
     in one device call (DESIGN.md §3)."""
     return jax.vmap(
         lambda s: _evaluate_full(wl, s, batch, budget_bytes, hw))(strategies)
+
+
+# ---------------------------------------------------------------------------
+# Condition-grid evaluation (DESIGN.md §10).
+#
+# A teacher run sweeps a grid of C = |workloads| x |budgets| conditions, each
+# with its own GA population.  The three entry points below vmap the
+# per-condition evaluators over a ``stack_workloads`` dict plus per-condition
+# batch/budget vectors, so a whole grid generation — C x POP strategies —
+# costs one device call (and, inside the fused GA, zero host round trips).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("hw",))
+def evaluate_grid(wls: dict, strategies: jax.Array, batches: jax.Array,
+                  budgets: jax.Array, hw: AccelConfig) -> CostOut:
+    """CostOut [C, POP] of per-condition populations ``strategies``
+    [C, POP, P] over stacked workloads [C, ...] and per-condition
+    ``batches`` / ``budgets`` [C]."""
+    return jax.vmap(
+        lambda wl, s, b, m: evaluate_population(wl, s, b, m, hw)
+    )(wls, strategies, batches, budgets)
+
+
+@functools.partial(jax.jit, static_argnames=("hw",))
+def evaluate_grid_stats(wls: dict, strategies: jax.Array, batches: jax.Array,
+                        budgets: jax.Array, hw: AccelConfig):
+    """Grid counterpart of :func:`evaluate_population_stats`:
+    ``(CostOut [C, POP], gid [C, POP, P], M_g [C, POP, P])`` — the
+    constraint-repair operator's split/shrink targets for every child of
+    every condition in one call."""
+    return jax.vmap(
+        lambda wl, s, b, m: jax.vmap(
+            lambda one: _evaluate_full(wl, one, b, m, hw))(s)
+    )(wls, strategies, batches, budgets)
+
+
+@functools.partial(jax.jit, static_argnames=("hw",))
+def baseline_grid(wls: dict, batches: jax.Array, hw: AccelConfig) -> CostOut:
+    """Per-condition no-fusion baselines, CostOut [C]."""
+    return jax.vmap(lambda wl, b: baseline_no_fusion(wl, b, hw))(wls, batches)
 
 
 @functools.partial(jax.jit, static_argnames=("hw",))

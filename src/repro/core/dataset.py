@@ -1,21 +1,41 @@
-"""Teacher-data collection + replay buffer (paper §4.4, §4.5.1).
+"""Teacher-data collection + replay buffer (paper §4.4, §4.5.1; DESIGN §10).
 
-Pipeline: G-Sampler searches a few memory conditions per workload; its
-elite strategies are decorated into (reward, state, action) trajectories by
-the environment (one vmapped prefix-trace each) and stored in a replay
-buffer of padded arrays the imitation trainer samples from.
+Two pipelines produce the same :class:`TrajectoryDataset`:
+
+ - ``collect_teacher_data``: the original host loop — one G-Sampler search
+   per (workload, budget) condition, one ``env.decorate`` per elite.  Kept
+   as the readable reference.
+ - ``generate_teacher_corpus``: the device-grid pipeline.  ONE fused GA
+   program searches every condition of the (workload x budget) grid
+   simultaneously (``gsampler.gsampler_search_grid``) and ONE fused
+   decoration program (``_decorate_grid``: a vmapped ``prefix_scan`` per
+   elite) relabels every elite into (returns-to-go, state, action)
+   trajectories.  Deterministic for a fixed seed — same seed, bit-identical
+   corpus — which the corpus-determinism tests and resumable training rely
+   on.
+
+``window_dataset`` cuts long trajectories into fixed-length windows with
+absolute-time offsets (``t0``) so large chains train on a small-context
+model; ``returns_to_go`` is the §4.3.3 conditioning-relabel rule both
+pipelines share.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from . import cost_model as cm
 from .accel import AccelConfig
-from .env import FusionEnv, STATE_DIM
-from .gsampler import GSamplerConfig, gsampler_search
+from .env import (FusionEnv, STATE_DIM, _budget_feat, _shape_feats,
+                  encode_action_jnp, returns_to_go)
+from .gsampler import GSamplerConfig, gsampler_search, gsampler_search_grid
 
-__all__ = ["TrajectoryDataset", "collect_teacher_data", "merge_datasets"]
+__all__ = ["TrajectoryDataset", "collect_teacher_data", "merge_datasets",
+           "generate_teacher_corpus", "window_dataset", "returns_to_go"]
 
 MB = float(2 ** 20)
 
@@ -27,6 +47,11 @@ class TrajectoryDataset:
     actions: np.ndarray    # [N, T] f32 (encoded)
     mask: np.ndarray       # [N, T] f32
     meta: list = field(default_factory=list)   # (workload, budget_mb, speedup)
+    t0: np.ndarray | None = None   # [N] i32 absolute window offsets
+
+    def __post_init__(self):
+        if self.t0 is None:
+            self.t0 = np.zeros(self.rtg.shape[0], np.int32)
 
     def __len__(self):
         return self.rtg.shape[0]
@@ -38,7 +63,8 @@ class TrajectoryDataset:
     def sample(self, rng: np.random.Generator, batch_size: int) -> dict:
         idx = rng.integers(0, len(self), size=batch_size)
         return {"rtg": self.rtg[idx], "states": self.states[idx],
-                "actions": self.actions[idx], "mask": self.mask[idx]}
+                "actions": self.actions[idx], "mask": self.mask[idx],
+                "t0": self.t0[idx]}
 
     def split(self, frac: float, seed: int = 0):
         rng = np.random.default_rng(seed)
@@ -47,7 +73,7 @@ class TrajectoryDataset:
         tr, va = perm[k:], perm[:k]
         pick = lambda ix: TrajectoryDataset(
             self.rtg[ix], self.states[ix], self.actions[ix], self.mask[ix],
-            [self.meta[i] for i in ix])
+            [self.meta[i] for i in ix], self.t0[ix])
         return pick(tr), pick(va)
 
 
@@ -107,4 +133,154 @@ def merge_datasets(ds: list[TrajectoryDataset]) -> TrajectoryDataset:
         np.concatenate([d.states for d in ds]),
         np.concatenate([d.actions for d in ds]),
         np.concatenate([d.mask for d in ds]),
-        sum([d.meta for d in ds], []))
+        sum([d.meta for d in ds], []),
+        np.concatenate([d.t0 for d in ds]))
+
+
+# ---------------------------------------------------------------------------
+# Device-grid corpus generation (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("hw",))
+def _decorate_grid(wls: dict, strategies: jax.Array, batches: jax.Array,
+                   budgets: jax.Array, hw: AccelConfig):
+    """Decorate [C, K] strategies into padded trajectories in one program.
+
+    Per strategy this is exactly ``env.decorate``: one O(P) ``prefix_scan``
+    supplies the per-step prefix latency/peak, from which the state vector
+    (paper Eq. 2) and the relabeled returns-to-go are assembled.  Returns
+    (states [C,K,P,STATE_DIM], rtg [C,K,P], actions [C,K,P], mask [C,K,P],
+    final CostOut [C,K])."""
+    P = wls["A"].shape[-1]
+    pos = jnp.arange(P)
+
+    def per_cond(wl, S, b, m):
+        base = cm.baseline_no_fusion(wl, b, hw).latency
+        feats = _shape_feats(wl["SHAPE6"])                  # [P, 6]
+        bfeat = _budget_feat(m)
+        idx = jnp.minimum(pos, wl["n"])
+        valid = (pos <= wl["n"]).astype(jnp.float32)
+
+        def per_strat(s):
+            trace, final = cm.prefix_scan(wl, s, b, m, hw)
+            perf = jnp.log1p(base / jnp.maximum(trace.latency, 1e-12))
+            states = jnp.concatenate(
+                [feats[idx], jnp.full((P, 1), bfeat), perf[:, None]],
+                axis=1) * valid[:, None]
+            rtg = returns_to_go(trace.peak_mem, m) * valid
+            acts = encode_action_jnp(s, b) * valid
+            return states, rtg, acts, final
+
+        st, rtg, ac, fin = jax.vmap(per_strat)(S)
+        mk = jnp.broadcast_to(valid, (S.shape[0], P))
+        return st, rtg, ac, mk, fin
+
+    return jax.vmap(per_cond)(wls, strategies, batches, budgets)
+
+
+def _augment_candidates(rng: np.random.Generator, elites: np.ndarray,
+                        ns: np.ndarray, batch: int, top_k: int,
+                        augment_jitter: int) -> np.ndarray:
+    """Jittered copies of the top elites (vectorized twin of the host
+    pipeline's replay-diversity trick): perturb one micro-batch position per
+    copy; the cost model re-scores them during decoration."""
+    C, K, P = elites.shape
+    K2 = max(1, top_k // 2)
+    extra = []
+    for _ in range(augment_jitter):
+        j = elites[:, :K2].copy()
+        sel = rng.integers(1, ns[:, None] + 1, size=(C, K2))
+        delta = rng.integers(-4, 5, size=(C, K2))
+        cur = np.take_along_axis(j, sel[..., None], axis=2)[..., 0]
+        new = np.where(cur >= 1, np.clip(cur + delta, 1, batch), cur)
+        np.put_along_axis(j, sel[..., None], new[..., None].astype(np.int32),
+                          axis=2)
+        extra.append(j)
+    return np.concatenate([elites] + extra, axis=1) if extra else elites
+
+
+def generate_teacher_corpus(workloads: list, hw: AccelConfig, *,
+                            batch: int = 64, budgets_mb: list[float],
+                            max_steps: int = 64, top_k: int = 8,
+                            ga_cfg: GSamplerConfig | None = None,
+                            seed: int = 0, augment_jitter: int = 2,
+                            ) -> TrajectoryDataset:
+    """Device-grid teacher pipeline: the scalable twin of
+    :func:`collect_teacher_data`.
+
+    One fused GA program searches the whole ``workloads x budgets_mb`` grid,
+    one fused decoration program relabels every elite (+ jittered variants)
+    into returns-to-go trajectories; the host only filters invalid rows and
+    dedups exact duplicates.  Deterministic: a fixed ``seed`` reproduces the
+    corpus bit-for-bit."""
+    conds = [(w, float(b)) for w in workloads for b in budgets_mb]
+    wl_list = [w for w, _ in conds]
+    budgets = np.asarray([b * MB for _, b in conds], np.float32)
+    batches = np.full(len(conds), float(batch), np.float32)
+    ns = np.asarray([w.n for w in wl_list], np.int64)
+    cfg = ga_cfg or GSamplerConfig(seed=seed)
+
+    # pack the grid ONCE: the GA search and the decoration share it
+    wls = cm.stack_workloads(
+        [cm.pack_workload(w, hw, max_steps) for w in wl_list])
+    res = gsampler_search_grid(wl_list, hw, batches, budgets,
+                               nmax=max_steps, cfg=cfg, top_k=top_k,
+                               packed=wls)
+    rng = np.random.default_rng(seed)
+    cand = _augment_candidates(rng, res.strategies, ns, batch, top_k,
+                               augment_jitter)
+
+    st, rtg, ac, mk, fin = _decorate_grid(
+        wls, jnp.asarray(cand), jnp.asarray(batches), jnp.asarray(budgets),
+        hw)
+    st, rtg, ac, mk = (np.asarray(x) for x in (st, rtg, ac, mk))
+    valid = np.asarray(fin.valid)
+    speedup = res.baseline_latency[:, None] / np.maximum(
+        np.asarray(fin.latency), 1e-12)
+
+    rows, meta = [], []
+    for c, (wl, budget) in enumerate(conds):
+        seen = set()
+        for k in range(cand.shape[1]):
+            key = cand[c, k, : wl.n + 1].tobytes()
+            if not valid[c, k] or key in seen:
+                continue
+            seen.add(key)
+            rows.append((rtg[c, k], st[c, k], ac[c, k], mk[c, k]))
+            meta.append((wl.name, budget, float(speedup[c, k])))
+    if not rows:
+        raise RuntimeError("teacher produced no valid trajectories")
+    r, s, a, m = (np.stack(x) for x in zip(*rows))
+    return TrajectoryDataset(r, s, a, m, meta)
+
+
+def window_dataset(ds: TrajectoryDataset, T: int,
+                   stride: int | None = None) -> TrajectoryDataset:
+    """Cut trajectories into length-``T`` windows with absolute offsets.
+
+    Windows step by ``stride`` (default ``T``); a final window is appended
+    flush with the trajectory end so no suffix is dropped.  Each window
+    carries ``t0`` — its absolute start step — so the model embeds the same
+    timestep positions it would see in the full trajectory (``dt_apply``'s
+    ``t0`` argument).  Returns-to-go, states and the mask are per-step
+    quantities and slice through unchanged (the relabel rule is windowing-
+    invariant)."""
+    if T >= ds.max_steps:
+        return ds
+    stride = stride or T
+    rows, meta, offs = [], [], []
+    for i in range(len(ds)):
+        L = int(ds.mask[i].sum())
+        starts = list(range(0, max(L - T, 0) + 1, stride))
+        if not starts:
+            starts = [0]
+        if starts[-1] + T < L:
+            starts.append(L - T)
+        for s0 in starts:
+            rows.append((ds.rtg[i, s0:s0 + T], ds.states[i, s0:s0 + T],
+                         ds.actions[i, s0:s0 + T], ds.mask[i, s0:s0 + T]))
+            meta.append(ds.meta[i] if i < len(ds.meta) else None)
+            offs.append(int(ds.t0[i]) + s0)
+    r, s, a, m = (np.stack(x) for x in zip(*rows))
+    return TrajectoryDataset(r, s, a, m, meta, np.asarray(offs, np.int32))

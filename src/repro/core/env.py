@@ -26,8 +26,9 @@ from . import cost_model as cm
 from .accel import AccelConfig
 
 __all__ = ["FusionEnv", "STATE_DIM", "encode_action", "decode_action",
-           "encode_action_jnp", "decode_action_jnp", "EnvConsts", "env_make",
-           "env_reset", "env_observe", "env_step", "env_final"]
+           "encode_action_jnp", "decode_action_jnp", "returns_to_go",
+           "EnvConsts", "env_make", "env_reset", "env_observe", "env_step",
+           "env_final"]
 
 STATE_DIM = 8
 _LOG_CAP = np.log1p(2 ** 24)
@@ -57,6 +58,25 @@ def decode_action_jnp(y: jax.Array, batch: jax.Array) -> jax.Array:
     y = jnp.asarray(y, jnp.float32)
     mb = jnp.clip(jnp.round(y * batch), 1.0, batch)
     return jnp.where(y < 0.0, cm.SYNC, mb).astype(jnp.int32)
+
+
+def returns_to_go(peak_mem, budget_bytes):
+    """The §4.3.3 conditioning / relabel rule: fraction of the requested
+    on-chip budget still free after the prefix commits.
+
+    THE single definition — the host env (observation + decoration), the
+    device-resident env (``env_observe``) and the grid corpus pipeline
+    (``dataset._decorate_grid``) all call it, so a relabel change cannot
+    diverge between pipelines.  Dispatches on input type: jax inputs
+    (incl. tracers) stay on device; host floats/ndarrays stay NumPy so the
+    per-step host-env observation pays no device sync."""
+    if isinstance(peak_mem, jax.Array) or isinstance(budget_bytes, jax.Array):
+        b = jnp.asarray(budget_bytes, jnp.float32)
+        return jnp.maximum(0.0, (b - peak_mem) / b).astype(jnp.float32)
+    b = np.float32(budget_bytes)
+    return np.maximum(
+        np.float32(0.0),
+        (b - np.asarray(peak_mem, np.float32)) / b).astype(np.float32)
 
 
 def _shape_feats(shape6) -> jax.Array:
@@ -127,8 +147,7 @@ def env_observe(consts: EnvConsts, state: cm.PrefixCarry,
                 hw: AccelConfig):
     """(conditioning reward r_hat_t, state vector s_t) — paper Eq. 2."""
     out = cm.prefix_out(consts.pc, state, hw)
-    mem_avail = jnp.maximum(
-        0.0, (consts.budget - out.peak_mem) / consts.budget)
+    mem_avail = returns_to_go(out.peak_mem, consts.budget)
     perf = consts.base_lat / jnp.maximum(out.latency, 1e-12)
     feats = consts.shape_feats[jnp.minimum(state.t, consts.n)]
     svec = jnp.concatenate([
@@ -195,7 +214,7 @@ class FusionEnv:
         self._last = out
         peak = float(out.peak_mem)
         lat = float(out.latency)
-        mem_avail = max(0.0, (self.budget_bytes - peak) / self.budget_bytes)
+        mem_avail = float(returns_to_go(peak, self.budget_bytes))
         perf = self.baseline_latency / max(lat, 1e-12)
         st = np.empty(STATE_DIM, dtype=np.float32)
         st[:6] = self.shape_feats[min(self.t, self.n)]
@@ -256,8 +275,7 @@ class FusionEnv:
         states[:, :6] = self.shape_feats[:T]
         states[:, 6] = self._budget_feat
         states[:, 7] = np.log1p(self.baseline_latency / np.maximum(lat, 1e-12))
-        rtg = np.maximum(0.0, (self.budget_bytes - peak) / self.budget_bytes
-                         ).astype(np.float32)
+        rtg = np.asarray(returns_to_go(peak, self.budget_bytes))
         acts = encode_action(strategy[:T], self.batch)
         return dict(states=states, rtg=rtg, actions=acts,
                     raw_actions=np.asarray(strategy[:T], dtype=np.int32),

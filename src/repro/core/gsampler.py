@@ -15,16 +15,19 @@ that is the vectorized-JAX counterpart of the paper's 0.66-1.3 min search.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import cost_model as cm
 from .accel import AccelConfig
 
-__all__ = ["GSamplerConfig", "GSamplerResult", "gsampler_search", "naive_uniform_mb"]
+__all__ = ["GSamplerConfig", "GSamplerResult", "gsampler_search",
+           "naive_uniform_mb", "GridTeacherResult", "gsampler_search_grid"]
 
 
 @dataclass(frozen=True)
@@ -193,3 +196,245 @@ def gsampler_search(env, cfg: GSamplerConfig = GSamplerConfig(),
         latency=float(lat[best]), peak_mem=float(peak[best]),
         valid=bool(fit[best] > -1e3), n_evals=n_evals, wall_s=wall,
         history=history, elites=elites)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident grid G-Sampler (DESIGN.md §10).
+#
+# The host GA above searches ONE (workload, batch, budget) condition with one
+# vmapped fitness call per generation; a teacher corpus needs a whole grid of
+# conditions (paper §4.5.1: several memory budgets per workload, §4.6
+# generalization: several workloads).  ``gsampler_search_grid`` runs every
+# condition's population simultaneously: selection, crossover, mutation, the
+# constraint-repair operator and the fitness evaluations are all jnp over a
+# [C, POP, P] strategy tensor, so the ENTIRE evolutionary search — all
+# conditions x populations x generations — is one jitted device program with
+# zero host round trips.  Heterogeneity (different layer counts, batches,
+# budgets) rides the stacked-workload axis; padding positions stay SYNC.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class GridTeacherResult:
+    """Top-k elite strategies per condition plus their exact costs."""
+    strategies: np.ndarray   # [C, K, P] int32
+    latency: np.ndarray      # [C, K]
+    peak_mem: np.ndarray     # [C, K]
+    speedup: np.ndarray      # [C, K]
+    valid: np.ndarray        # [C, K] bool
+    history: np.ndarray      # [G, C] best valid speedup per generation
+    baseline_latency: np.ndarray   # [C]
+    n_evals: int
+    wall_s: float
+
+
+def _randint_1_to_B(key, shape, B) -> jax.Array:
+    """Uniform int in [1, B] with per-condition (broadcast) B."""
+    u = jax.random.uniform(key, shape)
+    return (1.0 + jnp.floor(u * B)).astype(jnp.int32)
+
+
+def _fitness_jnp(latency, peak, budget):
+    over = jnp.maximum(0.0, peak / budget - 1.0)
+    return jnp.where(over > 0.0, -1e3 * (1.0 + over) - latency, -latency)
+
+
+def _naive_uniform_grid(wls, batches, budgets, hw, iters: int = 18):
+    """Device twin of :func:`naive_uniform_mb`: per-condition binary search
+    for the largest uniform micro-batch that stages everything on-chip."""
+    C, P = wls["A"].shape
+    n = wls["n"]
+    pos = jnp.arange(P)
+    valid_pos = pos[None, :] <= n[:, None]
+
+    def uniform(mb):
+        return jnp.where(valid_pos, mb[:, None], cm.SYNC).astype(jnp.int32)
+
+    fallback = jnp.where(pos[None, :] == 0, 1, cm.SYNC).astype(jnp.int32)
+    fallback = jnp.broadcast_to(fallback, (C, P))
+    lo = jnp.ones((C,), jnp.int32)
+    hi = batches.astype(jnp.int32)
+
+    def body(_, carry):
+        lo, hi, best = carry
+        done = lo > hi
+        mid = jnp.maximum((lo + hi) // 2, 1)
+        s = uniform(mid)
+        out = cm.evaluate_grid(wls, s[:, None, :], batches, budgets, hw)
+        ok = out.valid[:, 0] & ~done
+        best = jnp.where(ok[:, None], s, best)
+        lo = jnp.where(done, lo, jnp.where(ok, mid + 1, lo))
+        hi = jnp.where(done, hi, jnp.where(ok, hi, mid - 1))
+        return lo, hi, best
+
+    _, _, best = jax.lax.fori_loop(0, iters, body, (lo, hi, fallback))
+    return best
+
+
+def _mutate_grid(key, child, valid_pos, n, B, cfg: GSamplerConfig):
+    """Fusion-aware mutation, vectorized over [C, K, P] children."""
+    C, K, P = child.shape
+    pos = jnp.arange(P)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p_gene = cfg.p_mut_gene / (n.astype(jnp.float32) + 1.0)       # [C]
+    mut = (jax.random.uniform(k1, (C, K, P)) < p_gene[:, None, None]) \
+        & valid_pos[:, None, :]
+    r = jax.random.uniform(k2, (C, K, P))
+    rand_val = _randint_1_to_B(k3, (C, K, P), B[:, None, None])
+    sync_flip = (pos[None, None, :] > 0) & (r < cfg.p_sync_mut)
+    flipped = jnp.where(child != cm.SYNC, cm.SYNC, rand_val)
+    grow = jax.random.uniform(k4, (C, K, P)) < 0.5
+    scaled = jnp.clip(jnp.where(grow, child * 2, child // 2),
+                      1, B[:, None, None].astype(jnp.int32))
+    scale_ok = (r < 0.6) & (child >= 1)
+    new = jnp.where(sync_flip, flipped,
+                    jnp.where(scale_ok, scaled, rand_val))
+    child = jnp.where(mut, new, child)
+    # the input micro-batch (position 0) can never sync
+    c0 = child[..., 0]
+    child = child.at[..., 0].set(
+        jnp.where(c0 < 1, _randint_1_to_B(k5, (C, K), B[:, None]), c0))
+    return child
+
+
+def _repair_grid(key, wls, brood, batches, budgets, hw, cfg: GSamplerConfig):
+    """Constraint repair for every condition's brood at once: while a child
+    is over budget, split its worst fused group or shrink that group's
+    largest staged micro-batch — the same operator as
+    :func:`_repair_population`, with the span/argmax logic in jnp."""
+    C, K, P = brood.shape
+    pos = jnp.arange(P)
+    mask = wls["mask"]                                            # [C, P]
+
+    def cond_fn(carry):
+        # early exit once the whole brood is within budget (the host GA's
+        # `break`): evaluate_grid_stats is the GA's hottest call and most
+        # late-generation rounds need zero repair
+        _, _, i, pending = carry
+        return (i < cfg.repair_tries) & pending
+
+    def round_fn(carry):
+        s, key, i, _ = carry
+        key, kc = jax.random.split(key)
+        out, gid, M_g = cm.evaluate_grid_stats(wls, s, batches, budgets, hw)
+        invalid = ~out.valid                                      # [C, K]
+        worst = jnp.argmax(M_g, axis=-1)                          # [C, K]
+        members = (gid == worst[..., None]) & mask[:, None, :]    # [C, K, P]
+        start = jnp.argmax(members, axis=-1)
+        end = P - 1 - jnp.argmax(members[..., ::-1], axis=-1)
+        mid = (start + end) // 2
+        multi = end > start
+        seg_mb = jnp.where(members & (s > 1), s, 0)
+        jmax = jnp.argmax(seg_mb, axis=-1)
+        has_mb = jnp.max(seg_mb, axis=-1) > 1
+        onehot_mid = pos[None, None, :] == mid[..., None]
+        onehot_j = pos[None, None, :] == jmax[..., None]
+        split_s = jnp.where(onehot_mid, cm.SYNC, s)               # split group
+        shrink_s = jnp.where(onehot_j, jnp.maximum(1, s // 2), s)  # halve stage
+        alt_s = jnp.where(multi[..., None] & onehot_mid, cm.SYNC, s)
+        shr = jnp.where(has_mb[..., None], shrink_s, alt_s)
+        do_split = multi & (jax.random.uniform(kc, (C, K)) < 0.5)
+        new = jnp.where(do_split[..., None], split_s, shr)
+        apply = invalid & members.any(-1)
+        s = jnp.where(apply[..., None], new, s)
+        return s, key, i + 1, invalid.any()
+
+    s, _, _, _ = jax.lax.while_loop(
+        cond_fn, round_fn, (brood, key, jnp.int32(0), jnp.bool_(True)))
+    return s
+
+
+@functools.partial(jax.jit, static_argnames=("hw", "cfg", "top_k"))
+def _ga_grid(key, wls, batches, budgets, hw: AccelConfig,
+             cfg: GSamplerConfig, top_k: int):
+    """The whole grid GA as one device program.  Returns stacked elites
+    [C, top_k, P] with exact costs, plus the best-valid-speedup history."""
+    C, P = wls["A"].shape
+    POP, E = cfg.population, cfg.elite
+    n = wls["n"]
+    pos = jnp.arange(P)
+    valid_pos = pos[None, :] <= n[:, None]
+    B = batches.astype(jnp.float32)
+    base = cm.baseline_grid(wls, batches, hw).latency             # [C]
+
+    key, k_init, k_sync = jax.random.split(key, 3)
+    vals = _randint_1_to_B(k_init, (C, POP, P), B[:, None, None])
+    syncs = jax.random.uniform(k_sync, (C, POP, P)) < 0.4
+    syncs = syncs.at[:, :, 0].set(False)
+    pop = jnp.where(syncs, cm.SYNC, vals)
+    pop = jnp.where(valid_pos[:, None, :], pop, cm.SYNC)
+    allsync = jnp.where(pos[None, :] == 0,
+                        B[:, None].astype(jnp.int32), cm.SYNC)
+    pop = pop.at[:, 0, :].set(allsync)
+    pop = pop.at[:, 1, :].set(_naive_uniform_grid(wls, batches, budgets, hw))
+
+    def gen(pop, key):
+        out = cm.evaluate_grid(wls, pop, batches, budgets, hw)    # [C, POP]
+        fit = _fitness_jnp(out.latency, out.peak_mem, budgets[:, None])
+        order = jnp.argsort(-fit, axis=1)
+        elites = jnp.take_along_axis(pop, order[:, :E, None], axis=1)
+        ranks = jnp.argsort(order, axis=1)
+        p_sel = (POP - ranks).astype(jnp.float32) / (POP * (POP + 1) / 2)
+        kp, kc, km, kr = jax.random.split(key, 4)
+        num = POP - E
+        parents = jax.random.categorical(
+            kp, jnp.log(p_sel)[:, None, None, :], shape=(C, num, 2))
+        pa = jnp.take_along_axis(pop, parents[..., 0][..., None], axis=1)
+        pb = jnp.take_along_axis(pop, parents[..., 1][..., None], axis=1)
+        cut = 1 + jnp.floor(jax.random.uniform(kc, (C, num))
+                            * n[:, None]).astype(jnp.int32)
+        child = jnp.where(pos[None, None, :] < cut[..., None], pa, pb)
+        child = _mutate_grid(km, child, valid_pos, n, B, cfg)
+        brood = _repair_grid(kr, wls, child, batches, budgets, hw, cfg)
+        new_pop = jnp.concatenate([elites, brood], axis=1)
+        sp = base[:, None] / jnp.maximum(out.latency, 1e-12)
+        best = jnp.max(jnp.where(out.valid, sp, 0.0), axis=1)
+        return new_pop, best
+
+    key, k_scan = jax.random.split(key)
+    pop, history = jax.lax.scan(gen, pop,
+                                jax.random.split(k_scan, cfg.generations))
+
+    out = cm.evaluate_grid(wls, pop, batches, budgets, hw)
+    fit = _fitness_jnp(out.latency, out.peak_mem, budgets[:, None])
+    order = jnp.argsort(-fit, axis=1)[:, :top_k]
+    take = lambda x: jnp.take_along_axis(x, order, axis=1)
+    strategies = jnp.take_along_axis(pop, order[..., None], axis=1)
+    lat, peak = take(out.latency), take(out.peak_mem)
+    return dict(strategies=strategies, latency=lat, peak_mem=peak,
+                valid=take(out.valid) & (take(fit) > -1e3),
+                speedup=base[:, None] / jnp.maximum(lat, 1e-12),
+                history=history, baseline_latency=base)
+
+
+def gsampler_search_grid(workloads: list, hw: AccelConfig, batches,
+                         budgets_bytes, *, nmax: int = 64,
+                         cfg: GSamplerConfig = GSamplerConfig(),
+                         top_k: int = 8, packed=None) -> GridTeacherResult:
+    """Search every (workload[c], batches[c], budgets_bytes[c]) condition in
+    one fused device program (the teacher-corpus front door, DESIGN §10).
+
+    ``workloads`` entries may repeat (one per memory condition); all three
+    sequences must have equal length C.  ``packed`` optionally supplies the
+    ``stack_workloads`` dict for the same grid (the corpus pipeline reuses
+    one packing for search and decoration).  Deterministic for a fixed
+    ``cfg.seed`` — the corpus-generation determinism tests rely on it."""
+    assert len(workloads) == len(batches) == len(budgets_bytes)
+    t0 = time.perf_counter()
+    wls = packed if packed is not None else cm.stack_workloads(
+        [cm.pack_workload(w, hw, nmax) for w in workloads])
+    batches = jnp.asarray(np.asarray(batches, np.float32))
+    budgets = jnp.asarray(np.asarray(budgets_bytes, np.float32))
+    out = _ga_grid(jax.random.PRNGKey(cfg.seed), wls, batches, budgets, hw,
+                   cfg, top_k)
+    out = {k: np.asarray(v) for k, v in out.items()}
+    C = len(workloads)
+    # upper bound: the repair while_loop exits early once a brood is valid
+    n_evals = C * cfg.population * (cfg.generations
+                                    * (1 + cfg.repair_tries) + 1)
+    return GridTeacherResult(
+        strategies=out["strategies"], latency=out["latency"],
+        peak_mem=out["peak_mem"], speedup=out["speedup"],
+        valid=out["valid"], history=out["history"],
+        baseline_latency=out["baseline_latency"], n_evals=n_evals,
+        wall_s=time.perf_counter() - t0)

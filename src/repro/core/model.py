@@ -60,22 +60,37 @@ def dt_init(key: jax.Array, cfg: DTConfig) -> dict:
 
 
 def dt_apply(params: dict, cfg: DTConfig, rtg: jax.Array, states: jax.Array,
-             actions: jax.Array) -> jax.Array:
+             actions: jax.Array, t0: jax.Array | None = None) -> jax.Array:
     """rtg [B,T], states [B,T,8], actions [B,T] -> predicted actions [B,T].
 
     Prediction for step t reads the causal prefix up to (and incl.) s_t;
     a_t tokens only influence steps > t, so one forward pass scores every
     step (teacher forcing) and autoregressive generation is consistent.
+
+    ``t0`` [B] (optional) are absolute-time offsets: a trajectory window
+    starting at step ``t0`` embeds positions ``t0 .. t0+T-1``, so corpora
+    windowed by ``dataset.window_dataset`` train with the same timestep
+    embeddings full trajectories use.  ``t0 + T`` must stay within
+    ``cfg.max_steps``.
     """
     B, T = rtg.shape
     d = cfg.d_model
     tok_r = nn.dense_apply(params["emb_r"], rtg[..., None])
     tok_s = nn.dense_apply(params["emb_s"], states)
     tok_a = nn.dense_apply(params["emb_a"], actions[..., None])
-    time = nn.embedding_apply(params["time"], jnp.arange(T))          # [T,d]
+    steps = jnp.arange(T)
+    if t0 is None:
+        time = nn.embedding_apply(params["time"], steps)[None]         # [1,T,d]
+    else:
+        idx = t0.astype(jnp.int32)[:, None] + steps[None, :]
+        time = nn.embedding_apply(params["time"], idx)
+        # a window past the embedding table must fail LOUDLY: jnp's gather
+        # clamps out-of-range rows, which would silently alias positions —
+        # poison them instead so a too-small max_steps NaNs the loss
+        time = jnp.where((idx < cfg.max_steps)[..., None], time, jnp.nan)
     typ = params["type"]["emb"]                                        # [3,d]
     toks = jnp.stack([tok_r + typ[0], tok_s + typ[1], tok_a + typ[2]],
-                     axis=2) + time[None, :, None, :]
+                     axis=2) + time[:, :, None, :]
     x = toks.reshape(B, 3 * T, d)
     for blk in params["blocks"]:
         x, _, _ = nn.block_apply(blk, x, n_heads=cfg.n_heads,
@@ -157,8 +172,8 @@ def dt_decode_step(params: dict, cfg: DTConfig, cache: list, r_t: jax.Array,
 
 
 def dt_loss(params: dict, cfg: DTConfig, batch: dict) -> jax.Array:
-    """Masked MSE (paper §4.3.1)."""
+    """Masked MSE (paper §4.3.1); honors window offsets (batch["t0"])."""
     pred = dt_apply(params, cfg, batch["rtg"], batch["states"],
-                    batch["actions"])
+                    batch["actions"], batch.get("t0"))
     err = jnp.square(pred - batch["actions"]) * batch["mask"]
     return err.sum() / jnp.maximum(batch["mask"].sum(), 1.0)

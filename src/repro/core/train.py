@@ -1,25 +1,37 @@
-"""Imitation-learning trainer for DNNFuser / Seq2Seq (paper §4.5.1 step 3).
+"""Imitation-learning trainer for DNNFuser / Seq2Seq (paper §4.5.1 step 3;
+DESIGN §10).
 
 Pure-JAX training loop: AdamW + cosine schedule + global-norm clipping,
-jitted step with donated (params, opt_state).  When a mesh is supplied the
-batch is sharded over the ``data`` axis and parameters are replicated —
-the same pjit pattern the big-model trainer in ``launch/train.py`` uses.
-Fine-tuning (paper §4.6.2 transfer learning) is the same loop warm-started
-from pre-trained params with ~10% of the steps.
+jitted step with donated (params, opt_state).  With a mesh the step is a
+pjit data-parallel program: the (micro)batch axis shards over 'data',
+params and optimizer state replicate, and ``grad_accum > 1`` accumulates
+gradients over an on-device ``lax.scan`` with a donated carry — the same
+pattern the big-model trainer in ``launch/train.py`` uses.
+
+The loop is RESUMABLE and BIT-EXACT: batches are drawn from a per-step
+counter-based RNG (a function of (seed, step), not of loop history), and
+``ckpt_dir`` wires atomic {params, opt_state} checkpoints through
+``checkpoint.Checkpointer`` — restarting from any saved step replays the
+identical tail and lands on bit-identical parameters, which the training
+smoke test asserts.  Fine-tuning (paper §4.6.2 transfer learning) is
+``fine_tune``: the same loop warm-started from pre-trained params (a pytree
+or a checkpoint directory) with ~10% of the steps.
 """
 from __future__ import annotations
 
+import pathlib
 import time
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .. import optim
+from ..checkpoint import Checkpointer, restore_subtree
 
-__all__ = ["TrainConfig", "train_model", "make_train_step"]
+__all__ = ["TrainConfig", "train_model", "make_train_step", "fine_tune",
+           "restore_params"]
 
 
 @dataclass(frozen=True)
@@ -32,16 +44,27 @@ class TrainConfig:
     max_grad_norm: float = 1.0
     seed: int = 0
     log_every: int = 200
+    grad_accum: int = 1        # microbatches accumulated per optimizer step
+    ckpt_every: int = 0        # save cadence (0 = only the final checkpoint)
+    ckpt_keep: int = 3
 
 
-def make_train_step(loss_fn, tx, mesh=None):
+def make_train_step(loss_fn, tx, mesh=None, grad_accum: int = 1):
     """Returns a jitted ``(params, opt_state, batch) -> (params, opt, loss)``.
 
-    ``loss_fn(params, batch) -> scalar``.  With a mesh, batch arrays are
-    sharded on their leading axis over 'data' and params replicated.
+    ``loss_fn(params, batch) -> scalar``.  With ``grad_accum > 1`` each
+    batch leaf carries leading ``[grad_accum, microbatch]`` axes and the
+    gradient accumulates over a ``lax.scan`` whose carry is donated with
+    the rest of the step.  With a mesh, the (micro)batch axis is sharded
+    over 'data' and params/opt state are replicated (pjit DP).
     """
+    def grads_of(params, batch):
+        if grad_accum == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        return optim.accumulated_value_and_grad(loss_fn, params, batch)
+
     def step(params, opt_state, batch):
-        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        loss, grads = grads_of(params, batch)
         updates, opt_state = tx.update(grads, opt_state, params)
         params = optim.apply_updates(params, updates)
         return params, opt_state, loss
@@ -50,32 +73,108 @@ def make_train_step(loss_fn, tx, mesh=None):
         return jax.jit(step, donate_argnums=(0, 1))
     from jax.sharding import NamedSharding, PartitionSpec as P
     repl = NamedSharding(mesh, P())
-    data = NamedSharding(mesh, P("data"))
+    data = NamedSharding(mesh, P(None, "data") if grad_accum > 1
+                         else P("data"))
     return jax.jit(step, donate_argnums=(0, 1),
                    in_shardings=(repl, repl, data), out_shardings=None)
 
 
+def _step_batch(dataset, cfg: TrainConfig, it: int) -> dict:
+    """Batch for step ``it`` from a counter-based RNG: a pure function of
+    (seed, step), so a resumed run draws the identical stream."""
+    rng = np.random.default_rng([cfg.seed, it])
+    b = dataset.sample(rng, cfg.batch_size)
+    if cfg.grad_accum > 1:
+        if cfg.batch_size % cfg.grad_accum:
+            raise ValueError(
+                f"batch_size {cfg.batch_size} must divide into grad_accum "
+                f"{cfg.grad_accum} microbatches")
+        mb, acc = cfg.batch_size // cfg.grad_accum, cfg.grad_accum
+        b = {k: np.asarray(v).reshape((acc, mb) + np.asarray(v).shape[1:])
+             for k, v in b.items()}
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
 def train_model(loss_fn, params, dataset, cfg: TrainConfig = TrainConfig(),
-                mesh=None, eval_fn=None) -> tuple[dict, dict]:
+                mesh=None, eval_fn=None, ckpt_dir=None, resume: bool = True,
+                crash_at: int | None = None) -> tuple[dict, dict]:
     """Train ``params`` on ``dataset`` (TrajectoryDataset-like .sample()).
 
-    Returns (params, log) where log has losses and wall time.
+    With ``ckpt_dir`` the loop checkpoints {params, opt_state} every
+    ``cfg.ckpt_every`` steps (plus a final save) and, when ``resume``, picks
+    up from the latest checkpoint on re-entry.  ``crash_at`` stops the loop
+    after that step WITHOUT a final save — the fault-injection hook the
+    resume tests use.  Returns (params, log); log carries losses,
+    ``start_step`` and wall time.
     """
     tx = optim.adamw(optim.cosine_with_warmup(cfg.lr, cfg.warmup, cfg.steps),
                      weight_decay=cfg.weight_decay,
                      max_grad_norm=cfg.max_grad_norm)
     opt_state = tx.init(params)
-    step_fn = make_train_step(loss_fn, tx, mesh)
-    rng = np.random.default_rng(cfg.seed)
+    start = 0
+    ckpt = None
+    if ckpt_dir is not None:
+        ckpt = Checkpointer(ckpt_dir, keep=cfg.ckpt_keep)
+        if resume and ckpt.latest_step() is not None:
+            step0, tree = ckpt.restore({"params": params,
+                                        "opt_state": opt_state})
+            start = min(int(step0), cfg.steps)
+            params, opt_state = tree["params"], tree["opt_state"]
+
+    step_fn = make_train_step(loss_fn, tx, mesh, cfg.grad_accum)
     losses, t0 = [], time.perf_counter()
-    for it in range(cfg.steps):
-        batch = {k: jnp.asarray(v)
-                 for k, v in dataset.sample(rng, cfg.batch_size).items()}
+    interrupted = False
+    for it in range(start, cfg.steps):
+        batch = _step_batch(dataset, cfg, it)
         params, opt_state, loss = step_fn(params, opt_state, batch)
         if it % cfg.log_every == 0 or it == cfg.steps - 1:
             losses.append((it, float(loss)))
+        done = it + 1
+        if ckpt is not None and cfg.ckpt_every \
+                and done % cfg.ckpt_every == 0 and done < cfg.steps:
+            # snapshot-to-host now, write in the background: the next steps
+            # overlap the .npy I/O (the checkpointer's ASYNC property)
+            ckpt.save_async(done, {"params": params, "opt_state": opt_state})
+        if crash_at is not None and done >= crash_at:
+            interrupted = True
+            break
+    if ckpt is not None:
+        if not interrupted and cfg.steps > start:
+            ckpt.save(cfg.steps, {"params": params, "opt_state": opt_state})
+        ckpt.wait()   # never hand back with a half-written checkpoint
     log = {"losses": losses, "wall_s": time.perf_counter() - t0,
-           "final_loss": losses[-1][1]}
+           "final_loss": losses[-1][1] if losses else None,
+           "start_step": start}
     if eval_fn is not None:
         log["eval"] = eval_fn(params)
     return params, log
+
+
+def restore_params(ckpt_dir, template, step: int | None = None):
+    """Params-only restore from a {params, opt_state} training checkpoint —
+    the warm-start half of a checkpoint, without rebuilding the optimizer."""
+    return restore_subtree(Checkpointer(ckpt_dir).path(step), "params",
+                           template)
+
+
+def fine_tune(loss_fn, pretrained, dataset, cfg: TrainConfig, *,
+              template=None, mesh=None, eval_fn=None, ckpt_dir=None
+              ) -> tuple[dict, dict]:
+    """Transfer fine-tuning (paper §4.6.2): warm-start from pre-trained
+    params and run the same sharded loop on the new-condition corpus.
+
+    ``pretrained`` is a params pytree or a checkpoint directory (then
+    ``template`` supplies the pytree structure, e.g. a fresh ``dt_init``).
+    The paper's recipe — ~10% of the pre-training steps, reduced lr — is
+    encoded by the caller in ``cfg``.  A fresh optimizer state is built (the
+    pre-training optimizer moments do not transfer across conditions)."""
+    if isinstance(pretrained, (str, pathlib.Path)):
+        if template is None:
+            raise ValueError("template params are required to warm-start "
+                             "from a checkpoint directory")
+        pretrained = restore_params(pretrained, template)
+    # real copies (jnp.asarray would alias jax arrays): the train step
+    # donates its params, and the caller's pretrained tree must survive
+    params = jax.tree.map(lambda x: jnp.array(x, copy=True), pretrained)
+    return train_model(loss_fn, params, dataset, cfg, mesh=mesh,
+                       eval_fn=eval_fn, ckpt_dir=ckpt_dir, resume=False)

@@ -26,7 +26,48 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..launch.mesh import dp_axes, batch_axes
 
 __all__ = ["shard_spec_for_path", "param_specs", "batch_specs",
-           "decode_state_specs_sharded", "logical_shard"]
+           "decode_state_specs_sharded", "logical_shard", "ambient_mesh",
+           "data_parallel_mesh"]
+
+
+def data_parallel_mesh(n_devices: int | None = None):
+    """A 1-D ("data",) mesh over the local devices — the mapper trainer's
+    mesh (DESIGN §10).  Unlike the (data, model) production mesh this always
+    builds, even on a single-device CPU host, so the sharded train step is
+    exercised by every smoke test."""
+    import jax
+    devs = jax.devices()[: n_devices or len(jax.devices())]
+    return jax.sharding.Mesh(np.asarray(devs), ("data",))
+
+
+def ambient_mesh():
+    """The mesh currently in context (abstract or physical), or None.
+
+    ``get_abstract_mesh`` has moved between jax releases
+    (``jax.sharding`` <-> ``jax._src.mesh``); older versions only expose the
+    physical mesh entered via ``with mesh:`` through ``thread_resources``.
+    Model code must stay mesh-agnostic either way, so every probe degrades
+    to None instead of raising."""
+    try:
+        from jax._src import mesh as mesh_impl
+    except ImportError:
+        mesh_impl = None
+    get_am = getattr(jax.sharding, "get_abstract_mesh",
+                     getattr(mesh_impl, "get_abstract_mesh", None))
+    if get_am is not None:
+        try:
+            am = get_am()
+        except Exception:
+            am = None
+        if am is not None and getattr(am, "axis_names", ()) \
+                and not getattr(am, "empty", False):
+            return am
+    tr = getattr(mesh_impl, "thread_resources", None)
+    pm = getattr(getattr(tr, "env", None), "physical_mesh", None)
+    if pm is not None and getattr(pm, "axis_names", ()) \
+            and not getattr(pm, "empty", True):
+        return pm
+    return None
 
 
 def logical_shard(x, *dims):
@@ -39,8 +80,8 @@ def logical_shard(x, *dims):
     GSPMD otherwise gets wrong (e.g. vocab-dim of the logits: without the
     constraint it all-gathers a 262k-vocab f32 logits tensor per device).
     """
-    am = jax.sharding.get_abstract_mesh()
-    if am is None or am.empty or "model" not in am.axis_names:
+    am = ambient_mesh()
+    if am is None or "model" not in am.axis_names:
         return x
     dp = tuple(a for a in am.axis_names if a != "model")
     dp_size = int(np.prod([am.shape[a] for a in dp]))

@@ -11,7 +11,17 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["make_production_mesh", "dp_axes", "batch_axes"]
+__all__ = ["make_production_mesh", "mesh_ctx", "dp_axes", "batch_axes"]
+
+
+def mesh_ctx(mesh):
+    """``jax.set_mesh`` context on jax versions that have it, else the mesh
+    itself (``with mesh:`` — the pre-0.5 spelling of the same thing).  The
+    single home of this version shim; dryrun and the sharding tests both
+    use it."""
+    import jax
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):

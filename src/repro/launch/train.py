@@ -77,18 +77,8 @@ def make_local_train_step(cfg, tx, *, grad_accum: int = 1, impl="xla",
             chunks = jax.tree.map(
                 lambda x: x[: mb * grad_accum].reshape(
                     (grad_accum, mb) + x.shape[1:]), batch)
-
-            def acc_fn(carry, chunk):
-                loss_s, grads_s = carry
-                l, g = jax.value_and_grad(loss_fn)(params, chunk)
-                return (loss_s + l,
-                        jax.tree.map(lambda a, b: a + b, grads_s, g)), None
-            zero = (jnp.zeros(()),
-                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                                 params))
-            (loss, grads), _ = jax.lax.scan(acc_fn, zero, chunks)
-            loss = loss / grad_accum
-            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss, grads = optim.accumulated_value_and_grad(
+                loss_fn, params, chunks)
         updates, opt_state = tx.update(grads, opt_state, params)
         params = optim.apply_updates(params, updates)
         return params, opt_state, loss
@@ -99,8 +89,8 @@ def make_local_train_step(cfg, tx, *, grad_accum: int = 1, impl="xla",
 def train(arch: str, *, steps: int = 200, global_batch: int = 8,
           seq_len: int = 128, reduced: bool = True, lr: float = 3e-4,
           ckpt_dir: str = "artifacts/train", use_mapper: bool = False,
-          act_budget_mb: float = 24.0, crash_at: int | None = None,
-          seed: int = 0):
+          act_budget_mb: float = 24.0, dt_params=None, dt_cfg=None,
+          crash_at: int | None = None, seed: int = 0):
     cfg = get_config(arch, reduced=reduced)
     model = registry.get_model(cfg)
     grad_accum = 1
@@ -108,7 +98,8 @@ def train(arch: str, *, steps: int = 200, global_batch: int = 8,
     if use_mapper:
         mapper_info = mapper_microbatch(cfg, seq_len=seq_len,
                                         global_batch=global_batch,
-                                        act_budget_mb=act_budget_mb)
+                                        act_budget_mb=act_budget_mb,
+                                        dt_params=dt_params, dt_cfg=dt_cfg)
         grad_accum = mapper_info["grad_accum"]
         print(f"[mapper] micro_batch={mapper_info['micro_batch']} "
               f"grad_accum={grad_accum} "

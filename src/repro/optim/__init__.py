@@ -1,6 +1,7 @@
-from .adamw import adamw, sgd, apply_updates, global_norm, clip_by_global_norm
+from .adamw import (adamw, sgd, apply_updates, global_norm,
+                    clip_by_global_norm, accumulated_value_and_grad)
 from .schedule import cosine_with_warmup, constant, linear_warmup
 
 __all__ = ["adamw", "sgd", "apply_updates", "global_norm",
-           "clip_by_global_norm", "cosine_with_warmup", "constant",
-           "linear_warmup"]
+           "clip_by_global_norm", "accumulated_value_and_grad",
+           "cosine_with_warmup", "constant", "linear_warmup"]

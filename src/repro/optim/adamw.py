@@ -14,7 +14,28 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["GradientTransformation", "adamw", "sgd", "apply_updates",
-           "global_norm", "clip_by_global_norm"]
+           "global_norm", "clip_by_global_norm",
+           "accumulated_value_and_grad"]
+
+
+def accumulated_value_and_grad(loss_fn, params, chunks):
+    """Mean (loss, grads) over the leading microbatch axis of ``chunks``
+    via an on-device ``lax.scan`` (f32 accumulator) — the one
+    gradient-accumulation implementation both the mapper trainer
+    (``core/train.py``) and the LM launcher (``launch/train.py``) use."""
+    def acc(carry, chunk):
+        loss_s, g_s = carry
+        l, g = jax.value_and_grad(loss_fn)(params, chunk)
+        return (loss_s + l,
+                jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                             g_s, g)), None
+
+    n = jax.tree_util.tree_leaves(chunks)[0].shape[0]
+    zero = (jnp.zeros(()),
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+    (loss, grads), _ = jax.lax.scan(acc, zero, chunks)
+    inv = 1.0 / n
+    return loss * inv, jax.tree.map(lambda g: g * inv, grads)
 
 
 class GradientTransformation(NamedTuple):

@@ -1,6 +1,6 @@
 from .layer import Layer, Workload
 from .cnn_zoo import (CNN_ZOO, get_workload, vgg16, resnet18, resnet50,
-                      mobilenet_v2, mnasnet_b1)
+                      mobilenet_v2, mnasnet_b1, tiny_cnn)
 
 __all__ = ["Layer", "Workload", "CNN_ZOO", "get_workload", "vgg16",
-           "resnet18", "resnet50", "mobilenet_v2", "mnasnet_b1"]
+           "resnet18", "resnet50", "mobilenet_v2", "mnasnet_b1", "tiny_cnn"]

@@ -13,7 +13,7 @@ from __future__ import annotations
 from .layer import Layer, Workload
 
 __all__ = ["vgg16", "resnet18", "resnet50", "mobilenet_v2", "mnasnet_b1",
-           "CNN_ZOO", "get_workload"]
+           "tiny_cnn", "CNN_ZOO", "get_workload"]
 
 
 class _ChainBuilder:
@@ -150,9 +150,23 @@ def mnasnet_b1(batch: int = 64) -> Workload:
     return b.build()
 
 
+def tiny_cnn(batch: int = 64) -> Workload:
+    """A 6-layer VGG-style chain on 32x32 inputs — small enough that the
+    whole teacher -> corpus -> train -> infer pipeline smoke-tests in
+    seconds (CI training smoke job), with the same layer mix (convs with
+    pooling + an FC head) the real zoo exercises."""
+    b = _ChainBuilder("tiny_cnn", 3, 32, 32, batch)
+    for k, reps in [(16, 2), (32, 2), (64, 1)]:
+        for i in range(reps):
+            b.conv(k, r=3, pool=2 if i == reps - 1 else 1)
+    b.fc(64)
+    return b.build()
+
+
 CNN_ZOO = {
     "vgg16": vgg16,
     "resnet18": resnet18,
+    "tiny_cnn": tiny_cnn,
     "resnet50": resnet50,
     "mobilenet_v2": mobilenet_v2,
     "mnasnet": mnasnet_b1,

@@ -1,0 +1,163 @@
+"""Teacher-corpus pipeline: grid-GA determinism, decoration parity with the
+host environment, returns-to-go relabeling and trajectory windowing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DTConfig, FusionEnv, GSamplerConfig, PAPER_ACCEL,
+                        TrajectoryDataset, dt_apply, dt_init,
+                        generate_teacher_corpus, returns_to_go,
+                        window_dataset)
+from repro.core import cost_model as cm
+from repro.core.dataset import _decorate_grid
+from repro.workloads import tiny_cnn, vgg16
+
+MB = 2 ** 20
+GA = GSamplerConfig(generations=8, population=16, seed=0)
+
+
+def _gen(seed):
+    return generate_teacher_corpus(
+        [tiny_cnn()], PAPER_ACCEL, batch=64, budgets_mb=[2, 6],
+        max_steps=12, top_k=4, ga_cfg=GSamplerConfig(
+            generations=8, population=16, seed=seed),
+        seed=seed, augment_jitter=1)
+
+
+def test_corpus_same_seed_is_bit_identical():
+    a, b = _gen(0), _gen(0)
+    for k in ("rtg", "states", "actions", "mask", "t0"):
+        np.testing.assert_array_equal(getattr(a, k), getattr(b, k), err_msg=k)
+    assert a.meta == b.meta
+
+
+def test_corpus_rows_are_valid_and_deduped():
+    ds = _gen(1)
+    assert len(ds) > 0
+    # every trajectory respects its own budget at every step (rtg >= 0 by
+    # construction; the final step's peak must be under budget => rtg > 0
+    # OR exactly at budget)
+    assert (ds.rtg * ds.mask >= 0.0).all()
+    keys = set()
+    for i, (name, budget, sp) in enumerate(ds.meta):
+        key = (name, budget, ds.actions[i].tobytes())
+        assert key not in keys, "duplicate trajectory survived dedup"
+        keys.add(key)
+        assert sp > 0
+
+
+def test_decorate_grid_matches_host_env():
+    wl = vgg16()
+    nmax = 20
+    env = FusionEnv(wl, PAPER_ACCEL, batch=64, budget_bytes=24 * MB,
+                    nmax=nmax)
+    rng = np.random.default_rng(0)
+    strategies = np.stack([cm.random_strategy(rng, env.n, nmax, 64)
+                           for _ in range(4)])
+    wls = cm.stack_workloads([env.wl])
+    st, rtg, ac, mk, fin = _decorate_grid(
+        wls, jnp.asarray(strategies)[None], jnp.asarray([64.0], jnp.float32),
+        jnp.asarray([24.0 * MB], jnp.float32), PAPER_ACCEL)
+    T = env.n + 1
+    for i, s in enumerate(strategies):
+        host = env.decorate(s)
+        np.testing.assert_allclose(np.asarray(st)[0, i, :T], host["states"],
+                                   atol=2e-5)
+        np.testing.assert_allclose(np.asarray(rtg)[0, i, :T], host["rtg"],
+                                   atol=2e-5)
+        np.testing.assert_allclose(np.asarray(ac)[0, i, :T], host["actions"],
+                                   atol=1e-6)
+        # padding beyond the episode is zero (masked)
+        assert (np.asarray(mk)[0, i, :T] == 1.0).all()
+        assert (np.asarray(mk)[0, i, T:] == 0.0).all()
+        assert (np.asarray(st)[0, i, T:] == 0.0).all()
+
+
+def test_returns_to_go_relabel_rule():
+    peaks = np.array([0.0, 5.0, 10.0, 20.0], np.float32) * MB
+    rtg = returns_to_go(peaks, 10.0 * MB)
+    np.testing.assert_allclose(rtg, [1.0, 0.5, 0.0, 0.0])
+    # parity with the environment's decoration
+    env = FusionEnv(tiny_cnn(), PAPER_ACCEL, batch=64, budget_bytes=4 * MB,
+                    nmax=12)
+    s = np.full(12, cm.SYNC, np.int32)
+    s[: env.n + 1] = 4
+    traj = env.decorate(s)
+    tr = cm.prefix_trace(env.wl, jnp.asarray(s), 64.0, 4.0 * MB, env.hw)
+    np.testing.assert_allclose(
+        traj["rtg"], returns_to_go(np.asarray(tr.peak_mem)[: env.n + 1],
+                                   4.0 * MB), atol=1e-6)
+
+
+def _toy_dataset(N=3, T=16, L=None):
+    rng = np.random.default_rng(0)
+    L = L or [16, 11, 7]
+    mask = np.zeros((N, T), np.float32)
+    for i, l in enumerate(L):
+        mask[i, :l] = 1.0
+    return TrajectoryDataset(
+        rtg=(rng.random((N, T)).astype(np.float32) * mask),
+        states=rng.random((N, T, 8)).astype(np.float32) * mask[..., None],
+        actions=rng.random((N, T)).astype(np.float32) * mask,
+        mask=mask, meta=[("w", 1.0, 1.0)] * N)
+
+
+def test_window_dataset_slices_and_offsets():
+    ds = _toy_dataset()
+    w = window_dataset(ds, 8, stride=4)
+    assert w.max_steps == 8
+    assert len(w) > len(ds)
+    # every window is an exact slice of its parent at offset t0
+    per_parent = {}
+    cursor = 0
+    for i in range(len(ds)):
+        L = int(ds.mask[i].sum())
+        starts = list(range(0, max(L - 8, 0) + 1, 4))
+        if starts[-1] + 8 < L:
+            starts.append(L - 8)
+        per_parent[i] = starts
+    k = 0
+    for i, starts in per_parent.items():
+        for s0 in starts:
+            assert int(w.t0[k]) == s0
+            np.testing.assert_array_equal(w.rtg[k], ds.rtg[i, s0:s0 + 8])
+            np.testing.assert_array_equal(w.states[k],
+                                          ds.states[i, s0:s0 + 8])
+            np.testing.assert_array_equal(w.actions[k],
+                                          ds.actions[i, s0:s0 + 8])
+            np.testing.assert_array_equal(w.mask[k], ds.mask[i, s0:s0 + 8])
+            k += 1
+    assert k == len(w)
+    # tail coverage: the last step of every trajectory lands in some window
+    for i, starts in per_parent.items():
+        L = int(ds.mask[i].sum())
+        assert any(s0 + 8 >= L for s0 in starts)
+
+
+def test_window_dataset_noop_when_wide_enough():
+    ds = _toy_dataset()
+    assert window_dataset(ds, 16) is ds
+    assert window_dataset(ds, 32) is ds
+
+
+def test_dt_apply_time_offsets():
+    cfg = DTConfig(n_blocks=1, n_heads=1, d_model=32, d_ff=64, max_steps=24)
+    params = dt_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    B, T = 2, 8
+    rtg = jnp.asarray(rng.random((B, T)), jnp.float32)
+    st = jnp.asarray(rng.random((B, T, 8)), jnp.float32)
+    ac = jnp.asarray(rng.random((B, T)), jnp.float32)
+    base = dt_apply(params, cfg, rtg, st, ac)
+    zero = dt_apply(params, cfg, rtg, st, ac, jnp.zeros((B,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(zero))
+    off = dt_apply(params, cfg, rtg, st, ac, jnp.full((B,), 5, jnp.int32))
+    assert not np.allclose(np.asarray(base), np.asarray(off)), \
+        "time offsets must reach the timestep embedding"
+    # offsets past the embedding table fail loudly (NaN), never silently
+    # clamp to the last row
+    over = dt_apply(params, cfg, rtg, st, ac,
+                    jnp.full((B,), cfg.max_steps - 2, jnp.int32))
+    assert np.isnan(np.asarray(over)).any(), \
+        "out-of-table time offsets must poison the output"
