@@ -1,6 +1,22 @@
-"""Shared benchmark utilities: artifact cache (trained mappers are reused
-across tables/reruns), teacher-data collection, model training wrappers,
-CSV emission in the ``name,us_per_call,derived`` scaffold format."""
+"""Shared benchmark utilities: artifact cache, teacher-data collection,
+model training wrappers, CSV emission.
+
+CACHING CONTRACT (the reason benchmark reruns are cheap): ``load_or(tag,
+builder)`` pickles the builder's result under ``artifacts/bench/<tag>.pkl``
+and short-circuits every later call with the same tag.  Teacher corpora
+(``teacher_<tag>``) and trained mappers (``dt_<tag>`` / ``s2s_<tag>`` /
+``hwgen_<mode>``) are cached this way and SHARED across suites — e.g.
+table2 and speed_oneshot reuse one trained mapper.  Tags do not encode the
+builder's hyperparameters, so after changing teacher/training semantics
+delete ``artifacts/bench/`` (or the specific tag) to force a rebuild; CI
+always starts from an empty cache.
+
+QUICK vs FULL: the cache tag must differ between modes whenever the built
+artifact differs (the convention is a ``_q``/``_quick`` suffix in the tag),
+so a quick CI run never poisons a full local run or vice versa.
+
+CSV: ``emit_csv`` prints the scaffold's ``name,us_per_call,derived`` rows;
+``fmt_speedup`` renders invalid (over-budget) results as ``N/A``."""
 from __future__ import annotations
 
 import json

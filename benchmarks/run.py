@@ -1,9 +1,34 @@
 """Benchmark driver: one module per paper table/figure (+ beyond-paper).
 
-``PYTHONPATH=src python -m benchmarks.run [--quick] [--only tableN,...]``
-Prints a human-readable section per table and a final
-``name,us_per_call,derived`` CSV block (scaffold format).  Trained-mapper
-artifacts are cached under artifacts/bench/ so reruns are cheap.
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
+
+Suites (``--only`` takes a comma list of the keys below; default = all):
+
+ - ``table1``  search-method comparison (paper Table 1)
+ - ``table2``  workload/condition generalization (paper Table 2)
+ - ``table3``  transfer fine-tuning (paper Table 3)
+ - ``fig4``    qualitative strategies (paper Fig. 4)
+ - ``speed``   one-shot vs search wall clock + batched serving throughput
+ - ``hw``      hardware generalization across the accel zoo (DESIGN §11)
+ - ``lm``      LM-workload mapping (beyond paper)
+ - ``kernel``  Pallas fusion_eval kernel vs XLA cost model
+
+THE ``--quick`` CONTRACT: every suite's ``run(quick=True)`` must (i) keep
+the full protocol shape — same pipeline stages, same metrics, same JSON/CSV
+schema — while shrinking only sizes (workloads, GA budget, training steps,
+condition counts), and (ii) finish CI-sized (minutes, CPU-only).  Numbers
+from quick and full runs are therefore comparable in STRUCTURE but not in
+magnitude; regression baselines (``BENCH_*.json``) record which mode wrote
+them, and the CI gates compare like with like (see
+``bench_infer.check_regression``).
+
+CACHING: teacher corpora and trained mappers are pickled under
+``artifacts/bench/`` keyed by suite + mode tag (``common.load_or``); reruns
+reuse them, so deleting ``artifacts/bench`` is the way to force a retrain
+after a semantic change.  Each suite prints a human-readable section and
+contributes ``name,us_per_call,derived`` rows to the final CSV block
+(scaffold format); a suite failure is reported at the end and exits
+non-zero without blocking the other suites.
 """
 from __future__ import annotations
 
@@ -14,22 +39,28 @@ import traceback
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="DNNFuser benchmark driver (see module docstring: "
+                    "python -m benchmarks.run)",
+        epilog="--quick keeps every suite's protocol and schema but shrinks "
+               "sizes to CI scale; artifacts/bench/ caches teacher corpora "
+               "and trained mappers across reruns (delete to retrain).")
     ap.add_argument("--quick", action="store_true",
-                    help="reduced budgets/conditions (CI-sized)")
+                    help="CI-sized: same protocol/metrics, smaller "
+                         "workloads/search/training budgets")
     ap.add_argument("--only", default="",
-                    help="comma list: table1,table2,table3,fig4,speed,"
+                    help="comma list: table1,table2,table3,fig4,speed,hw,"
                          "lm,kernel")
     args = ap.parse_args()
 
     from . import (fig4_solutions, fusion_eval_kernel, lm_mapping,
                    speed_oneshot, table1_methods, table2_generalization,
-                   table3_transfer)
+                   table3_transfer, table_hw_generalization)
     suites = {
         "table1": table1_methods, "table2": table2_generalization,
         "table3": table3_transfer, "fig4": fig4_solutions,
-        "speed": speed_oneshot, "lm": lm_mapping,
-        "kernel": fusion_eval_kernel,
+        "speed": speed_oneshot, "hw": table_hw_generalization,
+        "lm": lm_mapping, "kernel": fusion_eval_kernel,
     }
     only = [s for s in args.only.split(",") if s]
     rows, failures = [], []

@@ -1,0 +1,190 @@
+"""Hardware-generalization benchmark (DESIGN.md §11; beyond-paper).
+
+The paper's headline is a mapper that generalizes over *workload and
+memory* conditions; this table extends the claim to the ACCELERATOR itself:
+one checkpoint, trained with the hardware descriptor as a learned condition
+(``DTConfig.hw_dim``), serves a whole device family — including a zoo
+preset never seen in training — via ``dnnfuser_infer_batch`` with per-row
+hw vectors, every accelerator of a workload in ONE device call.
+
+Protocol
+ - TRAIN accelerators: ``edge``, ``nano``, ``mobile`` (zoo presets);
+   HELD-OUT: ``laptop`` — never in the teacher corpus.
+ - teacher: ``generate_teacher_corpus`` over the full
+   (workload x train-accel x budget) grid (one fused GA program);
+ - student: one DNNFuser with an hw-condition embedding, trained once;
+ - eval: for every (workload, budget) the mapper serves ALL accelerators
+   (train + held-out) in one batched call; each row is
+     * checked bit-exact against the host ``dnnfuser_infer`` reference on
+       the same condition (the §9/§11 serving contract), and
+     * compared to a fresh per-accelerator G-Sampler search — the
+       per-device tool the hardware condition replaces.
+
+Output: ``BENCH_hw.json`` with per-(accel, workload, budget) rows
+{dt_speedup, dt_valid, teacher_speedup, ratio, parity, held_out} plus the
+one-call serving latency.  ``ratio`` ~ 1.0 on the held-out accelerator is
+the hardware-generalization claim.  ``--quick`` shrinks workloads, GA
+budget and training steps to CI-smoke size (same protocol).
+
+    PYTHONPATH=src python benchmarks/table_hw_generalization.py
+        [--quick] [--out BENCH_hw.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (ACCEL_ZOO, DTConfig, FusionEnv, GSamplerConfig,
+                        HW_FEATURE_DIM, TrainConfig, dnnfuser_infer,
+                        dnnfuser_infer_batch, dt_init, dt_loss,
+                        generate_teacher_corpus, gsampler_search,
+                        restore_params, train_model)
+from repro.workloads import resnet18, tiny_cnn, vgg16
+
+try:                                   # as a module (benchmarks.run) ...
+    from .common import fmt_speedup, load_or
+except ImportError:                    # ... or as a script
+    from common import fmt_speedup, load_or
+
+MB = float(2 ** 20)
+TRAIN_ACCELS = ["edge", "nano", "mobile"]
+HOLDOUT = "laptop"
+
+
+def _setup(quick: bool) -> dict:
+    if quick:
+        return dict(workloads=[tiny_cnn()], budgets=[2.0, 6.0],
+                    max_steps=16, steps=240,
+                    ga=GSamplerConfig(population=16, generations=10, seed=0))
+    return dict(workloads=[vgg16(), resnet18()], budgets=[16.0, 32.0, 48.0],
+                max_steps=20, steps=600, ga=GSamplerConfig(seed=0))
+
+
+def _train_mapper(su: dict, quick: bool):
+    """Teacher corpus over the train-accel grid + ONE hw-conditioned
+    student, checkpointed atomically and restored before serving (the
+    served mapper is the on-disk checkpoint, not loop state); cached under
+    artifacts/bench (delete to regenerate)."""
+    cfg = DTConfig(max_steps=su["max_steps"], hw_dim=HW_FEATURE_DIM)
+    accels = [ACCEL_ZOO[n] for n in TRAIN_ACCELS]
+    mode = "quick" if quick else "full"
+    ckpt_dir = pathlib.Path("artifacts/bench") / f"hwgen_ckpt_{mode}"
+
+    def build():
+        ds = generate_teacher_corpus(
+            su["workloads"], accels, batch=64, budgets_mb=su["budgets"],
+            max_steps=su["max_steps"], ga_cfg=su["ga"], top_k=6, seed=0)
+        params = dt_init(jax.random.PRNGKey(0), cfg)
+        params, log = train_model(
+            lambda p, b: dt_loss(p, cfg, b), params, ds,
+            TrainConfig(steps=su["steps"], batch_size=16,
+                        warmup=min(50, su["steps"] // 5), seed=0),
+            ckpt_dir=ckpt_dir, resume=False)
+        params = restore_params(ckpt_dir, params)   # serve the checkpoint
+        return {"params": jax.device_get(params),
+                "final_loss": log["final_loss"], "n_traj": len(ds)}
+
+    art = load_or(f"hwgen_{mode}", build)
+    return art, cfg
+
+
+def run(quick: bool = False, out: str = "BENCH_hw.json") -> list:
+    su = _setup(quick)
+    art, cfg = _train_mapper(su, quick)
+    params = art["params"]
+    accels = [ACCEL_ZOO[n] for n in TRAIN_ACCELS] + [ACCEL_ZOO[HOLDOUT]]
+    print(f"mapper: {art['n_traj']} teacher trajectories "
+          f"(accels {TRAIN_ACCELS}), imitation loss {art['final_loss']:.4f}; "
+          f"held-out accelerator: {HOLDOUT}")
+
+    rows, csv_rows = [], []
+    for wl in su["workloads"]:
+        conds = [(acc, b) for acc in accels for b in su["budgets"]]
+        env0 = FusionEnv(wl, ACCEL_ZOO["edge"], batch=64,
+                         budget_bytes=su["budgets"][0] * MB,
+                         nmax=su["max_steps"])
+        batches = np.full(len(conds), 64.0, np.float32)
+        budgets = np.asarray([b * MB for _, b in conds], np.float32)
+        hw_rows = [acc for acc, _ in conds]
+        served = dnnfuser_infer_batch(params, cfg, env0, batches, budgets,
+                                      hw_rows)                    # warm jit
+        t0 = time.perf_counter()
+        served = dnnfuser_infer_batch(params, cfg, env0, batches, budgets,
+                                      hw_rows)
+        wall = time.perf_counter() - t0
+
+        for i, (acc, b) in enumerate(conds):
+            env = FusionEnv(wl, acc, batch=64, budget_bytes=b * MB,
+                            nmax=su["max_steps"])
+            host = dnnfuser_infer(params, cfg, env)
+            parity = bool((host.strategy == served["strategy"][i]).all())
+            gs = gsampler_search(env, su["ga"], top_k=4)
+            dt_sp = float(served["speedup"][i])
+            dt_valid = bool(served["valid"][i])
+            ratio = dt_sp / gs.speedup if (dt_valid and gs.valid) else 0.0
+            rows.append(dict(
+                workload=wl.name, accel=acc.name, budget_mb=b,
+                held_out=acc.name == HOLDOUT, dt_speedup=dt_sp,
+                dt_valid=dt_valid, teacher_speedup=gs.speedup,
+                teacher_valid=gs.valid, ratio=ratio, parity=parity))
+            tag = "HELD-OUT" if acc.name == HOLDOUT else "train   "
+            print(f"  {wl.name:9s} {acc.name:10s} {tag} @{b:5.1f}MB: "
+                  f"DT {fmt_speedup(dt_sp, dt_valid):>5s}x vs G-Sampler "
+                  f"{fmt_speedup(gs.speedup, gs.valid):>5s}x "
+                  f"(ratio {ratio:4.2f}) parity={parity}")
+
+        us_per_cond = wall * 1e6 / len(conds)
+        hold = [r for r in rows if r["workload"] == wl.name and r["held_out"]
+                and r["ratio"] > 0]
+        hold_ratio = (float(np.mean([r["ratio"] for r in hold]))
+                      if hold else 0.0)
+        csv_rows.append((f"hw_generalization_{wl.name}", us_per_cond,
+                         f"holdout_ratio={hold_ratio:.2f}"))
+
+    parity_all = all(r["parity"] for r in rows)
+    hold_valid = [r for r in rows if r["held_out"]]
+    report = {
+        "bench": "hw_generalization",
+        "device": jax.devices()[0].platform,
+        "quick": quick,
+        "train_accels": TRAIN_ACCELS,
+        "holdout_accel": HOLDOUT,
+        "hw_feature_dim": HW_FEATURE_DIM,
+        "teacher_trajectories": art["n_traj"],
+        "imitation_loss": art["final_loss"],
+        "fused_host_parity": parity_all,
+        "holdout_valid_fraction": float(np.mean(
+            [r["dt_valid"] for r in hold_valid])) if hold_valid else 0.0,
+        "holdout_mean_ratio": float(np.mean(
+            [r["ratio"] for r in hold_valid if r["ratio"] > 0]) if any(
+            r["ratio"] > 0 for r in hold_valid) else 0.0),
+        "results": rows,
+    }
+    path = pathlib.Path(out)
+    path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {path}  (holdout mean DT/G-Sampler ratio "
+          f"{report['holdout_mean_ratio']:.2f}, parity={parity_all})")
+    if not parity_all:
+        # RuntimeError, not SystemExit: benchmarks/run.py isolates suite
+        # failures with `except Exception` and must keep running
+        raise RuntimeError("fused/batched serving diverged from the host "
+                           "reference — the §11 serving contract is broken")
+    return csv_rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized: tiny workload, small GA, short training")
+    ap.add_argument("--out", default="BENCH_hw.json")
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,19 +1,22 @@
-"""Batched mapper serving: many (batch, budget) conditions, ONE device call.
+"""Batched mapper serving: many (batch, budget, accel) conditions, ONE call.
 
     PYTHONPATH=src python examples/serve_mapper.py [--conditions 48]
 
 A deployed mapper service answers streams of queries like "map VGG16 under
-a 20 MB buffer at batch 32" — each a full one-shot rollout.  The
-device-resident serving primitive ``dnnfuser_infer_batch`` (DESIGN.md §9)
-vmaps the fused scan rollout over a stacked grid of conditions, so the
-whole request batch costs a single jitted call: this is the fan-out surface
-the generalization benchmarks and any production front-end sit on.
+a 20 MB buffer at batch 32 on a mobile-class NPU" — each a full one-shot
+rollout.  The device-resident serving primitive ``dnnfuser_infer_batch``
+(DESIGN.md §9, §11) vmaps the fused scan rollout over a stacked grid of
+conditions — batch size, memory budget AND the accelerator itself ride
+per-row traced vectors — so the whole heterogeneous request batch costs a
+single jitted call: this is the fan-out surface the generalization
+benchmarks and any production front-end sit on.
 
-1. train a small DNNFuser mapper on G-Sampler teacher data (as quickstart);
-2. stack a grid of (batch, budget) conditions — including conditions never
-   seen in training;
-3. serve them all in one call and report throughput + per-condition
-   validity/speedup.
+1. train an hw-conditioned DNNFuser on a G-Sampler teacher corpus spanning
+   two zoo accelerators (edge + mobile);
+2. stack a grid of (batch, budget, accel) conditions — budgets never seen
+   in training, plus rows on a THIRD accelerator (laptop) the mapper never
+   trained on;
+3. serve them all in one call and report throughput + per-accel validity.
 """
 import argparse
 import time
@@ -21,9 +24,10 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (DTConfig, FusionEnv, PAPER_ACCEL, TrainConfig,
-                        collect_teacher_data, dnnfuser_infer_batch, dt_init,
-                        dt_loss, train_model)
+from repro.core import (ACCEL_ZOO, DTConfig, FusionEnv, GSamplerConfig,
+                        HW_FEATURE_DIM, TrainConfig, dnnfuser_infer_batch,
+                        dt_init, dt_loss, generate_teacher_corpus,
+                        train_model)
 from repro.workloads import vgg16
 
 MB = 2 ** 20
@@ -38,26 +42,35 @@ def main():
     wl = vgg16()
     print(wl.summary())
 
-    print("\n[1/2] training the mapper (G-Sampler teacher @ 16-64 MB) ...")
-    ds = collect_teacher_data([wl], PAPER_ACCEL, batch=64,
-                              budgets_mb=[16, 32, 48, 64], max_steps=20)
-    cfg = DTConfig(max_steps=20)
+    train_accels = [ACCEL_ZOO["edge"], ACCEL_ZOO["mobile"]]
+    print("\n[1/2] training an hw-conditioned mapper "
+          "(teacher @ 16-64 MB on edge + mobile) ...")
+    ds = generate_teacher_corpus(
+        [wl], train_accels, batch=64, budgets_mb=[16, 32, 48, 64],
+        max_steps=20, ga_cfg=GSamplerConfig(population=24, generations=20))
+    cfg = DTConfig(max_steps=20, hw_dim=HW_FEATURE_DIM)
     params = dt_init(jax.random.PRNGKey(0), cfg)
     params, log = train_model(lambda p, b: dt_loss(p, cfg, b), params, ds,
                               TrainConfig(steps=args.steps, batch_size=16))
-    print(f"      final imitation loss {log['final_loss']:.4f}")
+    print(f"      {len(ds)} trajectories; final imitation loss "
+          f"{log['final_loss']:.4f}")
 
     C = args.conditions
     rng = np.random.default_rng(0)
+    serve_accels = [ACCEL_ZOO["edge"], ACCEL_ZOO["mobile"],
+                    ACCEL_ZOO["laptop"]]          # laptop: never trained on
+    rows = [serve_accels[i]
+            for i in rng.integers(0, len(serve_accels), size=C)]
     batches = rng.choice([16, 32, 64], size=C).astype(np.float32)
     budgets = (rng.uniform(8.0, 72.0, size=C) * MB).astype(np.float32)
-    env = FusionEnv(wl, PAPER_ACCEL, batch=64, budget_bytes=32 * MB,
-                    nmax=20)   # supplies the packed workload + HW config
+    env = FusionEnv(wl, ACCEL_ZOO["edge"], batch=64, budget_bytes=32 * MB,
+                    nmax=20)   # supplies the packed workload
 
-    print(f"[2/2] serving {C} (batch, budget) conditions in one call ...")
-    dnnfuser_infer_batch(params, cfg, env, batches, budgets)   # warm jit
+    print(f"[2/2] serving {C} (batch, budget, accel) conditions in one "
+          f"call ...")
+    dnnfuser_infer_batch(params, cfg, env, batches, budgets, rows)  # warm
     t0 = time.perf_counter()
-    out = dnnfuser_infer_batch(params, cfg, env, batches, budgets)
+    out = dnnfuser_infer_batch(params, cfg, env, batches, budgets, rows)
     wall = time.perf_counter() - t0
 
     valid = out["valid"]
@@ -67,13 +80,19 @@ def main():
         print(f"      0/{C} within budget — every requested budget is below "
               f"this workload's irreducible (all-SYNC) working set")
         return
-    print(f"      {int(valid.sum())}/{C} within budget; "
-          f"speedups {out['speedup'][valid].min():.2f}x.."
-          f"{out['speedup'][valid].max():.2f}x")
+    for acc in serve_accels:
+        sel = np.array([r.name == acc.name for r in rows])
+        if not sel.any():
+            continue
+        v = valid[sel]
+        tag = " (UNSEEN)" if acc.name == "laptop" else ""
+        print(f"      {acc.name:7s}{tag}: {int(v.sum())}/{int(sel.sum())} "
+              f"within budget; speedups up to "
+              f"{out['speedup'][sel][v].max() if v.any() else 0:.2f}x")
     worst = int(np.argmin(out["speedup"]))
     best = int(np.argmax(np.where(valid, out["speedup"], -np.inf)))
     for tag, i in (("best", best), ("worst", worst)):
-        print(f"      {tag}: batch {int(batches[i])}, "
+        print(f"      {tag}: {rows[i].name}, batch {int(batches[i])}, "
               f"budget {budgets[i]/MB:5.1f} MB -> "
               f"speedup {out['speedup'][i]:.2f}x, "
               f"usage {out['peak_mem'][i]/MB:5.1f} MB, "

@@ -1,5 +1,5 @@
 from .checkpointer import (Checkpointer, save_pytree, restore_pytree,
-                           restore_subtree)
+                           restore_subtree, upgrade_pytree)
 
 __all__ = ["Checkpointer", "save_pytree", "restore_pytree",
-           "restore_subtree"]
+           "restore_subtree", "upgrade_pytree"]

@@ -25,7 +25,7 @@ import jax
 import numpy as np
 
 __all__ = ["Checkpointer", "save_pytree", "restore_pytree",
-           "restore_subtree"]
+           "restore_subtree", "upgrade_pytree"]
 
 
 def _flatten(tree):
@@ -114,6 +114,47 @@ def restore_pytree(path: pathlib.Path, template=None, *, shardings=None,
     keyed, _ = _flatten(template)
     assert set(keyed) == set(arrays), "checkpoint/template mismatch"
     return _rebuild(arrays, template, shardings=shardings)
+
+
+def upgrade_pytree(path: pathlib.Path, template, *, prefix: str | None = None,
+                   verify: bool = True):
+    """Restore an OLDER checkpoint into a NEWER architecture ``template``.
+
+    The documented §11 upgrade path for pre-hardware-condition mappers:
+    leaves present in the checkpoint restore as usual; leaves the checkpoint
+    lacks (e.g. the hw-condition embedding ``emb_h`` of a
+    ``DTConfig(hw_dim>0)`` model) are ZERO-filled in the template's
+    shape/dtype.  Because the hw embedding enters ADDITIVELY (see
+    ``core.model``), a zero-filled upgrade is function-identical to the old
+    mapper until fine-tuned on hw-labeled data.  ``prefix`` selects a
+    subtree of the checkpoint (e.g. ``"params"`` of a {params, opt_state}
+    training checkpoint).  Returns ``(tree, missing_keys)`` so callers can
+    log / assert what was newly initialized; extra checkpoint leaves the
+    template does not reference are ignored."""
+    arrays = restore_pytree(path, None, verify=verify)
+    if prefix is not None:
+        pre = f"{prefix}/"
+        arrays = {k[len(pre):]: v for k, v in arrays.items()
+                  if k.startswith(pre)}
+    keyed, _ = _flatten(template)
+    missing, sub = [], {}
+    for k, tmpl_leaf in keyed.items():
+        if k in arrays:
+            want = tuple(np.shape(tmpl_leaf))
+            if tuple(arrays[k].shape) != want:
+                # an upgrade only ADDS leaves; a reshaped existing leaf
+                # (e.g. a grown `time` table) would restore misaligned and
+                # fail silently at serving (gather clamps) — refuse loudly
+                raise ValueError(
+                    f"checkpoint leaf {k} has shape {arrays[k].shape} but "
+                    f"the template expects {want}; upgrade_pytree only "
+                    f"fills leaves the checkpoint lacks")
+            sub[k] = arrays[k]
+        else:
+            missing.append(k)
+            arr = np.asarray(tmpl_leaf)
+            sub[k] = np.zeros(arr.shape, arr.dtype)
+    return _rebuild(sub, template), missing
 
 
 def restore_subtree(path: pathlib.Path, prefix: str, template, *,

@@ -6,7 +6,9 @@ Layers: analytical fusion cost model (cost_model/ref_model), RL environment
 (seq2seq), teacher-data pipeline (dataset), imitation trainer (train) and
 one-shot conditional inference (infer).
 """
-from .accel import AccelConfig, PAPER_ACCEL
+from .accel import (AccelConfig, PAPER_ACCEL, ACCEL_ZOO, HwVec, HW_FIELDS,
+                    HW_FEATURE_DIM, as_hw, stack_hw, hw_array, hw_from_array,
+                    accel_features, accel_from_features)
 from .cost_model import (SYNC, CostOut, evaluate, evaluate_population,
                          evaluate_population_stats, baseline_no_fusion,
                          prefix_trace, pack_workload, stack_workloads,
@@ -36,7 +38,10 @@ from .infer import (InferResult, dnnfuser_infer, s2s_infer,
                     dnnfuser_infer_batch)
 
 __all__ = [
-    "AccelConfig", "PAPER_ACCEL", "SYNC", "CostOut", "evaluate",
+    "AccelConfig", "PAPER_ACCEL", "ACCEL_ZOO", "HwVec", "HW_FIELDS",
+    "HW_FEATURE_DIM", "as_hw", "stack_hw", "hw_array", "hw_from_array",
+    "accel_features", "accel_from_features",
+    "SYNC", "CostOut", "evaluate",
     "evaluate_population", "evaluate_population_stats", "baseline_no_fusion",
     "prefix_trace", "pack_workload", "PrefixConsts", "PrefixCarry",
     "prefix_consts", "prefix_init", "prefix_step", "prefix_out",

@@ -13,6 +13,15 @@ Everything is fixed-shape ``jnp`` so a whole GA population (and a batch of
 memory conditions) evaluates in a single jitted/vmapped call — this is the
 search hot loop the Pallas kernel ``kernels/fusion_eval`` also implements.
 
+The accelerator is a CONDITION, not a compile-time constant (DESIGN.md
+§11): every entry point takes ``hw`` as either a host ``AccelConfig`` or a
+traced ``accel.HwVec`` pytree, so one jitted program evaluates strategies
+across a *batch of accelerators* (the grid entry points vmap the hardware
+axis alongside batch/budget).  Packed workloads carry their pack-time
+bytes/elem (``BPE``); evaluation rescales activation/weight bytes to the
+serving accelerator's datatype in-graph, which is an exact identity when
+the two match.
+
 Array convention (see ``Workload.arrays``): position 0 is the network input
 pseudo-tensor, positions ``1..n`` are layers, padded to ``nmax``.
 """
@@ -25,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .accel import AccelConfig
+from .accel import AccelConfig, HwVec, as_hw, stack_hw
 
 __all__ = ["SYNC", "CostOut", "evaluate", "evaluate_population",
            "evaluate_population_stats", "baseline_no_fusion", "prefix_trace",
@@ -47,14 +56,32 @@ class CostOut(NamedTuple):
 
 
 def pack_workload(workload, hw: AccelConfig, nmax: int = 64) -> dict[str, jnp.ndarray]:
-    """Device-ready workload arrays (bytes scaled by hw.bytes_per_elem)."""
+    """Device-ready workload arrays (bytes scaled by hw.bytes_per_elem).
+
+    ``BPE`` records the pack-time bytes/elem so the evaluators can rescale
+    A/W when serving the same packing on an accelerator with a different
+    datatype (DESIGN §11) — identity when they match."""
     arrs = workload.arrays(nmax, bytes_per_elem=hw.bytes_per_elem)
     out = {k: jnp.asarray(v, dtype=jnp.float32) for k, v in arrs.items()
            if k in ("A", "W", "F", "OE", "UC", "SHAPE6")}
     out["SKIP"] = jnp.asarray(arrs["SKIP"], dtype=jnp.int32)
     out["mask"] = jnp.asarray(arrs["mask"])
     out["n"] = jnp.asarray(arrs["n"], dtype=jnp.int32)
+    out["BPE"] = jnp.asarray(hw.bytes_per_elem, jnp.float32)
     return out
+
+
+def _scaled_AW(wl: dict, hw: HwVec) -> tuple[jax.Array, jax.Array]:
+    """A/W rescaled from pack-time bytes to ``hw``'s bytes/elem.
+
+    The multiplier is exactly 1.0 when the serving accelerator matches the
+    packing (IEEE identity), so the static-hw path stays bit-exact."""
+    A, W = wl["A"], wl["W"]
+    bpe = wl.get("BPE")
+    if bpe is None:
+        return A, W
+    s = hw.bytes_per_elem / bpe
+    return A * s, W * s
 
 
 def stack_workloads(wls: list[dict]) -> dict[str, jnp.ndarray]:
@@ -87,12 +114,14 @@ def _prep_strategy(strategy: jax.Array, mask: jax.Array, batch: float) -> tuple:
 
 
 def _evaluate_full(wl: dict, strategy: jax.Array, batch: jax.Array,
-                   budget_bytes: jax.Array, hw: AccelConfig,
+                   budget_bytes: jax.Array, hw,
                    nseg: int | None = None):
     """``evaluate`` body, additionally returning the group decomposition
     (``gid`` [P] and per-group activation memory ``M_g`` [nseg]) that search
     heuristics (G-Sampler repair) use to pick split/shrink targets."""
-    A, W, F, OE, UC = wl["A"], wl["W"], wl["F"], wl["OE"], wl["UC"]
+    hw = as_hw(hw)
+    A, W = _scaled_AW(wl, hw)
+    F, OE, UC = wl["F"], wl["OE"], wl["UC"]
     mask, skip, n = wl["mask"], wl["SKIP"], wl["n"]
     P = A.shape[0]
     nseg = nseg or P
@@ -162,20 +191,26 @@ def _evaluate_full(wl: dict, strategy: jax.Array, batch: jax.Array,
     return CostOut(latency, peak_mem, traffic, valid, n_groups), gid, M_g
 
 
-@functools.partial(jax.jit, static_argnames=("hw", "nseg"))
-def evaluate(wl: dict, strategy: jax.Array, batch: jax.Array,
-             budget_bytes: jax.Array, hw: AccelConfig, *,
-             nseg: int | None = None) -> CostOut:
-    """Cost of one strategy. All inputs may be traced except ``hw``/``nseg``."""
+@functools.partial(jax.jit, static_argnames=("nseg",))
+def _evaluate_jit(wl, strategy, batch, budget_bytes, hw, nseg=None):
     out, _, _ = _evaluate_full(wl, strategy, batch, budget_bytes, hw, nseg)
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("hw",))
-def baseline_no_fusion(wl: dict, batch: jax.Array, hw: AccelConfig) -> CostOut:
-    """The paper's baseline: best layer-by-layer mapping, full batch per
-    layer, minimal buffer, every activation round-trips off-chip."""
-    A, W, F, OE, UC = wl["A"], wl["W"], wl["F"], wl["OE"], wl["UC"]
+def evaluate(wl: dict, strategy: jax.Array, batch: jax.Array,
+             budget_bytes: jax.Array, hw, *,
+             nseg: int | None = None) -> CostOut:
+    """Cost of one strategy. All inputs may be traced except ``nseg`` —
+    including ``hw`` (AccelConfig or ``accel.HwVec``, DESIGN §11)."""
+    return _evaluate_jit(wl, strategy, batch, budget_bytes, as_hw(hw),
+                         nseg=nseg)
+
+
+@jax.jit
+def _baseline_jit(wl, batch, hw):
+    hw = as_hw(hw)
+    A, W = _scaled_AW(wl, hw)
+    F, OE, UC = wl["F"], wl["OE"], wl["UC"]
     mask = wl["mask"]
     B = jnp.asarray(batch, jnp.float32)
     fmask = mask.astype(jnp.float32)
@@ -193,17 +228,33 @@ def baseline_no_fusion(wl: dict, batch: jax.Array, hw: AccelConfig) -> CostOut:
     return CostOut(latency, peak, traffic, jnp.asarray(True), n)
 
 
-@functools.partial(jax.jit, static_argnames=("hw",))
+def baseline_no_fusion(wl: dict, batch: jax.Array, hw) -> CostOut:
+    """The paper's baseline: best layer-by-layer mapping, full batch per
+    layer, minimal buffer, every activation round-trips off-chip."""
+    return _baseline_jit(wl, batch, as_hw(hw))
+
+
+@jax.jit
+def _population_jit(wl, strategies, batch, budget_bytes, hw):
+    return jax.vmap(
+        lambda s: _evaluate_jit(wl, s, batch, budget_bytes, hw))(strategies)
+
+
 def evaluate_population(wl: dict, strategies: jax.Array, batch: jax.Array,
-                        budget_bytes: jax.Array, hw: AccelConfig) -> CostOut:
+                        budget_bytes: jax.Array, hw) -> CostOut:
     """Vectorized cost of a population ``[pop, P]`` of strategies."""
-    return jax.vmap(lambda s: evaluate(wl, s, batch, budget_bytes, hw))(strategies)
+    return _population_jit(wl, strategies, batch, budget_bytes, as_hw(hw))
 
 
-@functools.partial(jax.jit, static_argnames=("hw",))
+@jax.jit
+def _population_stats_jit(wl, strategies, batch, budget_bytes, hw):
+    return jax.vmap(
+        lambda s: _evaluate_full(wl, s, batch, budget_bytes, hw))(strategies)
+
+
 def evaluate_population_stats(wl: dict, strategies: jax.Array,
                               batch: jax.Array, budget_bytes: jax.Array,
-                              hw: AccelConfig):
+                              hw):
     """Like :func:`evaluate_population` but also returns the per-strategy
     group decomposition: ``(CostOut [pop], gid [pop, P], M_g [pop, P])``.
 
@@ -211,54 +262,84 @@ def evaluate_population_stats(wl: dict, strategies: jax.Array,
     and ``M_g[p, g]`` that group's staged-activation peak — everything a
     constraint-repair operator needs to find the worst group and its span
     in one device call (DESIGN.md §3)."""
-    return jax.vmap(
-        lambda s: _evaluate_full(wl, s, batch, budget_bytes, hw))(strategies)
+    return _population_stats_jit(wl, strategies, batch, budget_bytes,
+                                 as_hw(hw))
 
 
 # ---------------------------------------------------------------------------
-# Condition-grid evaluation (DESIGN.md §10).
+# Condition-grid evaluation (DESIGN.md §10, §11).
 #
-# A teacher run sweeps a grid of C = |workloads| x |budgets| conditions, each
-# with its own GA population.  The three entry points below vmap the
-# per-condition evaluators over a ``stack_workloads`` dict plus per-condition
-# batch/budget vectors, so a whole grid generation — C x POP strategies —
-# costs one device call (and, inside the fused GA, zero host round trips).
+# A teacher run sweeps a grid of C = |workloads| x |accels| x |budgets|
+# conditions, each with its own GA population.  The three entry points below
+# vmap the per-condition evaluators over a ``stack_workloads`` dict plus
+# per-condition batch/budget vectors AND a per-condition ``accel.stack_hw``
+# hardware vector, so a whole grid generation — C x POP strategies across
+# heterogeneous accelerators — costs one device call (and, inside the fused
+# GA, zero host round trips).
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("hw",))
-def evaluate_grid(wls: dict, strategies: jax.Array, batches: jax.Array,
-                  budgets: jax.Array, hw: AccelConfig) -> CostOut:
-    """CostOut [C, POP] of per-condition populations ``strategies``
-    [C, POP, P] over stacked workloads [C, ...] and per-condition
-    ``batches`` / ``budgets`` [C]."""
+@jax.jit
+def _grid_jit(wls, strategies, batches, budgets, hw):
     return jax.vmap(
-        lambda wl, s, b, m: evaluate_population(wl, s, b, m, hw)
-    )(wls, strategies, batches, budgets)
+        lambda wl, s, b, m, h: _population_jit(wl, s, b, m, h)
+    )(wls, strategies, batches, budgets, hw)
 
 
-@functools.partial(jax.jit, static_argnames=("hw",))
+def evaluate_grid(wls: dict, strategies: jax.Array, batches: jax.Array,
+                  budgets: jax.Array, hw) -> CostOut:
+    """CostOut [C, POP] of per-condition populations ``strategies``
+    [C, POP, P] over stacked workloads [C, ...], per-condition ``batches``
+    / ``budgets`` [C] and per-condition hardware (anything
+    ``accel.stack_hw`` accepts: one config, a list, or stacked vectors)."""
+    return _grid_jit(wls, strategies, batches, budgets,
+                     stack_hw(hw, strategies.shape[0]))
+
+
+@jax.jit
+def _grid_stats_jit(wls, strategies, batches, budgets, hw):
+    return jax.vmap(
+        lambda wl, s, b, m, h: jax.vmap(
+            lambda one: _evaluate_full(wl, one, b, m, h))(s)
+    )(wls, strategies, batches, budgets, hw)
+
+
 def evaluate_grid_stats(wls: dict, strategies: jax.Array, batches: jax.Array,
-                        budgets: jax.Array, hw: AccelConfig):
+                        budgets: jax.Array, hw):
     """Grid counterpart of :func:`evaluate_population_stats`:
     ``(CostOut [C, POP], gid [C, POP, P], M_g [C, POP, P])`` — the
     constraint-repair operator's split/shrink targets for every child of
     every condition in one call."""
-    return jax.vmap(
-        lambda wl, s, b, m: jax.vmap(
-            lambda one: _evaluate_full(wl, one, b, m, hw))(s)
-    )(wls, strategies, batches, budgets)
+    return _grid_stats_jit(wls, strategies, batches, budgets,
+                           stack_hw(hw, strategies.shape[0]))
 
 
-@functools.partial(jax.jit, static_argnames=("hw",))
-def baseline_grid(wls: dict, batches: jax.Array, hw: AccelConfig) -> CostOut:
+@jax.jit
+def _baseline_grid_jit(wls, batches, hw):
+    return jax.vmap(lambda wl, b, h: _baseline_jit(wl, b, h)
+                    )(wls, batches, hw)
+
+
+def baseline_grid(wls: dict, batches: jax.Array, hw) -> CostOut:
     """Per-condition no-fusion baselines, CostOut [C]."""
-    return jax.vmap(lambda wl, b: baseline_no_fusion(wl, b, hw))(wls, batches)
+    return _baseline_grid_jit(wls, batches,
+                              stack_hw(hw, np.shape(batches)[0]))
 
 
-@functools.partial(jax.jit, static_argnames=("hw",))
+@jax.jit
+def _prefix_trace_jit(wl, strategy, batch, budget_bytes, hw):
+    P = strategy.shape[0]
+    pos = jnp.arange(P)
+
+    def at_t(t):
+        s = jnp.where(pos < t, strategy, SYNC)
+        return _evaluate_jit(wl, s, batch, budget_bytes, hw)
+
+    return jax.vmap(at_t)(jnp.arange(P))
+
+
 def prefix_trace(wl: dict, strategy: jax.Array, batch: jax.Array,
-                 budget_bytes: jax.Array, hw: AccelConfig) -> CostOut:
+                 budget_bytes: jax.Array, hw) -> CostOut:
     """Partial-strategy trace for RL state decoration (paper Eq. 2).
 
     Entry ``t`` evaluates the strategy with only positions ``< t`` applied
@@ -266,14 +347,7 @@ def prefix_trace(wl: dict, strategy: jax.Array, batch: jax.Array,
     ``t``: ``P_{a_0..a_{t-1}}`` and the memory committed so far.
     Returns CostOut with a leading axis of length ``P``.
     """
-    P = strategy.shape[0]
-    pos = jnp.arange(P)
-
-    def at_t(t):
-        s = jnp.where(pos < t, strategy, SYNC)
-        return evaluate(wl, s, batch, budget_bytes, hw)
-
-    return jax.vmap(at_t)(jnp.arange(P))
+    return _prefix_trace_jit(wl, strategy, batch, budget_bytes, as_hw(hw))
 
 
 # ---------------------------------------------------------------------------
@@ -295,11 +369,12 @@ def prefix_trace(wl: dict, strategy: jax.Array, batch: jax.Array,
 
 
 class PrefixConsts(NamedTuple):
-    """Per-(workload, batch, budget) constants for the prefix carry.
+    """Per-(workload, batch, budget, hw) constants for the prefix carry.
 
-    All fields are jnp arrays (``batch``/``budget`` may be traced, e.g. under
-    a vmap over serving conditions); the ``AccelConfig`` stays a static
-    Python argument to the ``prefix_*`` functions."""
+    All fields are jnp arrays (``batch``/``budget`` — and since §11 the
+    accelerator itself — may be traced, e.g. under a vmap over serving
+    conditions); ``A``/``W`` are already rescaled to the accelerator's
+    bytes/elem."""
     A: jax.Array          # [P] act bytes/sample (position 0 = network input)
     A_prev: jax.Array     # [P] producer act bytes
     W: jax.Array          # [P] weight bytes
@@ -350,14 +425,16 @@ def _suffix_max(x: jax.Array, pad: int = 2) -> jax.Array:
 
 
 def prefix_consts(wl: dict, batch: jax.Array, budget_bytes: jax.Array,
-                  hw: AccelConfig) -> PrefixConsts:
+                  hw) -> PrefixConsts:
     """Precompute the per-position constants of the forced-SYNC suffix.
 
     A forced-SYNC position is a singleton group: unfused, so its effective
     micro-batch is the full batch, its staged output one sample, and its
     working set clamped to the streaming buffer — none of which depends on
     the actions taken for the prefix (see ``evaluate``)."""
-    A, W, F = wl["A"], wl["W"], wl["F"]
+    hw = as_hw(hw)
+    A, W = _scaled_AW(wl, hw)
+    F = wl["F"]
     OE, UC = wl["OE"], wl["UC"]
     mask, skip, n = wl["mask"], wl["SKIP"], wl["n"]
     P = A.shape[0]
@@ -418,7 +495,7 @@ def _same_group(consts: PrefixConsts, src, has, g_start):
 
 
 def prefix_step(consts: PrefixConsts, carry: PrefixCarry, action,
-                hw: AccelConfig) -> PrefixCarry:
+                hw) -> PrefixCarry:
     """Commit ``action`` for position ``carry.t`` (O(1) work).
 
     Matches ``evaluate`` semantics exactly: a non-SYNC action extends the
@@ -426,6 +503,7 @@ def prefix_step(consts: PrefixConsts, carry: PrefixCarry, action,
     precomputed singleton when the group would hold one sync'd position, or
     by reducing the carried component sums.  Position 0 is the network-input
     pseudo tensor and contributes nothing."""
+    hw = as_hw(hw)
     c = consts
     i = carry.t
     B = c.B
@@ -488,13 +566,14 @@ def prefix_step(consts: PrefixConsts, carry: PrefixCarry, action,
 
 
 def prefix_out(consts: PrefixConsts, carry: PrefixCarry,
-               hw: AccelConfig) -> CostOut:
+               hw) -> CostOut:
     """CostOut of the carried prefix: actions ``< t`` applied, rest SYNC.
 
     Identical quantity to ``prefix_trace`` entry ``t`` (and to a full
     ``evaluate`` once ``t == n + 1``), assembled in O(1) from the carry,
     one forced-SYNC close of the open group, and the precomputed suffix
     aggregates."""
+    hw = as_hw(hw)
     c = consts
     t = carry.t
     B = c.B
@@ -567,7 +646,7 @@ def prefix_out(consts: PrefixConsts, carry: PrefixCarry,
 
 
 def prefix_probe_peak(consts: PrefixConsts, carry: PrefixCarry, action,
-                      hw: AccelConfig) -> jax.Array:
+                      hw) -> jax.Array:
     """Peak memory of the probe strategy (``action`` at position ``t``,
     everything after forced SYNC) — the quantity the inference-time budget
     guard tests, without the latency/roofline math of a full
@@ -575,6 +654,7 @@ def prefix_probe_peak(consts: PrefixConsts, carry: PrefixCarry, action,
 
     Equals ``prefix_out(prefix_step(carry, action)).peak_mem`` for a
     non-SYNC ``action`` (the guard never probes SYNC)."""
+    hw = as_hw(hw)
     c = consts
     i = carry.t
     B = c.B
@@ -606,15 +686,8 @@ def prefix_probe_peak(consts: PrefixConsts, carry: PrefixCarry, action,
     return jnp.maximum(carry.peak, grp)
 
 
-@functools.partial(jax.jit, static_argnames=("hw",))
-def prefix_scan(wl: dict, strategy: jax.Array, batch: jax.Array,
-                budget_bytes: jax.Array, hw: AccelConfig):
-    """Carry-based equivalent of :func:`prefix_trace`.
-
-    Returns ``(trace, final)``: ``trace`` is a CostOut with leading axis
-    ``P`` whose entry ``t`` matches ``prefix_trace`` entry ``t``, and
-    ``final`` the full-strategy CostOut — all from one O(P) scan instead of
-    P full evaluations."""
+@jax.jit
+def _prefix_scan_jit(wl, strategy, batch, budget_bytes, hw):
     consts = prefix_consts(wl, batch, budget_bytes, hw)
     carry = prefix_init(consts)
 
@@ -626,6 +699,17 @@ def prefix_scan(wl: dict, strategy: jax.Array, batch: jax.Array,
 
     carry, trace = jax.lax.scan(step, carry, strategy)
     return trace, prefix_out(consts, carry, hw)
+
+
+def prefix_scan(wl: dict, strategy: jax.Array, batch: jax.Array,
+                budget_bytes: jax.Array, hw):
+    """Carry-based equivalent of :func:`prefix_trace`.
+
+    Returns ``(trace, final)``: ``trace`` is a CostOut with leading axis
+    ``P`` whose entry ``t`` matches ``prefix_trace`` entry ``t``, and
+    ``final`` the full-strategy CostOut — all from one O(P) scan instead of
+    P full evaluations."""
+    return _prefix_scan_jit(wl, strategy, batch, budget_bytes, as_hw(hw))
 
 
 def random_strategy(rng: np.random.Generator, n: int, nmax: int, batch: int,

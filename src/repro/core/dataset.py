@@ -29,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import cost_model as cm
-from .accel import AccelConfig
+from .accel import (AccelConfig, HW_FEATURE_DIM, accel_features, stack_hw)
 from .env import (FusionEnv, STATE_DIM, _budget_feat, _shape_feats,
                   encode_action_jnp, returns_to_go)
 from .gsampler import GSamplerConfig, gsampler_search, gsampler_search_grid
@@ -46,12 +46,16 @@ class TrajectoryDataset:
     states: np.ndarray     # [N, T, STATE_DIM] f32
     actions: np.ndarray    # [N, T] f32 (encoded)
     mask: np.ndarray       # [N, T] f32
-    meta: list = field(default_factory=list)   # (workload, budget_mb, speedup)
+    meta: list = field(default_factory=list)   # (workload, budget_mb, speedup, accel)
     t0: np.ndarray | None = None   # [N] i32 absolute window offsets
+    hw: np.ndarray | None = None   # [N, HW_FEATURE_DIM] f32 accel condition
 
     def __post_init__(self):
         if self.t0 is None:
             self.t0 = np.zeros(self.rtg.shape[0], np.int32)
+        if self.hw is None:
+            self.hw = np.zeros((self.rtg.shape[0], HW_FEATURE_DIM),
+                               np.float32)
 
     def __len__(self):
         return self.rtg.shape[0]
@@ -60,11 +64,19 @@ class TrajectoryDataset:
     def max_steps(self) -> int:
         return self.rtg.shape[1]
 
+    def hw_feats(self) -> np.ndarray:
+        """Per-trajectory hw condition rows; zeros for corpora pickled
+        before DESIGN §11 (which restore without ``hw``)."""
+        h = getattr(self, "hw", None)
+        if h is None:
+            h = np.zeros((len(self), HW_FEATURE_DIM), np.float32)
+        return h
+
     def sample(self, rng: np.random.Generator, batch_size: int) -> dict:
         idx = rng.integers(0, len(self), size=batch_size)
         return {"rtg": self.rtg[idx], "states": self.states[idx],
                 "actions": self.actions[idx], "mask": self.mask[idx],
-                "t0": self.t0[idx]}
+                "t0": self.t0[idx], "hw": self.hw_feats()[idx]}
 
     def split(self, frac: float, seed: int = 0):
         rng = np.random.default_rng(seed)
@@ -73,7 +85,7 @@ class TrajectoryDataset:
         tr, va = perm[k:], perm[:k]
         pick = lambda ix: TrajectoryDataset(
             self.rtg[ix], self.states[ix], self.actions[ix], self.mask[ix],
-            [self.meta[i] for i in ix], self.t0[ix])
+            [self.meta[i] for i in ix], self.t0[ix], self.hw_feats()[ix])
         return pick(tr), pick(va)
 
 
@@ -97,6 +109,7 @@ def collect_teacher_data(workloads: list, hw: AccelConfig, batch: int,
     buffer-diversity trick the Decision-Transformer line relies on.
     """
     rng = np.random.default_rng(seed)
+    feats = np.asarray(accel_features(hw), np.float32)
     rows, meta = [], []
     for wi, wl in enumerate(workloads):
         for budget in budgets_mb:
@@ -120,11 +133,12 @@ def collect_teacher_data(workloads: list, hw: AccelConfig, batch: int,
                 if not valid:
                     continue
                 rows.append(_pad(traj, max_steps))
-                meta.append((wl.name, budget, sp))
+                meta.append((wl.name, budget, sp, hw.name))
     if not rows:
         raise RuntimeError("teacher produced no valid trajectories")
     rtg, st, ac, mk = (np.stack(x) for x in zip(*rows))
-    return TrajectoryDataset(rtg, st, ac, mk, meta)
+    return TrajectoryDataset(rtg, st, ac, mk, meta,
+                             hw=np.tile(feats, (len(rows), 1)))
 
 
 def merge_datasets(ds: list[TrajectoryDataset]) -> TrajectoryDataset:
@@ -134,7 +148,8 @@ def merge_datasets(ds: list[TrajectoryDataset]) -> TrajectoryDataset:
         np.concatenate([d.actions for d in ds]),
         np.concatenate([d.mask for d in ds]),
         sum([d.meta for d in ds], []),
-        np.concatenate([d.t0 for d in ds]))
+        np.concatenate([d.t0 for d in ds]),
+        np.concatenate([d.hw_feats() for d in ds]))
 
 
 # ---------------------------------------------------------------------------
@@ -142,28 +157,21 @@ def merge_datasets(ds: list[TrajectoryDataset]) -> TrajectoryDataset:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("hw",))
-def _decorate_grid(wls: dict, strategies: jax.Array, batches: jax.Array,
-                   budgets: jax.Array, hw: AccelConfig):
-    """Decorate [C, K] strategies into padded trajectories in one program.
-
-    Per strategy this is exactly ``env.decorate``: one O(P) ``prefix_scan``
-    supplies the per-step prefix latency/peak, from which the state vector
-    (paper Eq. 2) and the relabeled returns-to-go are assembled.  Returns
-    (states [C,K,P,STATE_DIM], rtg [C,K,P], actions [C,K,P], mask [C,K,P],
-    final CostOut [C,K])."""
+@jax.jit
+def _decorate_grid_jit(wls: dict, strategies: jax.Array, batches: jax.Array,
+                       budgets: jax.Array, hw):
     P = wls["A"].shape[-1]
     pos = jnp.arange(P)
 
-    def per_cond(wl, S, b, m):
-        base = cm.baseline_no_fusion(wl, b, hw).latency
+    def per_cond(wl, S, b, m, h):
+        base = cm.baseline_no_fusion(wl, b, h).latency
         feats = _shape_feats(wl["SHAPE6"])                  # [P, 6]
         bfeat = _budget_feat(m)
         idx = jnp.minimum(pos, wl["n"])
         valid = (pos <= wl["n"]).astype(jnp.float32)
 
         def per_strat(s):
-            trace, final = cm.prefix_scan(wl, s, b, m, hw)
+            trace, final = cm.prefix_scan(wl, s, b, m, h)
             perf = jnp.log1p(base / jnp.maximum(trace.latency, 1e-12))
             states = jnp.concatenate(
                 [feats[idx], jnp.full((P, 1), bfeat), perf[:, None]],
@@ -176,7 +184,22 @@ def _decorate_grid(wls: dict, strategies: jax.Array, batches: jax.Array,
         mk = jnp.broadcast_to(valid, (S.shape[0], P))
         return st, rtg, ac, mk, fin
 
-    return jax.vmap(per_cond)(wls, strategies, batches, budgets)
+    return jax.vmap(per_cond)(wls, strategies, batches, budgets, hw)
+
+
+def _decorate_grid(wls: dict, strategies: jax.Array, batches: jax.Array,
+                   budgets: jax.Array, hw):
+    """Decorate [C, K] strategies into padded trajectories in one program.
+
+    Per strategy this is exactly ``env.decorate``: one O(P) ``prefix_scan``
+    supplies the per-step prefix latency/peak, from which the state vector
+    (paper Eq. 2) and the relabeled returns-to-go are assembled.  ``hw``
+    is anything ``accel.stack_hw`` accepts — per-condition accelerators
+    ride the same vmap as batches/budgets (DESIGN §11).  Returns
+    (states [C,K,P,STATE_DIM], rtg [C,K,P], actions [C,K,P], mask [C,K,P],
+    final CostOut [C,K])."""
+    return _decorate_grid_jit(wls, strategies, batches, budgets,
+                              stack_hw(hw, strategies.shape[0]))
 
 
 def _augment_candidates(rng: np.random.Generator, elites: np.ndarray,
@@ -200,7 +223,7 @@ def _augment_candidates(rng: np.random.Generator, elites: np.ndarray,
     return np.concatenate([elites] + extra, axis=1) if extra else elites
 
 
-def generate_teacher_corpus(workloads: list, hw: AccelConfig, *,
+def generate_teacher_corpus(workloads: list, hw, *,
                             batch: int = 64, budgets_mb: list[float],
                             max_steps: int = 64, top_k: int = 8,
                             ga_cfg: GSamplerConfig | None = None,
@@ -209,22 +232,32 @@ def generate_teacher_corpus(workloads: list, hw: AccelConfig, *,
     """Device-grid teacher pipeline: the scalable twin of
     :func:`collect_teacher_data`.
 
-    One fused GA program searches the whole ``workloads x budgets_mb`` grid,
-    one fused decoration program relabels every elite (+ jittered variants)
-    into returns-to-go trajectories; the host only filters invalid rows and
-    dedups exact duplicates.  Deterministic: a fixed ``seed`` reproduces the
+    One fused GA program searches the whole ``workloads x accels x
+    budgets_mb`` grid (``hw`` may be a single :class:`AccelConfig` or a
+    sequence of them — the §11 accelerator axis), one fused decoration
+    program relabels every elite (+ jittered variants) into returns-to-go
+    trajectories; the host only filters invalid rows and dedups exact
+    duplicates.  Each trajectory stores its accelerator's normalized
+    feature vector (``TrajectoryDataset.hw``), the condition the hw-aware
+    mapper trains on.  Deterministic: a fixed ``seed`` reproduces the
     corpus bit-for-bit."""
-    conds = [(w, float(b)) for w in workloads for b in budgets_mb]
-    wl_list = [w for w, _ in conds]
-    budgets = np.asarray([b * MB for _, b in conds], np.float32)
+    accels = list(hw) if isinstance(hw, (list, tuple)) else [hw]
+    if any(not isinstance(a, AccelConfig) for a in accels):
+        raise TypeError("generate_teacher_corpus needs AccelConfig presets "
+                        "(packing + naming); got " + repr(accels))
+    conds = [(w, a, float(b)) for w in workloads for a in accels
+             for b in budgets_mb]
+    wl_list = [w for w, _, _ in conds]
+    hw_list = [a for _, a, _ in conds]
+    budgets = np.asarray([b * MB for _, _, b in conds], np.float32)
     batches = np.full(len(conds), float(batch), np.float32)
     ns = np.asarray([w.n for w in wl_list], np.int64)
     cfg = ga_cfg or GSamplerConfig(seed=seed)
 
     # pack the grid ONCE: the GA search and the decoration share it
     wls = cm.stack_workloads(
-        [cm.pack_workload(w, hw, max_steps) for w in wl_list])
-    res = gsampler_search_grid(wl_list, hw, batches, budgets,
+        [cm.pack_workload(w, a, max_steps) for w, a, _ in conds])
+    res = gsampler_search_grid(wl_list, hw_list, batches, budgets,
                                nmax=max_steps, cfg=cfg, top_k=top_k,
                                packed=wls)
     rng = np.random.default_rng(seed)
@@ -233,14 +266,16 @@ def generate_teacher_corpus(workloads: list, hw: AccelConfig, *,
 
     st, rtg, ac, mk, fin = _decorate_grid(
         wls, jnp.asarray(cand), jnp.asarray(batches), jnp.asarray(budgets),
-        hw)
+        hw_list)
     st, rtg, ac, mk = (np.asarray(x) for x in (st, rtg, ac, mk))
     valid = np.asarray(fin.valid)
     speedup = res.baseline_latency[:, None] / np.maximum(
         np.asarray(fin.latency), 1e-12)
+    feats = np.stack([np.asarray(accel_features(a), np.float32)
+                      for a in hw_list])                       # [C, F]
 
-    rows, meta = [], []
-    for c, (wl, budget) in enumerate(conds):
+    rows, meta, hw_rows = [], [], []
+    for c, (wl, acc, budget) in enumerate(conds):
         seen = set()
         for k in range(cand.shape[1]):
             key = cand[c, k, : wl.n + 1].tobytes()
@@ -248,11 +283,12 @@ def generate_teacher_corpus(workloads: list, hw: AccelConfig, *,
                 continue
             seen.add(key)
             rows.append((rtg[c, k], st[c, k], ac[c, k], mk[c, k]))
-            meta.append((wl.name, budget, float(speedup[c, k])))
+            meta.append((wl.name, budget, float(speedup[c, k]), acc.name))
+            hw_rows.append(feats[c])
     if not rows:
         raise RuntimeError("teacher produced no valid trajectories")
     r, s, a, m = (np.stack(x) for x in zip(*rows))
-    return TrajectoryDataset(r, s, a, m, meta)
+    return TrajectoryDataset(r, s, a, m, meta, hw=np.stack(hw_rows))
 
 
 def window_dataset(ds: TrajectoryDataset, T: int,
@@ -265,11 +301,13 @@ def window_dataset(ds: TrajectoryDataset, T: int,
     timestep positions it would see in the full trajectory (``dt_apply``'s
     ``t0`` argument).  Returns-to-go, states and the mask are per-step
     quantities and slice through unchanged (the relabel rule is windowing-
-    invariant)."""
+    invariant); the hw condition row is per-trajectory and copies to every
+    window."""
     if T >= ds.max_steps:
         return ds
     stride = stride or T
-    rows, meta, offs = [], [], []
+    hw_full = ds.hw_feats()
+    rows, meta, offs, hw_rows = [], [], [], []
     for i in range(len(ds)):
         L = int(ds.mask[i].sum())
         starts = list(range(0, max(L - T, 0) + 1, stride))
@@ -282,5 +320,7 @@ def window_dataset(ds: TrajectoryDataset, T: int,
                          ds.actions[i, s0:s0 + T], ds.mask[i, s0:s0 + T]))
             meta.append(ds.meta[i] if i < len(ds.meta) else None)
             offs.append(int(ds.t0[i]) + s0)
+            hw_rows.append(hw_full[i])
     r, s, a, m = (np.stack(x) for x in zip(*rows))
-    return TrajectoryDataset(r, s, a, m, meta, np.asarray(offs, np.int32))
+    return TrajectoryDataset(r, s, a, m, meta, np.asarray(offs, np.int32),
+                             np.stack(hw_rows))

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import cost_model as cm
-from .accel import AccelConfig
+from .accel import AccelConfig, accel_features
 
 __all__ = ["FusionEnv", "STATE_DIM", "encode_action", "decode_action",
            "encode_action_jnp", "decode_action_jnp", "returns_to_go",
@@ -127,9 +127,11 @@ class EnvConsts(NamedTuple):
 
 
 def env_make(wl: dict, batch: jax.Array, budget_bytes: jax.Array,
-             hw: AccelConfig) -> EnvConsts:
+             hw) -> EnvConsts:
     """Build per-condition constants. ``batch``/``budget_bytes`` may be
-    traced (vmapped serving conditions); ``hw`` stays static."""
+    traced (vmapped serving conditions), and so may ``hw`` — an
+    ``AccelConfig`` or a traced ``accel.HwVec``, so serving vmaps over
+    heterogeneous accelerators too (DESIGN §11)."""
     B = jnp.asarray(batch, jnp.float32)
     budget = jnp.asarray(budget_bytes, jnp.float32)
     pc = cm.prefix_consts(wl, B, budget, hw)
@@ -143,8 +145,7 @@ def env_reset(consts: EnvConsts) -> cm.PrefixCarry:
     return cm.prefix_init(consts.pc)
 
 
-def env_observe(consts: EnvConsts, state: cm.PrefixCarry,
-                hw: AccelConfig):
+def env_observe(consts: EnvConsts, state: cm.PrefixCarry, hw):
     """(conditioning reward r_hat_t, state vector s_t) — paper Eq. 2."""
     out = cm.prefix_out(consts.pc, state, hw)
     mem_avail = returns_to_go(out.peak_mem, consts.budget)
@@ -157,13 +158,13 @@ def env_observe(consts: EnvConsts, state: cm.PrefixCarry,
 
 
 def env_step(consts: EnvConsts, state: cm.PrefixCarry, action,
-             hw: AccelConfig) -> cm.PrefixCarry:
+             hw) -> cm.PrefixCarry:
     """Pure transition: commit ``action`` for position ``state.t``."""
     return cm.prefix_step(consts.pc, state, action, hw)
 
 
 def env_final(consts: EnvConsts, state: cm.PrefixCarry,
-              hw: AccelConfig) -> cm.CostOut:
+              hw) -> cm.CostOut:
     """Full-strategy CostOut once all n+1 actions are committed."""
     return cm.prefix_out(consts.pc, state, hw)
 
@@ -187,6 +188,8 @@ class FusionEnv:
         self._base = cm.baseline_no_fusion(self.wl, float(self.batch), self.hw)
         self.baseline_latency = float(self._base.latency)
         self._budget_feat = np.float32(_budget_feat(self.budget_bytes))
+        # normalized hw condition vector (DESIGN §11) for hw-aware mappers
+        self.hw_features = np.asarray(accel_features(self.hw), np.float32)
         self.reset()
 
     def jax_consts(self) -> EnvConsts:

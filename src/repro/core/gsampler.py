@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import cost_model as cm
-from .accel import AccelConfig
+from .accel import AccelConfig, HwVec, stack_hw
 
 __all__ = ["GSamplerConfig", "GSamplerResult", "gsampler_search",
            "naive_uniform_mb", "GridTeacherResult", "gsampler_search_grid"]
@@ -199,18 +199,20 @@ def gsampler_search(env, cfg: GSamplerConfig = GSamplerConfig(),
 
 
 # ---------------------------------------------------------------------------
-# Device-resident grid G-Sampler (DESIGN.md §10).
+# Device-resident grid G-Sampler (DESIGN.md §10, §11).
 #
 # The host GA above searches ONE (workload, batch, budget) condition with one
 # vmapped fitness call per generation; a teacher corpus needs a whole grid of
 # conditions (paper §4.5.1: several memory budgets per workload, §4.6
-# generalization: several workloads).  ``gsampler_search_grid`` runs every
-# condition's population simultaneously: selection, crossover, mutation, the
-# constraint-repair operator and the fitness evaluations are all jnp over a
-# [C, POP, P] strategy tensor, so the ENTIRE evolutionary search — all
-# conditions x populations x generations — is one jitted device program with
-# zero host round trips.  Heterogeneity (different layer counts, batches,
-# budgets) rides the stacked-workload axis; padding positions stay SYNC.
+# generalization: several workloads — and since §11 several ACCELERATORS).
+# ``gsampler_search_grid`` runs every condition's population simultaneously:
+# selection, crossover, mutation, the constraint-repair operator and the
+# fitness evaluations are all jnp over a [C, POP, P] strategy tensor, so the
+# ENTIRE evolutionary search — all conditions x populations x generations —
+# is one jitted device program with zero host round trips.  Heterogeneity
+# (different layer counts, batches, budgets, and per-condition hardware via
+# ``accel.stack_hw``) rides the stacked condition axis; padding positions
+# stay SYNC.
 # ---------------------------------------------------------------------------
 
 
@@ -344,8 +346,8 @@ def _repair_grid(key, wls, brood, batches, budgets, hw, cfg: GSamplerConfig):
     return s
 
 
-@functools.partial(jax.jit, static_argnames=("hw", "cfg", "top_k"))
-def _ga_grid(key, wls, batches, budgets, hw: AccelConfig,
+@functools.partial(jax.jit, static_argnames=("cfg", "top_k"))
+def _ga_grid(key, wls, batches, budgets, hw,
              cfg: GSamplerConfig, top_k: int):
     """The whole grid GA as one device program.  Returns stacked elites
     [C, top_k, P] with exact costs, plus the best-valid-speedup history."""
@@ -407,28 +409,49 @@ def _ga_grid(key, wls, batches, budgets, hw: AccelConfig,
                 history=history, baseline_latency=base)
 
 
-def gsampler_search_grid(workloads: list, hw: AccelConfig, batches,
+def gsampler_search_grid(workloads: list, hw, batches,
                          budgets_bytes, *, nmax: int = 64,
                          cfg: GSamplerConfig = GSamplerConfig(),
                          top_k: int = 8, packed=None) -> GridTeacherResult:
-    """Search every (workload[c], batches[c], budgets_bytes[c]) condition in
-    one fused device program (the teacher-corpus front door, DESIGN §10).
+    """Search every (workload[c], accel[c], batches[c], budgets_bytes[c])
+    condition in one fused device program (the teacher-corpus front door,
+    DESIGN §10/§11).
 
-    ``workloads`` entries may repeat (one per memory condition); all three
-    sequences must have equal length C.  ``packed`` optionally supplies the
-    ``stack_workloads`` dict for the same grid (the corpus pipeline reuses
-    one packing for search and decoration).  Deterministic for a fixed
+    ``workloads`` entries may repeat (one per memory condition); all
+    sequences must have equal length C.  ``hw`` is one ``AccelConfig`` or a
+    length-C sequence of them (the §11 hardware axis); an
+    already-vectorized form (stacked ``HwVec`` / raw ``[C, F]`` array) is
+    accepted too but then ``packed`` is REQUIRED, since packing needs host
+    configs.  ``packed`` optionally supplies the ``stack_workloads`` dict
+    for the same grid (the corpus pipeline reuses one packing for search
+    and decoration); when per-condition accelerators differ, each condition
+    must be packed with its own accelerator.  Deterministic for a fixed
     ``cfg.seed`` — the corpus-generation determinism tests rely on it."""
     assert len(workloads) == len(batches) == len(budgets_bytes)
     t0 = time.perf_counter()
-    wls = packed if packed is not None else cm.stack_workloads(
-        [cm.pack_workload(w, hw, nmax) for w in workloads])
+    C = len(workloads)
+    if isinstance(hw, AccelConfig) or (
+            isinstance(hw, (list, tuple)) and not isinstance(hw, HwVec)):
+        hws = list(hw) if isinstance(hw, (list, tuple)) else [hw] * C
+        assert len(hws) == C
+        if packed is None:
+            packed = cm.stack_workloads(
+                [cm.pack_workload(w, h, nmax) for w, h in zip(workloads,
+                                                              hws)])
+        hwv = stack_hw(hws, C)
+    else:
+        # already-vectorized hardware (stacked HwVec / raw [C, F] array):
+        # packing needs host AccelConfigs, so the caller must supply it
+        if packed is None:
+            raise ValueError("vectorized hw (HwVec / raw array) requires "
+                             "`packed=` — pack_workload needs AccelConfigs")
+        hwv = stack_hw(hw, C)
+    wls = packed
     batches = jnp.asarray(np.asarray(batches, np.float32))
     budgets = jnp.asarray(np.asarray(budgets_bytes, np.float32))
-    out = _ga_grid(jax.random.PRNGKey(cfg.seed), wls, batches, budgets, hw,
-                   cfg, top_k)
+    out = _ga_grid(jax.random.PRNGKey(cfg.seed), wls, batches, budgets,
+                   hwv, cfg, top_k)
     out = {k: np.asarray(v) for k, v in out.items()}
-    C = len(workloads)
     # upper bound: the repair while_loop exits early once a brood is valid
     n_evals = C * cfg.population * (cfg.generations
                                     * (1 + cfg.repair_tries) + 1)

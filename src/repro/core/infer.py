@@ -16,7 +16,10 @@ Two implementations (DESIGN.md §9):
    ``prefix_step`` environment transition and a ``lax.while_loop``
    halve-or-sync budget guard — zero host syncs inside the episode.
    ``dnnfuser_infer_batch`` vmaps it over a stacked batch of
-   (batch, budget) serving conditions in one device call — the serving
+   (batch, budget, accel) serving conditions in one device call — since
+   DESIGN §11 the accelerator itself is a traced per-row condition
+   (``accel.HwVec`` + normalized ``accel_features`` for the model), so one
+   checkpoint serves a heterogeneous device fleet.  This is the serving
    primitive ``examples/serve_mapper.py`` and the benchmarks fan out over.
 """
 from __future__ import annotations
@@ -34,7 +37,7 @@ from .env import (FusionEnv, STATE_DIM, decode_action, encode_action,
                   env_observe, env_reset, env_step, env_final)
 from .model import DTConfig, dt_apply, dt_cache_init, dt_prefill, dt_decode_step
 from .seq2seq import S2SConfig, s2s_apply, s2s_stream_init, s2s_stream_step
-from .accel import AccelConfig
+from .accel import AccelConfig, accel_features, as_hw, stack_hw
 from . import cost_model as cm
 
 __all__ = ["InferResult", "dnnfuser_infer", "s2s_infer",
@@ -53,13 +56,23 @@ class InferResult:
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def _dt_forward(params, cfg: DTConfig, rtg, states, actions):
-    return dt_apply(params, cfg, rtg, states, actions)
+def _dt_forward(params, cfg: DTConfig, rtg, states, actions, hw=None):
+    return dt_apply(params, cfg, rtg, states, actions, hw=hw)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def _s2s_forward(params, cfg: S2SConfig, rtg, states, actions):
-    return s2s_apply(params, cfg, rtg, states, actions)
+def _s2s_forward(params, cfg: S2SConfig, rtg, states, actions, hw=None):
+    return s2s_apply(params, cfg, rtg, states, actions, hw=hw)
+
+
+def _hw_condition(cfg, env: FusionEnv):
+    """The model's hw-condition row [1, F] (None for pre-§11 configs).
+
+    Computed on the host from the SAME ``accel_features`` the batched
+    front-end uses, so host and fused rollouts see bit-identical inputs."""
+    if not getattr(cfg, "hw_dim", 0):
+        return None
+    return env.hw_features[None]
 
 
 def _rollout(forward, params, cfg, env: FusionEnv, *, repair: bool) -> InferResult:
@@ -67,6 +80,7 @@ def _rollout(forward, params, cfg, env: FusionEnv, *, repair: bool) -> InferResu
     rtg = np.zeros((1, T), np.float32)
     states = np.zeros((1, T, STATE_DIM), np.float32)
     actions = np.zeros((1, T), np.float32)
+    hwf = _hw_condition(cfg, env)
     t0 = time.perf_counter()
     s = env.reset()
     calls = 0
@@ -74,7 +88,8 @@ def _rollout(forward, params, cfg, env: FusionEnv, *, repair: bool) -> InferResu
         states[0, t] = s
         rtg[0, t] = env.reward_to_go
         pred = forward(params, cfg, jnp.asarray(rtg), jnp.asarray(states),
-                       jnp.asarray(actions))
+                       jnp.asarray(actions),
+                       None if hwf is None else jnp.asarray(hwf))
         calls += 1
         a_enc = float(pred[0, t])
         a = int(decode_action(a_enc, env.batch))
@@ -118,37 +133,44 @@ def s2s_infer(params, cfg: S2SConfig, env: FusionEnv, *,
 # ---------------------------------------------------------------------------
 
 
-def _model_iface(kind: str, params, cfg):
-    """(init, prefill, step) closures with a uniform pytree model state."""
+def _model_iface(kind: str, params, cfg, hw_feats=None):
+    """(init, prefill, step) closures with a uniform pytree model state.
+
+    ``hw_feats`` [F] (optional, traced) is the accelerator condition row the
+    hw-aware models add to their conditioning channel (DESIGN §11)."""
+    hwb = None if hw_feats is None else hw_feats[None]
     if kind == "dt":
         return (lambda: dt_cache_init(cfg),
-                lambda st, r, s: dt_prefill(params, cfg, st, r[None], s[None]),
+                lambda st, r, s: dt_prefill(params, cfg, st, r[None], s[None],
+                                            hwb),
                 lambda st, r, s, ap: dt_decode_step(params, cfg, st, r[None],
-                                                    s[None], ap[None]))
+                                                    s[None], ap[None], hwb))
     if kind == "s2s":
         def prefill(st, r, s):
             return s2s_stream_step(params, cfg, st, r[None], s[None],
-                                   jnp.zeros((1,), jnp.float32))
+                                   jnp.zeros((1,), jnp.float32), hwb)
         return (lambda: s2s_stream_init(cfg),
                 prefill,
                 lambda st, r, s, ap: s2s_stream_step(params, cfg, st, r[None],
-                                                     s[None], ap[None]))
+                                                     s[None], ap[None], hwb))
     raise ValueError(kind)
 
 
-def _fused_episode(params, cfg, wl, batch, budget_bytes, hw: AccelConfig,
-                   repair: bool, kind: str) -> dict:
-    """One (workload, batch, budget) episode, fully traced.
+def _fused_episode(params, cfg, wl, batch, budget_bytes, hw,
+                   hw_feats, repair: bool, kind: str) -> dict:
+    """One (workload, batch, budget, accel) episode, fully traced.
 
     All control flow the host loop does in Python — the per-step env
     observation, the model call, the halve-or-sync budget guard and the env
     transition — runs inside one ``lax.scan`` (guard: ``lax.while_loop``),
     so the episode lowers to a single device program with no host syncs.
+    ``hw`` may be a traced ``accel.HwVec`` and ``hw_feats`` its normalized
+    condition row — both vmap per serving lane (DESIGN §11).
     """
     consts = env_make(wl, batch, budget_bytes, hw)
     B, budget, n = consts.B, consts.budget, consts.n
     P = wl["A"].shape[0]
-    minit, mprefill, mstep = _model_iface(kind, params, cfg)
+    minit, mprefill, mstep = _model_iface(kind, params, cfg, hw_feats)
 
     def guard(carry, a):
         """The host probe loop: shrink / sync until the staged prefix plus
@@ -193,23 +215,30 @@ def _fused_episode(params, cfg, wl, batch, budget_bytes, hw: AccelConfig,
                 baseline_latency=consts.base_lat)
 
 
-@partial(jax.jit, static_argnames=("cfg", "hw", "repair", "kind"))
-def _fused_one(params, cfg, wl, batch, budget_bytes, hw, repair, kind):
+@partial(jax.jit, static_argnames=("cfg", "repair", "kind"))
+def _fused_one(params, cfg, wl, batch, budget_bytes, hw, hw_feats,
+               repair, kind):
     return _fused_episode(params, cfg, wl, batch, budget_bytes, hw,
-                          repair, kind)
+                          hw_feats, repair, kind)
 
 
-@partial(jax.jit, static_argnames=("cfg", "hw", "repair", "kind"))
-def _fused_batch(params, cfg, wl, batches, budgets, hw, repair, kind):
+@partial(jax.jit, static_argnames=("cfg", "repair", "kind"))
+def _fused_batch(params, cfg, wl, batches, budgets, hw, hw_feats,
+                 repair, kind):
     return jax.vmap(
-        lambda b, m: _fused_episode(params, cfg, wl, b, m, hw, repair, kind)
-    )(batches, budgets)
+        lambda b, m, h, hf: _fused_episode(params, cfg, wl, b, m, h, hf,
+                                           repair, kind),
+        in_axes=(0, 0, 0, None if hw_feats is None else 0),
+    )(batches, budgets, hw, hw_feats)
 
 
 def _fused_infer(kind, params, cfg, env: FusionEnv, repair) -> InferResult:
+    hwf = _hw_condition(cfg, env)
     t0 = time.perf_counter()
     out = _fused_one(params, cfg, env.wl, float(env.batch),
-                     float(env.budget_bytes), env.hw, repair, kind)
+                     float(env.budget_bytes), as_hw(env.hw),
+                     None if hwf is None else jnp.asarray(hwf[0]),
+                     repair, kind)
     strat = np.asarray(out["strategy"])          # device sync = episode end
     wall = time.perf_counter() - t0
     return InferResult(strat, float(out["speedup"]), float(out["latency"]),
@@ -231,24 +260,38 @@ def s2s_infer_fused(params, cfg: S2SConfig, env: FusionEnv, *,
 
 
 def dnnfuser_infer_batch(params, cfg: DTConfig, env_or_wl, batches,
-                         budgets_bytes, hw: AccelConfig | None = None, *,
+                         budgets_bytes, hw=None, *,
                          repair: bool = True) -> dict:
-    """Serve a stacked batch of (batch, budget) conditions in ONE device
-    call over a packed workload.
+    """Serve a stacked batch of (batch, budget, accel) conditions in ONE
+    device call over a packed workload.
 
     ``env_or_wl``: a FusionEnv (condition fields ignored) or a packed
     workload dict from ``cost_model.pack_workload``.  ``batches`` and
-    ``budgets_bytes`` are same-length 1-D arrays; returns a dict of stacked
-    arrays (strategy [C, P] int32, latency/peak_mem/speedup/valid [C]).
-    This is the serving primitive the throughput benchmarks and
+    ``budgets_bytes`` are same-length 1-D arrays.  ``hw`` is optional with
+    a FusionEnv (defaults to the env's accelerator) and accepts anything
+    ``accel.stack_hw`` does — a single ``AccelConfig``, a length-C sequence
+    of them, a stacked ``HwVec``, or a raw ``[C, HW_FEATURE_DIM]`` array —
+    so HETEROGENEOUS per-row accelerators serve in the same fused call
+    (DESIGN §11).  Returns a dict of stacked arrays (strategy [C, P] int32,
+    latency/peak_mem/speedup/valid [C]).  This is the serving primitive the
+    throughput and hw-generalization benchmarks and
     ``examples/serve_mapper.py`` fan out over."""
     if isinstance(env_or_wl, FusionEnv):
-        wl, hw = env_or_wl.wl, env_or_wl.hw
+        wl = env_or_wl.wl
+        if hw is None:
+            hw = env_or_wl.hw
     else:
         wl = env_or_wl
         if hw is None:
             raise ValueError("hw is required with a packed workload")
     batches = jnp.asarray(batches, jnp.float32)
     budgets = jnp.asarray(budgets_bytes, jnp.float32)
-    out = _fused_batch(params, cfg, wl, batches, budgets, hw, repair, "dt")
+    C = batches.shape[0]
+    hwv = stack_hw(hw, C)
+    # the model's condition rows are computed OUTSIDE the jit by the same
+    # accel_features the host reference uses -> bit-identical inputs
+    hwf = (jnp.asarray(np.asarray(accel_features(hwv), np.float32))
+           if getattr(cfg, "hw_dim", 0) else None)
+    out = _fused_batch(params, cfg, wl, batches, budgets, hwv, hwf,
+                       repair, "dt")
     return {k: np.asarray(v) for k, v in out.items()}

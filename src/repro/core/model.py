@@ -9,6 +9,15 @@ predicted and teacher actions (continuous encoding, see env.encode_action).
 Conditioning (paper §4.3.3): the reward channel carries the requested
 on-chip-buffer headroom, so at inference the generated mapping is steered by
 feeding the desired memory condition.
+
+Hardware conditioning (DESIGN.md §11): with ``cfg.hw_dim > 0`` the model
+additionally conditions on the accelerator itself — a learned projection of
+the normalized ``accel.accel_features`` vector is ADDED to every reward
+token, so the conditioning channel carries (budget headroom, hardware)
+jointly.  The additive form is deliberate: a zero-initialized ``emb_h``
+leaves the function bit-identical to a pre-§11 mapper, which makes the
+checkpoint upgrade path (``checkpoint.upgrade_pytree``) exactly
+behavior-preserving, and the KV-cache geometry does not change.
 """
 from __future__ import annotations
 
@@ -33,6 +42,7 @@ class DTConfig:
     max_steps: int = 64        # trajectory positions (N+1 <= max_steps)
     d_ff: int = 512
     dtype: object = jnp.float32
+    hw_dim: int = 0            # hw-condition feature dim (0 = pre-§11 arch)
 
     @property
     def head_dim(self) -> int:
@@ -56,11 +66,29 @@ def dt_init(key: jax.Array, cfg: DTConfig) -> dict:
             for i in range(cfg.n_blocks)
         ],
     }
+    if cfg.hw_dim:
+        # ks[6] is unused by the pre-§11 keys, so the shared parameters of
+        # an hw-conditioned init match a plain init with the same seed
+        p["emb_h"] = nn.dense_init(ks[6], cfg.hw_dim, d, dtype=cfg.dtype)
     return p
 
 
+def _hw_emb(params: dict, cfg: DTConfig, hw: jax.Array | None,
+            batch: int) -> jax.Array | None:
+    """[B, d] additive hw-condition embedding, or None when unconditioned.
+
+    A missing ``hw`` input on an hw-aware model falls back to zeros — the
+    "unspecified hardware" condition (also what legacy corpora decode to)."""
+    if not cfg.hw_dim:
+        return None
+    if hw is None:
+        hw = jnp.zeros((batch, cfg.hw_dim), cfg.dtype)
+    return nn.dense_apply(params["emb_h"], hw)
+
+
 def dt_apply(params: dict, cfg: DTConfig, rtg: jax.Array, states: jax.Array,
-             actions: jax.Array, t0: jax.Array | None = None) -> jax.Array:
+             actions: jax.Array, t0: jax.Array | None = None,
+             hw: jax.Array | None = None) -> jax.Array:
     """rtg [B,T], states [B,T,8], actions [B,T] -> predicted actions [B,T].
 
     Prediction for step t reads the causal prefix up to (and incl.) s_t;
@@ -72,10 +100,17 @@ def dt_apply(params: dict, cfg: DTConfig, rtg: jax.Array, states: jax.Array,
     windowed by ``dataset.window_dataset`` train with the same timestep
     embeddings full trajectories use.  ``t0 + T`` must stay within
     ``cfg.max_steps``.
+
+    ``hw`` [B, cfg.hw_dim] (optional) are normalized accelerator features
+    (``accel.accel_features``), added to every reward token when
+    ``cfg.hw_dim > 0`` (ignored otherwise) — see DESIGN.md §11.
     """
     B, T = rtg.shape
     d = cfg.d_model
     tok_r = nn.dense_apply(params["emb_r"], rtg[..., None])
+    hemb = _hw_emb(params, cfg, hw, B)
+    if hemb is not None:
+        tok_r = tok_r + hemb[:, None, :]
     tok_s = nn.dense_apply(params["emb_s"], states)
     tok_a = nn.dense_apply(params["emb_a"], actions[..., None])
     steps = jnp.arange(T)
@@ -136,13 +171,17 @@ def _dt_blocks_cached(params: dict, cfg: DTConfig, x: jax.Array,
 
 
 def dt_prefill(params: dict, cfg: DTConfig, cache: list, r0: jax.Array,
-               s0: jax.Array):
+               s0: jax.Array, hw: jax.Array | None = None):
     """Start an episode: feed (r_0, s_0), predict a_0.
 
-    r0 [B], s0 [B, STATE_DIM] -> (pred_a0 [B], cache)."""
+    r0 [B], s0 [B, STATE_DIM] -> (pred_a0 [B], cache).  ``hw`` as in
+    :func:`dt_apply` (added to the reward token)."""
     typ = params["type"]["emb"]
     time0 = nn.embedding_apply(params["time"], jnp.asarray(0))
     tok_r = nn.dense_apply(params["emb_r"], r0[..., None]) + typ[0] + time0
+    hemb = _hw_emb(params, cfg, hw, r0.shape[0])
+    if hemb is not None:
+        tok_r = tok_r + hemb
     tok_s = nn.dense_apply(params["emb_s"], s0) + typ[1] + time0
     preds, cache = _dt_blocks_cached(params, cfg,
                                      jnp.stack([tok_r, tok_s], axis=1), cache)
@@ -150,13 +189,14 @@ def dt_prefill(params: dict, cfg: DTConfig, cache: list, r0: jax.Array,
 
 
 def dt_decode_step(params: dict, cfg: DTConfig, cache: list, r_t: jax.Array,
-                   s_t: jax.Array, a_prev: jax.Array):
+                   s_t: jax.Array, a_prev: jax.Array,
+                   hw: jax.Array | None = None):
     """One decode step t >= 1: append (a_{t-1}, r_t, s_t), predict a_t.
 
     ``a_prev`` is the *encoded* action chosen at step t-1 (see
     ``env.encode_action``); the step index is recovered from the cache write
     position (idx == 3t - 1), so the caller only threads the cache pytree.
-    Returns (pred_a_t [B], cache)."""
+    ``hw`` as in :func:`dt_apply`.  Returns (pred_a_t [B], cache)."""
     idx = cache[0]["idx"]
     t = (idx + 1) // 3
     typ = params["type"]["emb"]
@@ -165,6 +205,9 @@ def dt_decode_step(params: dict, cfg: DTConfig, cache: list, r_t: jax.Array,
     tok_a = (nn.dense_apply(params["emb_a"], a_prev[..., None])
              + typ[2] + time_prev)
     tok_r = nn.dense_apply(params["emb_r"], r_t[..., None]) + typ[0] + time_t
+    hemb = _hw_emb(params, cfg, hw, r_t.shape[0])
+    if hemb is not None:
+        tok_r = tok_r + hemb
     tok_s = nn.dense_apply(params["emb_s"], s_t) + typ[1] + time_t
     preds, cache = _dt_blocks_cached(
         params, cfg, jnp.stack([tok_a, tok_r, tok_s], axis=1), cache)
@@ -172,8 +215,9 @@ def dt_decode_step(params: dict, cfg: DTConfig, cache: list, r_t: jax.Array,
 
 
 def dt_loss(params: dict, cfg: DTConfig, batch: dict) -> jax.Array:
-    """Masked MSE (paper §4.3.1); honors window offsets (batch["t0"])."""
+    """Masked MSE (paper §4.3.1); honors window offsets (batch["t0"]) and
+    the per-trajectory hw condition (batch["hw"], DESIGN §11)."""
     pred = dt_apply(params, cfg, batch["rtg"], batch["states"],
-                    batch["actions"], batch.get("t0"))
+                    batch["actions"], batch.get("t0"), batch.get("hw"))
     err = jnp.square(pred - batch["actions"]) * batch["mask"]
     return err.sum() / jnp.maximum(batch["mask"].sum(), 1.0)

@@ -6,6 +6,11 @@ the (reward, state) sequence (the workload and condition are known up
 front); the decoder LSTM, initialized from the encoder's final state,
 consumes [state_t, rtg_t, a_{t-1}] and regresses a_t.  Trained with the
 same masked-MSE imitation objective as DNNFuser.
+
+Hardware conditioning (DESIGN.md §11): with ``cfg.hw_dim > 0`` a learned
+projection of the ``accel.accel_features`` vector is added to every
+encoder and decoder input — additive like the DT's, so a zero-initialized
+``emb_h`` is exactly the pre-§11 function (checkpoint upgrade path).
 """
 from __future__ import annotations
 
@@ -27,6 +32,7 @@ class S2SConfig:
     hidden: int = 128          # paper §5.1
     max_steps: int = 64
     dtype: object = jnp.float32
+    hw_dim: int = 0            # hw-condition feature dim (0 = pre-§11 arch)
 
 
 def _lstm_init(key, d_in, d_h, dtype):
@@ -54,9 +60,9 @@ def _lstm_scan(p, xs, h0, c0):
 
 
 def s2s_init(key: jax.Array, cfg: S2SConfig) -> dict:
-    ks = jax.random.split(key, 8)
+    ks = jax.random.split(key, 9 if cfg.hw_dim else 8)
     H = cfg.hidden
-    return {
+    p = {
         "enc_in": nn.dense_init(ks[0], STATE_DIM + 1, H, dtype=cfg.dtype),
         "enc_fc": nn.dense_init(ks[1], H, H, dtype=cfg.dtype),
         "enc_lstm": _lstm_init(ks[2], H, H, cfg.dtype),
@@ -66,22 +72,40 @@ def s2s_init(key: jax.Array, cfg: S2SConfig) -> dict:
         "head1": nn.dense_init(ks[6], H, H, dtype=cfg.dtype),
         "head2": nn.dense_init(ks[7], H, 1, dtype=cfg.dtype),
     }
+    if cfg.hw_dim:
+        p["emb_h"] = nn.dense_init(ks[8], cfg.hw_dim, H, dtype=cfg.dtype)
+    return p
+
+
+def _hw_emb(params: dict, cfg: S2SConfig, hw, batch: int):
+    """[B, H] additive hw embedding, or None (see model._hw_emb)."""
+    if not cfg.hw_dim:
+        return None
+    if hw is None:
+        hw = jnp.zeros((batch, cfg.hw_dim), cfg.dtype)
+    return nn.dense_apply(params["emb_h"], hw)
 
 
 def s2s_apply(params: dict, cfg: S2SConfig, rtg: jax.Array,
-              states: jax.Array, actions: jax.Array) -> jax.Array:
+              states: jax.Array, actions: jax.Array,
+              hw: jax.Array | None = None) -> jax.Array:
     """Teacher-forced predictions [B,T] (a_{t-1} fed, a_{-1}=0)."""
     B, T = rtg.shape
     zeros = jnp.zeros((B, 1), rtg.dtype)
+    hemb = _hw_emb(params, cfg, hw, B)
     enc_x = jnp.concatenate([states, rtg[..., None]], -1)
     h = jax.nn.relu(nn.dense_apply(params["enc_fc"],
                                    jax.nn.relu(nn.dense_apply(params["enc_in"], enc_x))))
+    if hemb is not None:
+        h = h + hemb[:, None, :]
     h0 = jnp.zeros((B, cfg.hidden), rtg.dtype)
     _, (he, ce) = _lstm_scan(params["enc_lstm"], h, h0, h0)
     prev_a = jnp.concatenate([zeros, actions[:, :-1]], axis=1)
     dec_x = jnp.concatenate([states, rtg[..., None], prev_a[..., None]], -1)
     g = jax.nn.relu(nn.dense_apply(params["dec_fc"],
                                    jax.nn.relu(nn.dense_apply(params["dec_in"], dec_x))))
+    if hemb is not None:
+        g = g + hemb[:, None, :]
     ys, _ = _lstm_scan(params["dec_lstm"], g, he, ce)
     out = nn.dense_apply(params["head2"],
                          jax.nn.relu(nn.dense_apply(params["head1"], ys)))
@@ -123,10 +147,13 @@ def _head(params, h):
 
 
 def s2s_encode(params: dict, cfg: S2SConfig, rtg: jax.Array,
-               states: jax.Array):
+               states: jax.Array, hw: jax.Array | None = None):
     """Full-sequence encoder, identical to the one inside ``s2s_apply``."""
     B = rtg.shape[0]
     h = _enc_in(params, rtg, states)
+    hemb = _hw_emb(params, cfg, hw, B)
+    if hemb is not None:
+        h = h + hemb[:, None, :]
     h0 = jnp.zeros((B, cfg.hidden), rtg.dtype)
     _, (he, ce) = _lstm_scan(params["enc_lstm"], h, h0, h0)
     return he, ce
@@ -138,10 +165,14 @@ def s2s_decode_start(enc_state) -> dict:
 
 
 def s2s_decode_step(params: dict, cfg: S2SConfig, cache: dict,
-                    r_t: jax.Array, s_t: jax.Array, a_prev: jax.Array):
+                    r_t: jax.Array, s_t: jax.Array, a_prev: jax.Array,
+                    hw: jax.Array | None = None):
     """One decoder cell step; exact replay of teacher-forced ``s2s_apply``
     when seeded from ``s2s_encode``.  Returns (pred [B], cache)."""
     g = _dec_in(params, r_t, s_t, a_prev)
+    hemb = _hw_emb(params, cfg, hw, r_t.shape[0])
+    if hemb is not None:
+        g = g + hemb
     h, c = _lstm_cell(params["dec_lstm"], g, cache["h"], cache["c"])
     return _head(params, h), {"h": h, "c": c}
 
@@ -153,22 +184,26 @@ def s2s_stream_init(cfg: S2SConfig, batch: int = 1,
 
 
 def s2s_stream_step(params: dict, cfg: S2SConfig, cache: dict,
-                    r_t: jax.Array, s_t: jax.Array, a_prev: jax.Array):
+                    r_t: jax.Array, s_t: jax.Array, a_prev: jax.Array,
+                    hw: jax.Array | None = None):
     """Streaming decode for on-the-fly rollouts: advance the encoder on
     (s_t, r_t), seed the decoder from it at t=0, step the decoder."""
     ex = _enc_in(params, r_t, s_t)
+    hemb = _hw_emb(params, cfg, hw, r_t.shape[0])
+    if hemb is not None:
+        ex = ex + hemb
     eh, ec = _lstm_cell(params["enc_lstm"], ex, cache["eh"], cache["ec"])
     first = cache["t"] == 0
     h = jnp.where(first, eh, cache["h"])
     c = jnp.where(first, ec, cache["c"])
     pred, dc = s2s_decode_step(params, cfg, {"h": h, "c": c},
-                               r_t, s_t, a_prev)
+                               r_t, s_t, a_prev, hw)
     return pred, {"eh": eh, "ec": ec, "h": dc["h"], "c": dc["c"],
                   "t": cache["t"] + 1}
 
 
 def s2s_loss(params: dict, cfg: S2SConfig, batch: dict) -> jax.Array:
     pred = s2s_apply(params, cfg, batch["rtg"], batch["states"],
-                     batch["actions"])
+                     batch["actions"], batch.get("hw"))
     err = jnp.square(pred - batch["actions"]) * batch["mask"]
     return err.sum() / jnp.maximum(batch["mask"].sum(), 1.0)

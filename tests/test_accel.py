@@ -1,0 +1,160 @@
+"""Accelerator zoo + traced hardware vector (DESIGN.md §11).
+
+The §11 refactor turned the accelerator from a static jit argument into a
+traced condition; these tests pin the invariants that keep that refactor
+from silently drifting the cost model:
+
+ - ``accel_features`` is a normalized, INVERTIBLE encoding of every zoo
+   preset (round-trip through ``accel_from_features``);
+ - ``hw_array``/``hw_from_array``/``stack_hw`` round-trip exactly;
+ - ``with_buffer_mb`` composes with feature packing (only ``buf_bytes``
+   moves);
+ - the packed-hw traced path is BIT-EXACT with the Python-float
+   ``PAPER_ACCEL`` path on ``tiny_cnn`` (evaluate / baseline / prefix_scan),
+   and the grid evaluator with per-condition accelerators matches
+   per-condition single evaluations exactly.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core.accel import (ACCEL_ZOO, HW_FEATURE_DIM, HW_FIELDS,
+                              PAPER_ACCEL, AccelConfig, accel_features,
+                              accel_from_features, as_hw, hw_array,
+                              hw_from_array, stack_hw)
+from repro.workloads import tiny_cnn
+
+MB = 2 ** 20
+
+
+# --- feature packing --------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(ACCEL_ZOO))
+def test_accel_features_normalized_and_invertible(name):
+    cfg = ACCEL_ZOO[name]
+    f = np.asarray(accel_features(cfg))
+    assert f.shape == (HW_FEATURE_DIM,)
+    assert np.isfinite(f).all()
+    # every zoo preset lies inside the design range -> features in [0, 1]
+    assert (f >= 0.0).all() and (f <= 1.0).all(), (name, f)
+    back = accel_from_features(f, name)
+    assert back.npe == cfg.npe and back.pe_lanes == cfg.pe_lanes
+    for fld in HW_FIELDS:
+        if fld in ("npe", "pe_lanes"):
+            continue
+        assert abs(getattr(back, fld) - getattr(cfg, fld)) <= \
+            2e-5 * abs(getattr(cfg, fld)), (name, fld)
+
+
+def test_accel_features_distinguish_zoo_presets():
+    feats = {n: tuple(np.round(np.asarray(accel_features(c)), 6))
+             for n, c in ACCEL_ZOO.items()}
+    assert len(set(feats.values())) == len(ACCEL_ZOO)
+
+
+def test_hw_array_round_trip_exact():
+    for cfg in ACCEL_ZOO.values():
+        arr = np.asarray(hw_array(cfg))
+        v = hw_from_array(arr)
+        np.testing.assert_array_equal(np.asarray(hw_array(v)), arr)
+        # AccelConfig -> HwVec (as_hw) agrees with the array path
+        w = as_hw(cfg)
+        np.testing.assert_array_equal(np.asarray(hw_array(w)), arr)
+
+
+def test_stack_hw_forms_agree():
+    accels = [ACCEL_ZOO["edge"], ACCEL_ZOO["nano"], ACCEL_ZOO["datacenter"]]
+    a = stack_hw(accels, 3)
+    b = stack_hw(jnp.stack([hw_array(h) for h in accels]), 3)
+    np.testing.assert_array_equal(np.asarray(hw_array(a)),
+                                  np.asarray(hw_array(b)))
+    c = stack_hw(PAPER_ACCEL, 4)                 # broadcast form
+    assert np.asarray(c.npe).shape == (4,)
+    with pytest.raises(ValueError):
+        stack_hw(accels, 2)
+
+
+def test_with_buffer_mb_interplay():
+    for name, cfg in ACCEL_ZOO.items():
+        mod = cfg.with_buffer_mb(24.0)
+        assert mod.buf_bytes == 24.0 * MB
+        assert mod.name == cfg.name
+        f0, f1 = (np.asarray(accel_features(c)) for c in (cfg, mod))
+        buf_slot = HW_FIELDS.index("buf_bytes")
+        moved = np.nonzero(f0 != f1)[0]
+        assert set(moved) <= {buf_slot}, (name, moved)
+        back = accel_from_features(f1)
+        assert abs(back.buf_bytes - 24.0 * MB) <= 2e-5 * 24.0 * MB
+
+
+# --- cost-model parity: traced hw == static Python-float hw ----------------
+
+def _conds():
+    wl = cm.pack_workload(tiny_cnn(), PAPER_ACCEL, 16)
+    rng = np.random.default_rng(0)
+    strategies = [cm.random_strategy(rng, tiny_cnn().n, 16, 64)
+                  for _ in range(6)]
+    return wl, strategies
+
+
+def test_cost_model_parity_traced_vs_static_paper_accel():
+    """The §11 refactor must not move a single bit on the default path:
+    evaluating with a packed/traced hw vector equals the AccelConfig path
+    EXACTLY (same program constants, multiplier exactly 1.0)."""
+    wl, strategies = _conds()
+    traced = hw_from_array(hw_array(PAPER_ACCEL))
+    for s in strategies:
+        s = jnp.asarray(s)
+        a = cm.evaluate(wl, s, 64.0, 4.0 * MB, PAPER_ACCEL)
+        b = cm.evaluate(wl, s, 64.0, 4.0 * MB, traced)
+        for k in ("latency", "peak_mem", "traffic"):
+            assert float(getattr(a, k)) == float(getattr(b, k)), k
+        assert bool(a.valid) == bool(b.valid)
+        ta, fa = cm.prefix_scan(wl, s, 64.0, 4.0 * MB, PAPER_ACCEL)
+        tb, fb = cm.prefix_scan(wl, s, 64.0, 4.0 * MB, traced)
+        np.testing.assert_array_equal(np.asarray(ta.latency),
+                                      np.asarray(tb.latency))
+        assert float(fa.peak_mem) == float(fb.peak_mem)
+    ba = cm.baseline_no_fusion(wl, 64.0, PAPER_ACCEL)
+    bb = cm.baseline_no_fusion(wl, 64.0, traced)
+    assert float(ba.latency) == float(bb.latency)
+
+
+def test_grid_matches_per_condition_across_accels():
+    """One vmapped grid program over heterogeneous accelerators returns the
+    same numbers as per-condition evaluations (incl. a bytes/elem != 1
+    preset, exercising the BPE rescale)."""
+    w = tiny_cnn()
+    accels = [ACCEL_ZOO["edge"], ACCEL_ZOO["mobile"], ACCEL_ZOO["datacenter"]]
+    rng = np.random.default_rng(1)
+    pops = np.stack([np.stack([cm.random_strategy(rng, w.n, 16, 64)
+                               for _ in range(5)]) for _ in accels])
+    wls = cm.stack_workloads([cm.pack_workload(w, h, 16) for h in accels])
+    batches = jnp.asarray([64.0, 32.0, 64.0])
+    budgets = jnp.asarray([4.0 * MB, 2.0 * MB, 8.0 * MB])
+    grid = cm.evaluate_grid(wls, jnp.asarray(pops), batches, budgets, accels)
+    for c, h in enumerate(accels):
+        wl_c = cm.pack_workload(w, h, 16)
+        for p in range(pops.shape[1]):
+            one = cm.evaluate(wl_c, jnp.asarray(pops[c, p]),
+                              batches[c], budgets[c], h)
+            assert float(one.latency) == float(grid.latency[c, p]), (c, p)
+            assert float(one.peak_mem) == float(grid.peak_mem[c, p]), (c, p)
+
+
+def test_bpe_rescale_serves_foreign_datatype_packing():
+    """A packing made for a 1-byte accel evaluated under a 2-byte accel
+    equals packing natively at 2 bytes (the in-graph BPE rescale)."""
+    w = tiny_cnn()
+    dc = ACCEL_ZOO["datacenter"]
+    wl_edge = cm.pack_workload(w, PAPER_ACCEL, 16)   # bytes_per_elem = 1
+    wl_dc = cm.pack_workload(w, dc, 16)              # bytes_per_elem = 2
+    rng = np.random.default_rng(2)
+    for _ in range(4):
+        s = jnp.asarray(cm.random_strategy(rng, w.n, 16, 64))
+        a = cm.evaluate(wl_edge, s, 64.0, 8.0 * MB, dc)
+        b = cm.evaluate(wl_dc, s, 64.0, 8.0 * MB, dc)
+        assert float(a.latency) == float(b.latency)
+        assert float(a.peak_mem) == float(b.peak_mem)
+        assert float(a.traffic) == float(b.traffic)

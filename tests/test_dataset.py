@@ -40,11 +40,12 @@ def test_corpus_rows_are_valid_and_deduped():
     # OR exactly at budget)
     assert (ds.rtg * ds.mask >= 0.0).all()
     keys = set()
-    for i, (name, budget, sp) in enumerate(ds.meta):
-        key = (name, budget, ds.actions[i].tobytes())
+    for i, (name, budget, sp, accel) in enumerate(ds.meta):
+        key = (name, budget, accel, ds.actions[i].tobytes())
         assert key not in keys, "duplicate trajectory survived dedup"
         keys.add(key)
         assert sp > 0
+        assert accel == PAPER_ACCEL.name
 
 
 def test_decorate_grid_matches_host_env():

@@ -1,0 +1,182 @@
+"""Hardware-conditioned mapper (DESIGN.md §11): model, serving, upgrade.
+
+ - the hw embedding conditions the DT (different accel vectors -> different
+   logits) and the KV-cached decode matches the full forward with hw;
+ - fused rollouts stay bit-identical to the host reference on every zoo
+   accelerator, and ``dnnfuser_infer_batch`` with HETEROGENEOUS per-row hw
+   vectors matches per-condition runs in one device call;
+ - the teacher corpus labels trajectories with their accelerator and the
+   loss consumes them;
+ - a pre-§11 checkpoint upgrades into the hw-conditioned architecture
+   function-preserved (zero-filled ``emb_h``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ACCEL_ZOO, DTConfig, FusionEnv, HW_FEATURE_DIM,
+                        PAPER_ACCEL, S2SConfig, accel_features,
+                        dnnfuser_infer, dnnfuser_infer_batch,
+                        dnnfuser_infer_fused, dt_apply, dt_cache_init,
+                        dt_decode_step, dt_init, dt_loss, dt_prefill,
+                        s2s_apply, s2s_init, s2s_loss)
+from repro.checkpoint import save_pytree, upgrade_pytree
+from repro.workloads import tiny_cnn, vgg16
+
+MB = 2 ** 20
+CFG = DTConfig(max_steps=20, hw_dim=HW_FEATURE_DIM)
+
+
+def _feat(name):
+    return jnp.asarray(np.asarray(accel_features(ACCEL_ZOO[name]),
+                                  np.float32))
+
+
+# --- model-level conditioning ----------------------------------------------
+
+def test_hw_embedding_conditions_the_model():
+    params = dt_init(jax.random.PRNGKey(0), CFG)
+    rng = np.random.default_rng(0)
+    T = CFG.max_steps
+    rtg = jnp.asarray(rng.random((1, T)), jnp.float32)
+    st = jnp.asarray(rng.random((1, T, 8)), jnp.float32)
+    ac = jnp.asarray(rng.random((1, T)), jnp.float32)
+    a = dt_apply(params, CFG, rtg, st, ac, hw=_feat("edge")[None])
+    b = dt_apply(params, CFG, rtg, st, ac, hw=_feat("datacenter")[None])
+    assert not np.allclose(np.asarray(a), np.asarray(b)), \
+        "hw condition must reach the logits"
+    # None == zeros (the 'unspecified hardware' condition)
+    z = dt_apply(params, CFG, rtg, st, ac,
+                 hw=jnp.zeros((1, HW_FEATURE_DIM)))
+    n = dt_apply(params, CFG, rtg, st, ac)
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(n))
+
+
+def test_dt_decode_step_matches_dt_apply_with_hw():
+    params = dt_init(jax.random.PRNGKey(1), CFG)
+    rng = np.random.default_rng(1)
+    T = CFG.max_steps
+    rtg = jnp.asarray(rng.random((1, T)), jnp.float32)
+    states = jnp.asarray(rng.random((1, T, 8)), jnp.float32)
+    actions = jnp.asarray(rng.random((1, T)), jnp.float32)
+    hw = _feat("mobile")[None]
+    full = np.asarray(dt_apply(params, CFG, rtg, states, actions,
+                               hw=hw))[0]
+    cache = dt_cache_init(CFG)
+    pred, cache = dt_prefill(params, CFG, cache, rtg[:, 0], states[:, 0], hw)
+    preds = [float(pred[0])]
+    for t in range(1, T):
+        pred, cache = dt_decode_step(params, CFG, cache, rtg[:, t],
+                                     states[:, t], actions[:, t - 1], hw)
+        preds.append(float(pred[0]))
+    np.testing.assert_allclose(np.array(preds), full, atol=1e-5)
+
+
+def test_s2s_hw_conditioning_and_loss():
+    cfg = S2SConfig(max_steps=12, hw_dim=HW_FEATURE_DIM)
+    params = s2s_init(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(2)
+    rtg = jnp.asarray(rng.random((2, 12)), jnp.float32)
+    st = jnp.asarray(rng.random((2, 12, 8)), jnp.float32)
+    ac = jnp.asarray(rng.random((2, 12)), jnp.float32)
+    a = s2s_apply(params, cfg, rtg, st, ac, hw=jnp.stack([_feat("edge")] * 2))
+    b = s2s_apply(params, cfg, rtg, st, ac,
+                  hw=jnp.stack([_feat("datacenter")] * 2))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+    batch = dict(rtg=rtg, states=st, actions=ac,
+                 mask=jnp.ones((2, 12), jnp.float32),
+                 hw=jnp.stack([_feat("nano")] * 2))
+    assert np.isfinite(float(s2s_loss(params, cfg, batch)))
+
+
+def test_hw_batch_key_flows_through_dt_loss():
+    params = dt_init(jax.random.PRNGKey(3), CFG)
+    rng = np.random.default_rng(3)
+    T = CFG.max_steps
+    batch = dict(rtg=jnp.asarray(rng.random((2, T)), jnp.float32),
+                 states=jnp.asarray(rng.random((2, T, 8)), jnp.float32),
+                 actions=jnp.asarray(rng.random((2, T)), jnp.float32),
+                 mask=jnp.ones((2, T), jnp.float32),
+                 hw=jnp.stack([_feat("edge"), _feat("laptop")]))
+    l_hw = float(dt_loss(params, CFG, batch))
+    l_no = float(dt_loss(params, CFG, {k: v for k, v in batch.items()
+                                       if k != "hw"}))
+    assert np.isfinite(l_hw) and l_hw != l_no
+
+
+# --- serving: fused == host, heterogeneous batch == singles ----------------
+
+@pytest.mark.parametrize("accel", ["nano", "mobile", "datacenter"])
+def test_fused_rollout_matches_host_on_zoo_accels(accel):
+    params = dt_init(jax.random.PRNGKey(0), CFG)
+    env = FusionEnv(vgg16(), ACCEL_ZOO[accel], batch=64,
+                    budget_bytes=20 * MB, nmax=CFG.max_steps)
+    h = dnnfuser_infer(params, CFG, env)
+    f = dnnfuser_infer_fused(params, CFG, env)
+    assert (h.strategy == f.strategy).all()
+    np.testing.assert_allclose(f.latency, h.latency, rtol=1e-5)
+
+
+def test_infer_batch_heterogeneous_hw_matches_singles():
+    """The §11 acceptance shape: per-row hw vectors (4 different zoo
+    accelerators, incl. one with a different datatype) serve in ONE device
+    call, each row bit-identical to its per-condition fused AND host run."""
+    params = dt_init(jax.random.PRNGKey(4), CFG)
+    wl = vgg16()
+    rows = [ACCEL_ZOO[n] for n in ("edge", "nano", "laptop", "datacenter")]
+    batches = np.array([64.0, 32.0, 64.0, 16.0], np.float32)
+    budgets = np.array([20.0, 12.0, 32.0, 24.0], np.float32) * MB
+    env0 = FusionEnv(wl, PAPER_ACCEL, batch=64, budget_bytes=32 * MB,
+                     nmax=CFG.max_steps)
+    out = dnnfuser_infer_batch(params, CFG, env0, batches, budgets, rows)
+    assert out["strategy"].shape == (4, CFG.max_steps)
+    for i, acc in enumerate(rows):
+        env = FusionEnv(wl, acc, batch=int(batches[i]),
+                        budget_bytes=float(budgets[i]), nmax=CFG.max_steps)
+        one = dnnfuser_infer_fused(params, CFG, env)
+        host = dnnfuser_infer(params, CFG, env)
+        assert (out["strategy"][i] == one.strategy).all(), acc.name
+        assert (out["strategy"][i] == host.strategy).all(), acc.name
+        np.testing.assert_allclose(out["latency"][i], one.latency,
+                                   rtol=1e-5)
+
+
+# --- checkpoint upgrade path -----------------------------------------------
+
+def test_pre_s11_checkpoint_upgrades_function_preserved(tmp_path):
+    cfg0 = DTConfig(max_steps=16)
+    p0 = dt_init(jax.random.PRNGKey(5), cfg0)
+    save_pytree(p0, tmp_path / "ck")
+    cfg1 = DTConfig(max_steps=16, hw_dim=HW_FEATURE_DIM)
+    p1, missing = upgrade_pytree(tmp_path / "ck",
+                                 dt_init(jax.random.PRNGKey(5), cfg1))
+    assert sorted(missing) == ["emb_h/b", "emb_h/w"]
+    rng = np.random.default_rng(5)
+    rtg = jnp.asarray(rng.random((2, 16)), jnp.float32)
+    st = jnp.asarray(rng.random((2, 16, 8)), jnp.float32)
+    ac = jnp.asarray(rng.random((2, 16)), jnp.float32)
+    old = dt_apply(p0, cfg0, rtg, st, ac)
+    for hw in (None, jnp.stack([_feat("edge"), _feat("datacenter")])):
+        new = dt_apply(p1, cfg1, rtg, st, ac, hw=hw)
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+    # ... and the upgraded tree trains: the condition reaches the loss
+    batch = dict(rtg=rtg, states=st, actions=ac,
+                 mask=jnp.ones((2, 16), jnp.float32),
+                 hw=jnp.stack([_feat("edge"), _feat("nano")]))
+    assert np.isfinite(float(dt_loss(p1, cfg1, batch)))
+
+
+def test_upgrade_pytree_with_params_prefix(tmp_path):
+    cfg0 = DTConfig(max_steps=12)
+    p0 = dt_init(jax.random.PRNGKey(6), cfg0)
+    save_pytree({"params": p0, "opt_state": {"count": np.zeros(())}},
+                tmp_path / "ck")
+    cfg1 = DTConfig(max_steps=12, hw_dim=HW_FEATURE_DIM)
+    p1, missing = upgrade_pytree(tmp_path / "ck",
+                                 dt_init(jax.random.PRNGKey(6), cfg1),
+                                 prefix="params")
+    assert sorted(missing) == ["emb_h/b", "emb_h/w"]
+    assert float(np.abs(np.asarray(p1["emb_h"]["w"])).max()) == 0.0
+    np.testing.assert_array_equal(np.asarray(p1["head"]["w"]),
+                                  np.asarray(p0["head"]["w"]))
