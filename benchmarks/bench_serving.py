@@ -1,0 +1,221 @@
+"""Perf-regression harness for the layered serving engine (DESIGN.md §12).
+
+Open-loop synthetic load over MIXED (network, batch, budget, accelerator)
+requests — the production shape the engine exists for: heterogeneous
+networks in one device call, pow2/nmax shape bucketing, in-tick dedup and
+a solved-strategy LRU.  Two servers answer the SAME deterministic stream:
+
+ - ``engine``: ``serving.MapperEngine`` — warmup once, then serve arrival
+   ticks; reports throughput, p50/p99 per-tick latency, compile and
+   strategy-cache counters.  Steady state MUST be zero-recompile.
+ - ``loop``:   the pre-§12 front door — one ``FusionEnv`` +
+   ``dnnfuser_infer_fused`` call per request (post-jit; the loop reuses
+   the same bucketed shapes so it never recompiles either).
+
+The stream draws budgets from a quantized grid and repeats conditions the
+way user traffic does, so the strategy cache sees realistic hit rates;
+``--zipf 0`` makes every condition distinct (cold cache) if you want the
+pure batching win.
+
+``--check BASELINE.json`` turns the harness into the CI gate (like
+``bench_infer``): fails on engine-latency regression beyond ``--tol`` x
+baseline, on ANY steady-state recompile, and on the engine losing its
+throughput edge over the per-request loop (``--min-speedup``).
+
+    PYTHONPATH=src python benchmarks/bench_serving.py [--quick] [--out P]
+        [--check BASELINE.json] [--tol 2.5] [--min-speedup 1.3]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (ACCEL_ZOO, DTConfig, FusionEnv, HW_FEATURE_DIM,
+                        MapperEngine, MapRequest, dnnfuser_infer_fused,
+                        dt_init)
+from repro.serving import nmax_bucket
+from repro.workloads import resnet18, tiny_cnn, vgg16
+
+MB = float(2 ** 20)
+
+
+def make_stream(n_requests: int, zipf: float, seed: int = 0):
+    """Deterministic mixed request stream.
+
+    Conditions are drawn from a finite grid (3 networks x 3 accels x 3
+    batches x 12 budgets); ``zipf`` > 0 skews the draw so popular
+    conditions repeat (heavy-tailed traffic), 0 draws uniformly."""
+    rng = np.random.default_rng(seed)
+    nets = [vgg16(), resnet18(), tiny_cnn()]
+    accs = [ACCEL_ZOO["edge"], ACCEL_ZOO["mobile"], ACCEL_ZOO["laptop"]]
+    batches = [16, 32, 64]
+    budgets = np.linspace(6.0, 48.0, 12) * MB
+    grid = [(w, a, b, m) for w in nets for a in accs for b in batches
+            for m in budgets]
+    if zipf > 0:
+        p = 1.0 / np.arange(1, len(grid) + 1) ** zipf
+        p /= p.sum()
+        order = rng.permutation(len(grid))      # popularity != grid order
+        idx = order[rng.choice(len(grid), size=n_requests, p=p)]
+    else:
+        idx = rng.integers(0, len(grid), size=n_requests)
+    return [MapRequest(grid[i][0], grid[i][2], float(grid[i][3]), grid[i][1])
+            for i in idx]
+
+
+def bench_engine(params, cfg, stream, tick: int) -> dict:
+    engine = MapperEngine(params, cfg)
+    t0 = time.perf_counter()
+    nets = {r.workload.name: r.workload for r in stream}
+    warmup_compiles = engine.warmup(list(nets.values()),
+                                    ACCEL_ZOO["edge"], max_tick=tick)
+    warmup_s = time.perf_counter() - t0
+    compiles_before = engine.compile_count
+    tick_ms = []
+    t0 = time.perf_counter()
+    for i in range(0, len(stream), tick):
+        t1 = time.perf_counter()
+        engine.serve(stream[i:i + tick])
+        tick_ms.append((time.perf_counter() - t1) * 1e3)
+    total = time.perf_counter() - t0
+    stats = engine.stats
+    return {
+        "throughput_rps": len(stream) / total,
+        "ms_per_request": total * 1e3 / len(stream),
+        "p50_tick_ms": float(np.percentile(tick_ms, 50)),
+        "p99_tick_ms": float(np.percentile(tick_ms, 99)),
+        "warmup_s": warmup_s,
+        "warmup_compiles": warmup_compiles,
+        "steady_new_compiles": engine.compile_count - compiles_before,
+        "device_calls": stats["device_calls"],
+        "strategy_hit_rate": stats["strategy_hit_rate"],
+        "tick_dedup": stats["tick_dedup"],
+        "rows_padded": stats["rows_padded"],
+    }
+
+
+def bench_loop(params, cfg, stream, nmax_buckets) -> dict:
+    """The pre-§12 front door: one env + one fused call per request."""
+    seen = set()                                 # warm each nmax shape once
+    for r in stream:
+        nb = nmax_bucket(r.workload.n + 1, nmax_buckets)
+        if nb not in seen:
+            seen.add(nb)
+            env = FusionEnv(r.workload, r.accel, batch=r.batch,
+                            budget_bytes=r.budget_bytes, nmax=nb)
+            dnnfuser_infer_fused(params, cfg, env)
+    t0 = time.perf_counter()
+    for r in stream:
+        env = FusionEnv(r.workload, r.accel, batch=r.batch,
+                        budget_bytes=r.budget_bytes,
+                        nmax=nmax_bucket(r.workload.n + 1, nmax_buckets))
+        dnnfuser_infer_fused(params, cfg, env)
+    total = time.perf_counter() - t0
+    return {"throughput_rps": len(stream) / total,
+            "ms_per_request": total * 1e3 / len(stream)}
+
+
+def run(quick: bool = False, out: str = "BENCH_serve.json",
+        zipf: float = 1.1) -> dict:
+    cfg = DTConfig(max_steps=20, hw_dim=HW_FEATURE_DIM)
+    params = dt_init(jax.random.PRNGKey(0), cfg)
+    n_requests = 96 if quick else 512
+    tick = 16
+    stream = make_stream(n_requests, zipf)
+    engine = bench_engine(params, cfg, stream, tick)
+    loop = bench_loop(params, cfg, stream,
+                      MapperEngine(params, cfg).nmax_buckets)
+    speedup = engine["throughput_rps"] / loop["throughput_rps"]
+    print(f"engine: {engine['throughput_rps']:7.1f} req/s "
+          f"(p50 tick {engine['p50_tick_ms']:.1f} ms, p99 "
+          f"{engine['p99_tick_ms']:.1f} ms, hit rate "
+          f"{engine['strategy_hit_rate']:.2f}, "
+          f"{engine['steady_new_compiles']} steady-state compiles)")
+    print(f"loop:   {loop['throughput_rps']:7.1f} req/s  ->  engine is "
+          f"{speedup:.1f}x the per-request loop")
+    report = {
+        "bench": "serving",
+        "device": jax.devices()[0].platform,
+        "quick": quick,
+        "n_requests": n_requests,
+        "tick": tick,
+        "zipf": zipf,
+        "engine": engine,
+        "loop": loop,
+        "speedup_vs_loop": speedup,
+    }
+    path = pathlib.Path(out)
+    path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {path}")
+    return report
+
+
+def check_regression(report: dict, baseline_path: str, tol: float,
+                     min_speedup: float) -> list:
+    """Gate rules (empty list = pass): same quick mode as the baseline;
+    zero steady-state recompiles; engine latency within ``tol`` x the
+    committed baseline; engine still >= ``min_speedup`` x the per-request
+    loop ON THIS machine (a machine-relative ratio, so CI hardware speed
+    cancels out)."""
+    base = json.loads(pathlib.Path(baseline_path).read_text())
+    failures = []
+    if base.get("quick") != report.get("quick"):
+        return [f"baseline {baseline_path} was written with "
+                f"quick={base.get('quick')} but this run used "
+                f"quick={report.get('quick')}; regenerate the baseline"]
+    if report["engine"]["steady_new_compiles"] != 0:
+        failures.append(
+            f"steady-state recompiles: "
+            f"{report['engine']['steady_new_compiles']} (must be 0)")
+    new = report["engine"]["ms_per_request"]
+    old = base.get("engine", {}).get("ms_per_request")
+    if old is None:
+        failures.append(f"baseline {baseline_path} has no "
+                        f"engine.ms_per_request — regenerate it")
+    elif new > old * tol:
+        failures.append(f"engine.ms_per_request: {new:.2f} > {tol:.1f}x "
+                        f"baseline {old:.2f}")
+    if report["speedup_vs_loop"] < min_speedup:
+        failures.append(f"engine is only {report['speedup_vs_loop']:.2f}x "
+                        f"the per-request loop (gate: {min_speedup:.1f}x)")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized stream (same protocol)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--zipf", type=float, default=1.1,
+                    help="traffic skew (0 = uniform/cold-cache)")
+    ap.add_argument("--check", metavar="BASELINE",
+                    help="fail (exit 1) on regression vs this baseline")
+    ap.add_argument("--tol", type=float, default=2.5,
+                    help="allowed latency ratio vs the baseline")
+    ap.add_argument("--min-speedup", type=float, default=1.3,
+                    help="required engine-vs-loop throughput ratio")
+    args = ap.parse_args()
+    if args.check and pathlib.Path(args.out).resolve() == \
+            pathlib.Path(args.check).resolve():
+        args.out = "artifacts/bench/BENCH_serve_check.json"
+        pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    report = run(quick=args.quick, out=args.out, zipf=args.zipf)
+    if args.check:
+        failures = check_regression(report, args.check, args.tol,
+                                    args.min_speedup)
+        if failures:
+            print("SERVING REGRESSION vs", args.check)
+            for f in failures:
+                print("  ", f)
+            raise SystemExit(1)
+        print(f"serving gate OK (tol {args.tol}x, min speedup "
+              f"{args.min_speedup}x vs {args.check})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,22 +1,24 @@
-"""Batched mapper serving: many (batch, budget, accel) conditions, ONE call.
+"""One mapper, one engine: a production-shaped serving front door.
 
-    PYTHONPATH=src python examples/serve_mapper.py [--conditions 48]
+    PYTHONPATH=src python examples/serve_mapper.py [--requests 96]
 
-A deployed mapper service answers streams of queries like "map VGG16 under
-a 20 MB buffer at batch 32 on a mobile-class NPU" — each a full one-shot
-rollout.  The device-resident serving primitive ``dnnfuser_infer_batch``
-(DESIGN.md §9, §11) vmaps the fused scan rollout over a stacked grid of
-conditions — batch size, memory budget AND the accelerator itself ride
-per-row traced vectors — so the whole heterogeneous request batch costs a
-single jitted call: this is the fan-out surface the generalization
-benchmarks and any production front-end sit on.
+A deployed mapper service fields a MIXED stream — "map vgg16 under 20 MB
+at batch 32 on a mobile NPU" next to "map tiny_cnn under 3 MB on edge" —
+and must answer every tick without recompiling or re-searching.  This is
+the three-layer §12 stack end to end:
 
-1. train an hw-conditioned DNNFuser on a G-Sampler teacher corpus spanning
-   two zoo accelerators (edge + mobile);
-2. stack a grid of (batch, budget, accel) conditions — budgets never seen
-   in training, plus rows on a THIRD accelerator (laptop) the mapper never
-   trained on;
-3. serve them all in one call and report throughput + per-accel validity.
+ - core: ``dnnfuser_infer_batch`` rolls heterogeneous (workload, batch,
+   budget, accel) rows in ONE device call — the workload itself is a
+   traced per-row condition (DESIGN §12), the accelerator too (§11);
+ - engine: ``serving.MapperEngine`` buckets request shapes (pow2 batches x
+   nmax buckets -> a warmed, closed set of compiled programs), dedupes and
+   caches solved strategies;
+ - front door: this script — train an hw-conditioned mapper once, warm the
+   engine, then serve arrival ticks and report throughput, cache hit
+   rates and the zero-recompile steady state.
+
+The stream mixes zoo networks x zoo accelerators (including one never
+trained on) x budgets never seen in training.
 """
 import argparse
 import time
@@ -24,29 +26,27 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (ACCEL_ZOO, DTConfig, FusionEnv, GSamplerConfig,
-                        HW_FEATURE_DIM, TrainConfig, dnnfuser_infer_batch,
-                        dt_init, dt_loss, generate_teacher_corpus,
-                        train_model)
-from repro.workloads import vgg16
+from repro.core import (ACCEL_ZOO, DTConfig, GSamplerConfig, HW_FEATURE_DIM,
+                        MapperEngine, MapRequest, TrainConfig, dt_init,
+                        dt_loss, generate_teacher_corpus, train_model)
+from repro.workloads import resnet18, tiny_cnn, vgg16
 
 MB = 2 ** 20
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--conditions", type=int, default=48)
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--tick", type=int, default=16)
     ap.add_argument("--steps", type=int, default=300)
     args = ap.parse_args()
 
-    wl = vgg16()
-    print(wl.summary())
-
+    train_nets = [vgg16(), tiny_cnn()]
     train_accels = [ACCEL_ZOO["edge"], ACCEL_ZOO["mobile"]]
-    print("\n[1/2] training an hw-conditioned mapper "
+    print("[1/3] training an hw-conditioned mapper "
           "(teacher @ 16-64 MB on edge + mobile) ...")
     ds = generate_teacher_corpus(
-        [wl], train_accels, batch=64, budgets_mb=[16, 32, 48, 64],
+        train_nets, train_accels, batch=64, budgets_mb=[16, 32, 48, 64],
         max_steps=20, ga_cfg=GSamplerConfig(population=24, generations=20))
     cfg = DTConfig(max_steps=20, hw_dim=HW_FEATURE_DIM)
     params = dt_init(jax.random.PRNGKey(0), cfg)
@@ -55,48 +55,61 @@ def main():
     print(f"      {len(ds)} trajectories; final imitation loss "
           f"{log['final_loss']:.4f}")
 
-    C = args.conditions
-    rng = np.random.default_rng(0)
+    # -- the engine: one warmup, then a closed set of compiled programs ------
+    serve_nets = [vgg16(), tiny_cnn(), resnet18()]   # resnet18: UNSEEN net
     serve_accels = [ACCEL_ZOO["edge"], ACCEL_ZOO["mobile"],
-                    ACCEL_ZOO["laptop"]]          # laptop: never trained on
-    rows = [serve_accels[i]
-            for i in rng.integers(0, len(serve_accels), size=C)]
-    batches = rng.choice([16, 32, 64], size=C).astype(np.float32)
-    budgets = (rng.uniform(8.0, 72.0, size=C) * MB).astype(np.float32)
-    env = FusionEnv(wl, ACCEL_ZOO["edge"], batch=64, budget_bytes=32 * MB,
-                    nmax=20)   # supplies the packed workload
-
-    print(f"[2/2] serving {C} (batch, budget, accel) conditions in one "
-          f"call ...")
-    dnnfuser_infer_batch(params, cfg, env, batches, budgets, rows)  # warm
+                    ACCEL_ZOO["laptop"]]             # laptop: UNSEEN accel
+    engine = MapperEngine(params, cfg)
+    print(f"[2/3] engine warmup (nmax buckets {engine.nmax_buckets}, "
+          f"ticks <= {args.tick}) ...")
     t0 = time.perf_counter()
-    out = dnnfuser_infer_batch(params, cfg, env, batches, budgets, rows)
-    wall = time.perf_counter() - t0
+    n_programs = engine.warmup(serve_nets, ACCEL_ZOO["edge"],
+                               max_tick=args.tick)
+    print(f"      {n_programs} programs compiled in "
+          f"{time.perf_counter() - t0:.1f} s — steady state reuses these")
 
-    valid = out["valid"]
-    print(f"      {C} conditions in {wall*1e3:.1f} ms "
-          f"= {C/wall:.0f} conditions/sec")
-    if not valid.any():
-        print(f"      0/{C} within budget — every requested budget is below "
-              f"this workload's irreducible (all-SYNC) working set")
+    # -- mixed open-loop stream: unseen budgets, unseen accel, unseen net ----
+    rng = np.random.default_rng(0)
+    budgets = np.linspace(7.0, 50.0, 12) * MB        # never trained on
+    stream = [MapRequest(serve_nets[rng.integers(3)],
+                         int(rng.choice([16, 32, 64])),
+                         float(rng.choice(budgets)),
+                         serve_accels[rng.integers(3)])
+              for _ in range(args.requests)]
+    print(f"[3/3] serving {args.requests} mixed requests in ticks of "
+          f"{args.tick} ...")
+    compiles_before = engine.compile_count
+    t0 = time.perf_counter()
+    responses = []
+    for i in range(0, len(stream), args.tick):
+        responses += engine.serve(stream[i:i + args.tick])
+    wall = time.perf_counter() - t0
+    s = engine.stats
+
+    print(f"      {len(stream)} requests in {wall*1e3:.0f} ms = "
+          f"{len(stream)/wall:.0f} req/s over {s['device_calls'] - n_programs}"
+          f" device calls")
+    print(f"      strategy cache: {s['strategy_hits']} hits / "
+          f"{s['strategy_misses']} misses (rate {s['strategy_hit_rate']:.2f})"
+          f", {s['tick_dedup']} in-tick dedups")
+    print(f"      recompiles in steady state: "
+          f"{engine.compile_count - compiles_before} (must be 0)")
+    if not any(r.valid for r in responses):
+        print(f"      0/{len(responses)} within budget — every requested "
+              f"budget is below the workloads' irreducible (all-SYNC) "
+              f"working set")
         return
     for acc in serve_accels:
-        sel = np.array([r.name == acc.name for r in rows])
-        if not sel.any():
-            continue
-        v = valid[sel]
+        sel = [r for r, q in zip(responses, stream) if q.accel is acc]
+        ok = sum(r.valid for r in sel)
         tag = " (UNSEEN)" if acc.name == "laptop" else ""
-        print(f"      {acc.name:7s}{tag}: {int(v.sum())}/{int(sel.sum())} "
-              f"within budget; speedups up to "
-              f"{out['speedup'][sel][v].max() if v.any() else 0:.2f}x")
-    worst = int(np.argmin(out["speedup"]))
-    best = int(np.argmax(np.where(valid, out["speedup"], -np.inf)))
-    for tag, i in (("best", best), ("worst", worst)):
-        print(f"      {tag}: {rows[i].name}, batch {int(batches[i])}, "
-              f"budget {budgets[i]/MB:5.1f} MB -> "
-              f"speedup {out['speedup'][i]:.2f}x, "
-              f"usage {out['peak_mem'][i]/MB:5.1f} MB, "
-              f"strategy {[int(v) for v in out['strategy'][i][: wl.n + 1]]}")
+        best = max((r.speedup for r in sel if r.valid), default=0.0)
+        print(f"      {acc.name:7s}{tag}: {ok}/{len(sel)} within budget; "
+              f"speedups up to {best:.2f}x")
+    best = max((r for r in responses if r.valid), key=lambda r: r.speedup)
+    print(f"      best: {best.workload} -> {best.speedup:.2f}x, "
+          f"usage {best.peak_mem/MB:.1f} MB, "
+          f"strategy {[int(v) for v in best.strategy]}")
 
 
 if __name__ == "__main__":

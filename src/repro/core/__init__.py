@@ -24,10 +24,11 @@ from .gsampler import (GSamplerConfig, GSamplerResult, gsampler_search,
 from .baselines import BASELINE_METHODS, run_baseline, SearchResult
 from .a2c import a2c_search
 from .model import (DTConfig, dt_init, dt_apply, dt_loss, dt_cache_init,
-                    dt_prefill, dt_decode_step)
+                    dt_prefill, dt_decode_step, DTBackend)
 from .seq2seq import (S2SConfig, s2s_init, s2s_apply, s2s_loss, s2s_encode,
                       s2s_decode_start, s2s_decode_step, s2s_stream_init,
-                      s2s_stream_step)
+                      s2s_stream_step, S2SBackend)
+from .backend import MapperBackend, backend_for, register_backend
 from .dataset import (TrajectoryDataset, collect_teacher_data,
                       merge_datasets, generate_teacher_corpus,
                       window_dataset, returns_to_go)
@@ -36,6 +37,19 @@ from .train import (TrainConfig, train_model, make_train_step, fine_tune,
 from .infer import (InferResult, dnnfuser_infer, s2s_infer,
                     dnnfuser_infer_fused, s2s_infer_fused,
                     dnnfuser_infer_batch)
+
+# The serving engine (DESIGN §12) layers ON TOP of core; its API is
+# re-exported here so front doors import one namespace.  The re-export is
+# lazy (PEP 562): an eager import would cycle when ``repro.serving`` is
+# imported first (serving pulls core submodules mid-initialization).
+_SERVING_API = ("MapperEngine", "MapRequest", "MapResponse", "StrategyCache")
+
+
+def __getattr__(name):
+    if name in _SERVING_API:
+        from .. import serving
+        return getattr(serving, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "AccelConfig", "PAPER_ACCEL", "ACCEL_ZOO", "HwVec", "HW_FIELDS",
@@ -54,9 +68,12 @@ __all__ = [
     "GridTeacherResult", "gsampler_search_grid",
     "BASELINE_METHODS", "run_baseline", "SearchResult", "a2c_search",
     "DTConfig", "dt_init", "dt_apply", "dt_loss", "dt_cache_init",
-    "dt_prefill", "dt_decode_step", "S2SConfig", "s2s_init", "s2s_apply",
-    "s2s_loss", "s2s_encode", "s2s_decode_start", "s2s_decode_step",
-    "s2s_stream_init", "s2s_stream_step", "TrajectoryDataset",
+    "dt_prefill", "dt_decode_step", "DTBackend", "S2SConfig", "s2s_init",
+    "s2s_apply", "s2s_loss", "s2s_encode", "s2s_decode_start",
+    "s2s_decode_step", "s2s_stream_init", "s2s_stream_step", "S2SBackend",
+    "MapperBackend", "backend_for", "register_backend",
+    "MapperEngine", "MapRequest", "MapResponse", "StrategyCache",
+    "TrajectoryDataset",
     "collect_teacher_data", "merge_datasets", "generate_teacher_corpus",
     "window_dataset", "returns_to_go", "TrainConfig", "train_model",
     "make_train_step", "fine_tune", "restore_params", "InferResult",

@@ -1,0 +1,62 @@
+"""The MapperBackend protocol: one rollout engine, many sequence models.
+
+Before DESIGN §12 the inference module special-cased the decision
+transformer vs the seq2seq baseline at every call site (separate jitted
+forwards, a string-keyed ``_model_iface`` switch).  The protocol below is
+the single seam instead: a backend is a stateless, hashable namespace (a
+class) exposing the four entry points the rollouts need, with the mutable
+decode state as an opaque pytree — so the host loop, the fused scan episode
+and the batched/bucketed serving engine are written ONCE and ride either
+model (``model.DTBackend``: KV cache; ``seq2seq.S2SBackend``: streaming
+LSTM state).  Backends pass through ``jax.jit`` as static arguments, which
+is why they are classes rather than instances.
+"""
+from __future__ import annotations
+
+from typing import Protocol
+
+from .model import DTConfig, DTBackend
+from .seq2seq import S2SConfig, S2SBackend
+
+__all__ = ["MapperBackend", "backend_for", "register_backend"]
+
+
+class MapperBackend(Protocol):
+    """What a sequence model must expose to ride the shared rollouts.
+
+    All array arguments carry a leading batch axis; ``hw`` is the optional
+    normalized accelerator-condition row (DESIGN §11)."""
+
+    kind: str
+
+    @staticmethod
+    def forward(params, cfg, rtg, states, actions, hw=None):
+        """Teacher-forced scores [B, T] over a full trajectory."""
+
+    @staticmethod
+    def state_init(cfg, batch: int = 1):
+        """Fresh decode-state pytree (KV cache / recurrent state)."""
+
+    @staticmethod
+    def prefill(params, cfg, state, r0, s0, hw=None):
+        """Feed (r_0, s_0), predict a_0 -> (pred [B], state)."""
+
+    @staticmethod
+    def step(params, cfg, state, r_t, s_t, a_prev, hw=None):
+        """Append (a_{t-1}, r_t, s_t), predict a_t -> (pred [B], state)."""
+
+
+_BACKENDS: dict[type, type] = {DTConfig: DTBackend, S2SConfig: S2SBackend}
+
+
+def register_backend(cfg_cls: type, backend: type) -> None:
+    """Register a new config-type -> backend mapping (extension point)."""
+    _BACKENDS[cfg_cls] = backend
+
+
+def backend_for(cfg) -> type:
+    """Resolve the :class:`MapperBackend` for a model config instance."""
+    for cfg_cls, backend in _BACKENDS.items():
+        if isinstance(cfg, cfg_cls):
+            return backend
+    raise TypeError(f"no MapperBackend registered for {type(cfg).__name__}")

@@ -89,8 +89,16 @@ def stack_workloads(wls: list[dict]) -> dict[str, jnp.ndarray]:
 
     The stacked dict vmaps through every cost-model entry point — this is
     what lets a heterogeneous (workload, budget) condition grid evaluate in
-    one device program (``evaluate_grid``, DESIGN §10).  Entry ``c`` may
-    repeat a workload (one copy per memory condition)."""
+    one device program (``evaluate_grid``, DESIGN §10) and a mixed-network
+    request batch serve in one fused call (``infer.dnnfuser_infer_batch``,
+    DESIGN §12).  Entry ``c`` may repeat a workload; rows with different
+    true layer counts ride their per-row ``n`` — positions past it are
+    masked (padding stays SYNC/zero), so padding to a shared ``nmax``
+    never changes a row's cost."""
+    sizes = {int(np.shape(w["A"])[-1]) for w in wls}
+    if len(sizes) > 1:
+        raise ValueError(f"cannot stack workloads packed to different nmax "
+                         f"{sorted(sizes)}; repack to a shared bucket")
     keys = wls[0].keys()
     return {k: jnp.stack([w[k] for w in wls]) for k in keys}
 

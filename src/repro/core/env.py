@@ -130,8 +130,11 @@ def env_make(wl: dict, batch: jax.Array, budget_bytes: jax.Array,
              hw) -> EnvConsts:
     """Build per-condition constants. ``batch``/``budget_bytes`` may be
     traced (vmapped serving conditions), and so may ``hw`` — an
-    ``AccelConfig`` or a traced ``accel.HwVec``, so serving vmaps over
-    heterogeneous accelerators too (DESIGN §11)."""
+    ``AccelConfig`` or a traced ``accel.HwVec`` (DESIGN §11) — and the
+    packed ``wl`` itself, whose arrays vmap per serving row (DESIGN §12).
+    A row's true length rides ``wl["n"]``: the fused rollout masks every
+    position past it to SYNC and freezes the carry there, so workloads of
+    different depth padded to one ``nmax`` roll out bit-exactly."""
     B = jnp.asarray(batch, jnp.float32)
     budget = jnp.asarray(budget_bytes, jnp.float32)
     pc = cm.prefix_consts(wl, B, budget, hw)

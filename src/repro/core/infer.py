@@ -7,20 +7,24 @@ micro-batch a_t; the environment updates s_{t+1}/r_{t+1}.  One rollout
 (= N+1 tiny forward passes) replaces an entire 2k-sample search, which is
 the 66x-127x speed claim benchmarked in ``benchmarks/speed_oneshot.py``.
 
-Two implementations (DESIGN.md §9):
- - the host reference ``_rollout``: a Python loop that re-runs a jitted
-   full-sequence forward and a full cost-model evaluation per step, with
-   NumPy round-trips — kept as the readable oracle;
- - the device-resident ``dnnfuser_infer_fused``: one jitted
-   ``jax.lax.scan`` fusing KV-cached single-token decode, the O(1)
-   ``prefix_step`` environment transition and a ``lax.while_loop``
-   halve-or-sync budget guard — zero host syncs inside the episode.
-   ``dnnfuser_infer_batch`` vmaps it over a stacked batch of
-   (batch, budget, accel) serving conditions in one device call — since
-   DESIGN §11 the accelerator itself is a traced per-row condition
-   (``accel.HwVec`` + normalized ``accel_features`` for the model), so one
-   checkpoint serves a heterogeneous device fleet.  This is the serving
-   primitive ``examples/serve_mapper.py`` and the benchmarks fan out over.
+Two implementations (DESIGN.md §9): the host reference ``_rollout`` (a
+Python loop re-running a jitted full-sequence forward and a full cost-model
+evaluation per step — the readable oracle) and the device-resident
+``dnnfuser_infer_fused`` — one jitted ``jax.lax.scan`` fusing cached
+single-token decode, the O(1) ``prefix_step`` env transition and a
+``lax.while_loop`` halve-or-sync budget guard, zero host syncs inside the
+episode.  Both roll any model implementing the ``backend.MapperBackend``
+protocol (DESIGN §12): DT (KV cache) and seq2seq (streaming LSTM state)
+ride the exact same episode code via ``backend_for``.
+
+``dnnfuser_infer_batch`` vmaps the episode over a stacked batch of serving
+conditions in one device call.  Since DESIGN §11 the accelerator is a
+traced per-row condition (``accel.HwVec``); since §12 the WORKLOAD is too
+(``cost_model.stack_workloads``: heterogeneous networks padded to a shared
+``nmax``, positions past each row's true ``n`` masked to SYNC), so one
+device call serves "resnet50 on mobile at 20 MB" next to "mnasnet on edge
+at 8 MB".  This is the serving primitive ``repro.serving.MapperEngine``
+and the benchmarks fan out over.
 """
 from __future__ import annotations
 
@@ -35,9 +39,8 @@ import numpy as np
 from .env import (FusionEnv, STATE_DIM, decode_action, encode_action,
                   decode_action_jnp, encode_action_jnp, env_make,
                   env_observe, env_reset, env_step, env_final)
-from .model import DTConfig, dt_apply, dt_cache_init, dt_prefill, dt_decode_step
-from .seq2seq import S2SConfig, s2s_apply, s2s_stream_init, s2s_stream_step
-from .accel import AccelConfig, accel_features, as_hw, stack_hw
+from .backend import backend_for
+from .accel import accel_features, as_hw, stack_hw
 from . import cost_model as cm
 
 __all__ = ["InferResult", "dnnfuser_infer", "s2s_infer",
@@ -55,14 +58,9 @@ class InferResult:
     n_model_calls: int
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def _dt_forward(params, cfg: DTConfig, rtg, states, actions, hw=None):
-    return dt_apply(params, cfg, rtg, states, actions, hw=hw)
-
-
-@partial(jax.jit, static_argnames=("cfg",))
-def _s2s_forward(params, cfg: S2SConfig, rtg, states, actions, hw=None):
-    return s2s_apply(params, cfg, rtg, states, actions, hw=hw)
+@partial(jax.jit, static_argnames=("cfg", "backend"))
+def _forward(params, cfg, backend, rtg, states, actions, hw=None):
+    return backend.forward(params, cfg, rtg, states, actions, hw)
 
 
 def _hw_condition(cfg, env: FusionEnv):
@@ -75,7 +73,8 @@ def _hw_condition(cfg, env: FusionEnv):
     return env.hw_features[None]
 
 
-def _rollout(forward, params, cfg, env: FusionEnv, *, repair: bool) -> InferResult:
+def _rollout(backend, params, cfg, env: FusionEnv, *,
+             repair: bool) -> InferResult:
     T = cfg.max_steps
     rtg = np.zeros((1, T), np.float32)
     states = np.zeros((1, T, STATE_DIM), np.float32)
@@ -87,9 +86,9 @@ def _rollout(forward, params, cfg, env: FusionEnv, *, repair: bool) -> InferResu
     for t in range(env.n + 1):
         states[0, t] = s
         rtg[0, t] = env.reward_to_go
-        pred = forward(params, cfg, jnp.asarray(rtg), jnp.asarray(states),
-                       jnp.asarray(actions),
-                       None if hwf is None else jnp.asarray(hwf))
+        pred = _forward(params, cfg, backend, jnp.asarray(rtg),
+                        jnp.asarray(states), jnp.asarray(actions),
+                        None if hwf is None else jnp.asarray(hwf))
         calls += 1
         a_enc = float(pred[0, t])
         a = int(decode_action(a_enc, env.batch))
@@ -117,60 +116,36 @@ def _rollout(forward, params, cfg, env: FusionEnv, *, repair: bool) -> InferResu
                        bool(out.valid), wall, calls)
 
 
-def dnnfuser_infer(params, cfg: DTConfig, env: FusionEnv, *,
+def dnnfuser_infer(params, cfg, env: FusionEnv, *,
                    repair: bool = True) -> InferResult:
-    """Conditional autoregressive inference of DNNFuser (host reference)."""
-    return _rollout(_dt_forward, params, cfg, env, repair=repair)
-
-
-def s2s_infer(params, cfg: S2SConfig, env: FusionEnv, *,
-              repair: bool = True) -> InferResult:
-    return _rollout(_s2s_forward, params, cfg, env, repair=repair)
+    """Conditional autoregressive inference (host reference); works for any
+    registered ``MapperBackend`` config (DT, seq2seq, ...)."""
+    return _rollout(backend_for(cfg), params, cfg, env, repair=repair)
 
 
 # ---------------------------------------------------------------------------
-# Device-resident fused rollout (DESIGN.md §9).
+# Device-resident fused rollout (DESIGN.md §9, §12).
 # ---------------------------------------------------------------------------
-
-
-def _model_iface(kind: str, params, cfg, hw_feats=None):
-    """(init, prefill, step) closures with a uniform pytree model state.
-
-    ``hw_feats`` [F] (optional, traced) is the accelerator condition row the
-    hw-aware models add to their conditioning channel (DESIGN §11)."""
-    hwb = None if hw_feats is None else hw_feats[None]
-    if kind == "dt":
-        return (lambda: dt_cache_init(cfg),
-                lambda st, r, s: dt_prefill(params, cfg, st, r[None], s[None],
-                                            hwb),
-                lambda st, r, s, ap: dt_decode_step(params, cfg, st, r[None],
-                                                    s[None], ap[None], hwb))
-    if kind == "s2s":
-        def prefill(st, r, s):
-            return s2s_stream_step(params, cfg, st, r[None], s[None],
-                                   jnp.zeros((1,), jnp.float32), hwb)
-        return (lambda: s2s_stream_init(cfg),
-                prefill,
-                lambda st, r, s, ap: s2s_stream_step(params, cfg, st, r[None],
-                                                     s[None], ap[None], hwb))
-    raise ValueError(kind)
 
 
 def _fused_episode(params, cfg, wl, batch, budget_bytes, hw,
-                   hw_feats, repair: bool, kind: str) -> dict:
+                   hw_feats, repair: bool, backend) -> dict:
     """One (workload, batch, budget, accel) episode, fully traced.
 
     All control flow the host loop does in Python — the per-step env
     observation, the model call, the halve-or-sync budget guard and the env
     transition — runs inside one ``lax.scan`` (guard: ``lax.while_loop``),
     so the episode lowers to a single device program with no host syncs.
-    ``hw`` may be a traced ``accel.HwVec`` and ``hw_feats`` its normalized
-    condition row — both vmap per serving lane (DESIGN §11).
+    Everything that varies per serving lane is traced data and vmaps:
+    ``hw``/``hw_feats`` (DESIGN §11) and, since §12, the packed workload
+    ``wl`` itself — positions past a lane's true ``n`` are masked to SYNC
+    (``active``), which is what makes heterogeneous-length rows under one
+    ``nmax`` bit-exact with their unpadded single-row rollouts.
     """
     consts = env_make(wl, batch, budget_bytes, hw)
     B, budget, n = consts.B, consts.budget, consts.n
     P = wl["A"].shape[0]
-    minit, mprefill, mstep = _model_iface(kind, params, cfg, hw_feats)
+    hwb = None if hw_feats is None else hw_feats[None]
 
     def guard(carry, a):
         """The host probe loop: shrink / sync until the staged prefix plus
@@ -186,7 +161,8 @@ def _fused_episode(params, cfg, wl, batch, budget_bytes, hw,
     # --- t = 0: prefill (r_0, s_0); the input micro-batch cannot sync ------
     carry0 = env_reset(consts)
     r0, s0 = env_observe(consts, carry0, hw)
-    pred0, mstate = mprefill(minit(), r0, s0)
+    pred0, mstate = backend.prefill(params, cfg, backend.state_init(cfg),
+                                    r0[None], s0[None], hwb)
     a0 = jnp.maximum(decode_action_jnp(pred0[0], B), 1)
     carry = env_step(consts, carry0, a0, hw)
     actions = jnp.full((P,), cm.SYNC, jnp.int32).at[0].set(a0)
@@ -195,7 +171,8 @@ def _fused_episode(params, cfg, wl, batch, budget_bytes, hw,
         carry, mstate, a_prev, actions = sc
         active = t <= n
         r_t, s_t = env_observe(consts, carry, hw)
-        pred, mstate = mstep(mstate, r_t, s_t, encode_action_jnp(a_prev, B))
+        pred, mstate = backend.step(params, cfg, mstate, r_t[None], s_t[None],
+                                    encode_action_jnp(a_prev, B)[None], hwb)
         a = decode_action_jnp(pred[0], B)
         if repair:
             a = guard(carry, a)
@@ -215,30 +192,33 @@ def _fused_episode(params, cfg, wl, batch, budget_bytes, hw,
                 baseline_latency=consts.base_lat)
 
 
-@partial(jax.jit, static_argnames=("cfg", "repair", "kind"))
+@partial(jax.jit, static_argnames=("cfg", "repair", "backend"))
 def _fused_one(params, cfg, wl, batch, budget_bytes, hw, hw_feats,
-               repair, kind):
+               repair, backend):
     return _fused_episode(params, cfg, wl, batch, budget_bytes, hw,
-                          hw_feats, repair, kind)
+                          hw_feats, repair, backend)
 
 
-@partial(jax.jit, static_argnames=("cfg", "repair", "kind"))
+@partial(jax.jit, static_argnames=("cfg", "repair", "backend", "stacked"))
 def _fused_batch(params, cfg, wl, batches, budgets, hw, hw_feats,
-                 repair, kind):
+                 repair, backend, stacked):
+    # ``stacked`` workloads carry a leading per-row axis and vmap alongside
+    # the other conditions; a shared workload broadcasts (in_axes None).
     return jax.vmap(
-        lambda b, m, h, hf: _fused_episode(params, cfg, wl, b, m, h, hf,
-                                           repair, kind),
-        in_axes=(0, 0, 0, None if hw_feats is None else 0),
-    )(batches, budgets, hw, hw_feats)
+        lambda w, b, m, h, hf: _fused_episode(params, cfg, w, b, m, h, hf,
+                                              repair, backend),
+        in_axes=(0 if stacked else None, 0, 0, 0,
+                 None if hw_feats is None else 0),
+    )(wl, batches, budgets, hw, hw_feats)
 
 
-def _fused_infer(kind, params, cfg, env: FusionEnv, repair) -> InferResult:
+def _fused_infer(backend, params, cfg, env: FusionEnv, repair) -> InferResult:
     hwf = _hw_condition(cfg, env)
     t0 = time.perf_counter()
     out = _fused_one(params, cfg, env.wl, float(env.batch),
                      float(env.budget_bytes), as_hw(env.hw),
                      None if hwf is None else jnp.asarray(hwf[0]),
-                     repair, kind)
+                     repair, backend)
     strat = np.asarray(out["strategy"])          # device sync = episode end
     wall = time.perf_counter() - t0
     return InferResult(strat, float(out["speedup"]), float(out["latency"]),
@@ -246,40 +226,53 @@ def _fused_infer(kind, params, cfg, env: FusionEnv, repair) -> InferResult:
                        env.n + 1)
 
 
-def dnnfuser_infer_fused(params, cfg: DTConfig, env: FusionEnv, *,
+def dnnfuser_infer_fused(params, cfg, env: FusionEnv, *,
                          repair: bool = True) -> InferResult:
     """Device-resident one-shot inference: emits the same strategy as
     :func:`dnnfuser_infer` from a single jitted scan."""
-    return _fused_infer("dt", params, cfg, env, repair)
+    return _fused_infer(backend_for(cfg), params, cfg, env, repair)
 
 
-def s2s_infer_fused(params, cfg: S2SConfig, env: FusionEnv, *,
-                    repair: bool = True) -> InferResult:
-    """Fused seq2seq rollout (streaming-encoder contract, see seq2seq)."""
-    return _fused_infer("s2s", params, cfg, env, repair)
+# Backend dispatch made the s2s entry points pure aliases (the config type
+# selects seq2seq.S2SBackend); kept for API compatibility.
+s2s_infer = dnnfuser_infer
+s2s_infer_fused = dnnfuser_infer_fused
 
 
-def dnnfuser_infer_batch(params, cfg: DTConfig, env_or_wl, batches,
+def dnnfuser_infer_batch(params, cfg, env_or_wl, batches,
                          budgets_bytes, hw=None, *,
                          repair: bool = True) -> dict:
-    """Serve a stacked batch of (batch, budget, accel) conditions in ONE
-    device call over a packed workload.
+    """Serve a stacked batch of (workload, batch, budget, accel) serving
+    conditions in ONE device call.
 
-    ``env_or_wl``: a FusionEnv (condition fields ignored) or a packed
-    workload dict from ``cost_model.pack_workload``.  ``batches`` and
-    ``budgets_bytes`` are same-length 1-D arrays.  ``hw`` is optional with
-    a FusionEnv (defaults to the env's accelerator) and accepts anything
-    ``accel.stack_hw`` does — a single ``AccelConfig``, a length-C sequence
-    of them, a stacked ``HwVec``, or a raw ``[C, HW_FEATURE_DIM]`` array —
-    so HETEROGENEOUS per-row accelerators serve in the same fused call
-    (DESIGN §11).  Returns a dict of stacked arrays (strategy [C, P] int32,
-    latency/peak_mem/speedup/valid [C]).  This is the serving primitive the
-    throughput and hw-generalization benchmarks and
-    ``examples/serve_mapper.py`` fan out over."""
+    ``env_or_wl`` supplies the per-row workloads:
+     - a FusionEnv (condition fields ignored) or a packed workload dict
+       from ``cost_model.pack_workload`` — ONE network shared by all rows;
+     - a sequence of FusionEnvs / packed dicts (same ``nmax``), or an
+       already-stacked dict from ``cost_model.stack_workloads`` — a
+       HETEROGENEOUS network per row, padded to the shared ``nmax`` with
+       each row's positions past its true ``n`` masked to SYNC in the scan
+       (DESIGN §12), bit-exact per row with the single-workload rollout.
+
+    ``batches`` and ``budgets_bytes`` are same-length 1-D arrays.  ``hw``
+    is optional with FusionEnvs (defaults to each env's accelerator) and
+    accepts anything ``accel.stack_hw`` does — one ``AccelConfig``, a
+    length-C sequence, a stacked ``HwVec``, or a raw ``[C, 10]`` array —
+    heterogeneous per-row accelerators serve in the same fused call
+    (DESIGN §11).  Any registered ``MapperBackend`` config works (DT and
+    seq2seq).  Returns a dict of stacked arrays (strategy [C, P] int32,
+    latency/peak_mem/speedup/valid [C])."""
     if isinstance(env_or_wl, FusionEnv):
         wl = env_or_wl.wl
         if hw is None:
             hw = env_or_wl.hw
+    elif isinstance(env_or_wl, (list, tuple)):
+        rows = [e.wl if isinstance(e, FusionEnv) else e for e in env_or_wl]
+        wl = cm.stack_workloads(rows)
+        if hw is None:
+            if not all(isinstance(e, FusionEnv) for e in env_or_wl):
+                raise ValueError("hw is required with packed workloads")
+            hw = [e.hw for e in env_or_wl]
     else:
         wl = env_or_wl
         if hw is None:
@@ -287,11 +280,15 @@ def dnnfuser_infer_batch(params, cfg: DTConfig, env_or_wl, batches,
     batches = jnp.asarray(batches, jnp.float32)
     budgets = jnp.asarray(budgets_bytes, jnp.float32)
     C = batches.shape[0]
+    stacked = jnp.ndim(wl["n"]) == 1
+    if stacked and wl["n"].shape[0] != C:
+        raise ValueError(f"stacked workloads have {wl['n'].shape[0]} rows, "
+                         f"expected {C}")
     hwv = stack_hw(hw, C)
     # the model's condition rows are computed OUTSIDE the jit by the same
     # accel_features the host reference uses -> bit-identical inputs
     hwf = (jnp.asarray(np.asarray(accel_features(hwv), np.float32))
            if getattr(cfg, "hw_dim", 0) else None)
     out = _fused_batch(params, cfg, wl, batches, budgets, hwv, hwf,
-                       repair, "dt")
+                       repair, backend_for(cfg), stacked)
     return {k: np.asarray(v) for k, v in out.items()}

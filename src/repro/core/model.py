@@ -31,7 +31,7 @@ from .. import nn
 from .env import STATE_DIM
 
 __all__ = ["DTConfig", "dt_init", "dt_apply", "dt_loss", "dt_cache_init",
-           "dt_prefill", "dt_decode_step"]
+           "dt_prefill", "dt_decode_step", "DTBackend"]
 
 
 @dataclass(frozen=True)
@@ -212,6 +212,35 @@ def dt_decode_step(params: dict, cfg: DTConfig, cache: list, r_t: jax.Array,
     preds, cache = _dt_blocks_cached(
         params, cfg, jnp.stack([tok_a, tok_r, tok_s], axis=1), cache)
     return preds[:, 2], cache
+
+
+class DTBackend:
+    """The decision transformer as a ``infer.MapperBackend`` (DESIGN §12).
+
+    The rollout engines in ``infer`` are model-agnostic: they drive any
+    backend exposing (``forward``, ``state_init``, ``prefill``, ``step``)
+    with a pytree decode state.  For the DT the state is the per-block KV
+    cache.  The class itself is the backend (stateless, hashable), so it
+    rides ``jax.jit`` as a static argument."""
+
+    kind = "dt"
+
+    @staticmethod
+    def forward(params, cfg: DTConfig, rtg, states, actions, hw=None):
+        """Full-sequence teacher-forced scores (host reference path)."""
+        return dt_apply(params, cfg, rtg, states, actions, hw=hw)
+
+    @staticmethod
+    def state_init(cfg: DTConfig, batch: int = 1):
+        return dt_cache_init(cfg, batch)
+
+    @staticmethod
+    def prefill(params, cfg: DTConfig, state, r0, s0, hw=None):
+        return dt_prefill(params, cfg, state, r0, s0, hw)
+
+    @staticmethod
+    def step(params, cfg: DTConfig, state, r_t, s_t, a_prev, hw=None):
+        return dt_decode_step(params, cfg, state, r_t, s_t, a_prev, hw)
 
 
 def dt_loss(params: dict, cfg: DTConfig, batch: dict) -> jax.Array:

@@ -24,7 +24,7 @@ from .env import STATE_DIM
 
 __all__ = ["S2SConfig", "s2s_init", "s2s_apply", "s2s_loss", "s2s_encode",
            "s2s_decode_start", "s2s_decode_step", "s2s_stream_init",
-           "s2s_stream_step"]
+           "s2s_stream_step", "S2SBackend"]
 
 
 @dataclass(frozen=True)
@@ -200,6 +200,35 @@ def s2s_stream_step(params: dict, cfg: S2SConfig, cache: dict,
                                r_t, s_t, a_prev, hw)
     return pred, {"eh": eh, "ec": ec, "h": dc["h"], "c": dc["c"],
                   "t": cache["t"] + 1}
+
+
+class S2SBackend:
+    """The seq2seq baseline as a ``infer.MapperBackend`` (DESIGN §12).
+
+    The decode state is the streaming (encoder, decoder) LSTM state; the
+    prefill is the documented streaming-encoder contract — the first step
+    feeds (r_0, s_0) with a zero previous action and seeds the decoder from
+    the advancing encoder (see the incremental-decode note above)."""
+
+    kind = "s2s"
+
+    @staticmethod
+    def forward(params, cfg: S2SConfig, rtg, states, actions, hw=None):
+        """Full-sequence teacher-forced scores (host reference path)."""
+        return s2s_apply(params, cfg, rtg, states, actions, hw)
+
+    @staticmethod
+    def state_init(cfg: S2SConfig, batch: int = 1):
+        return s2s_stream_init(cfg, batch)
+
+    @staticmethod
+    def prefill(params, cfg: S2SConfig, state, r0, s0, hw=None):
+        return s2s_stream_step(params, cfg, state, r0, s0,
+                               jnp.zeros(r0.shape, jnp.float32), hw)
+
+    @staticmethod
+    def step(params, cfg: S2SConfig, state, r_t, s_t, a_prev, hw=None):
+        return s2s_stream_step(params, cfg, state, r_t, s_t, a_prev, hw)
 
 
 def s2s_loss(params: dict, cfg: S2SConfig, batch: dict) -> jax.Array:

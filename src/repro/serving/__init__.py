@@ -1,0 +1,17 @@
+"""The layered serving stack (DESIGN.md §12).
+
+``engine.MapperEngine`` is the production front door over the traced
+serving core (``repro.core.infer.dnnfuser_infer_batch``): it buckets
+request shapes so steady-state traffic never recompiles (``bucketing``),
+caches solved strategies (``cache.StrategyCache``), and coalesces a mixed
+stream of (network, batch, budget, accelerator) queries into one fused
+device call per ``nmax`` bucket.
+"""
+from .bucketing import (batch_bucket, budget_bucket, coalesce,
+                        default_nmax_buckets, nmax_bucket, pow2_buckets)
+from .cache import StrategyCache
+from .engine import MapperEngine, MapRequest, MapResponse
+
+__all__ = ["MapperEngine", "MapRequest", "MapResponse", "StrategyCache",
+           "batch_bucket", "budget_bucket", "coalesce",
+           "default_nmax_buckets", "nmax_bucket", "pow2_buckets"]

@@ -1,0 +1,65 @@
+"""Solved-strategy LRU cache (DESIGN.md §12).
+
+A mapper front door sees heavy-tailed condition traffic: the same
+(network, batch, budget-ish, accelerator) query recurs across users.  A
+solved strategy is a few dozen int32s — caching it turns a repeat query
+into a dictionary hit instead of a device rollout.  Keys are the QUANTIZED
+condition (``MapperEngine._strategy_key``: workload id, batch,
+``bucketing.budget_bucket``, rounded ``accel_features``), values whatever
+the engine stores (strategy + metrics).  Plain LRU with hit/miss counters;
+the counters feed ``MapperEngine.stats`` and the serving benchmark's
+reported hit rates.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Hashable
+
+__all__ = ["StrategyCache"]
+
+
+class StrategyCache:
+    """Bounded LRU with hit/miss accounting (not thread-safe; the engine
+    serializes access)."""
+
+    def __init__(self, capacity: int = 4096):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._d: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Hashable):
+        """Value for ``key`` (refreshing recency) or None; counts the
+        lookup as a hit/miss."""
+        try:
+            v = self._d[key]
+        except KeyError:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return v
+
+    def put(self, key: Hashable, value) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)          # evict least-recent
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key) -> bool:         # no counter side effects
+        return key in self._d
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def clear(self) -> None:
+        self._d.clear()
+        self.hits = 0
+        self.misses = 0

@@ -1,0 +1,256 @@
+"""MapperEngine: the layered serving front door (DESIGN.md §12).
+
+Layer map — each layer only talks to the one below:
+
+ - **core** (``repro.core.infer``): the traced episode.  Everything that
+   varies per request — workload, batch, budget, accelerator — is per-row
+   DATA of one jitted program (``dnnfuser_infer_batch`` over
+   ``cost_model.stack_workloads``), so a mixed batch of networks serves in
+   one device call;
+ - **engine** (this module): checkpointed params + everything a device
+   program must not recompute per request — a packed-workload cache, shape
+   bucketing (``bucketing``: pow2 request batches x ``nmax`` buckets, so
+   steady-state traffic hits a warmed, countable set of compiled
+   programs), and a solved-strategy LRU (``cache.StrategyCache``);
+ - **front door** (``examples/serve_mapper.py``,
+   ``benchmarks/bench_serving.py``): accepts a request stream, calls
+   :meth:`MapperEngine.serve` per arrival tick.
+
+Compile accounting: the engine routes every device call through the one
+module-level jitted entry point with a closed set of shape signatures
+``(nmax bucket, batch bucket)``; ``compile_count`` increments exactly when
+a signature is first materialized.  After :meth:`warmup` covers the set,
+steady-state serving MUST NOT grow it — the recompile-churn guard
+(``tests/test_serving.py``) and the serving benchmark both assert on it.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.accel import AccelConfig, accel_features
+from ..core.backend import backend_for
+from ..core.infer import dnnfuser_infer_batch
+from ..core import cost_model as cm
+from .bucketing import (MB, batch_bucket, budget_bucket, coalesce,
+                        default_nmax_buckets, nmax_bucket, pow2_buckets)
+from .cache import StrategyCache
+
+__all__ = ["MapRequest", "MapResponse", "MapperEngine"]
+
+
+@dataclass(frozen=True)
+class MapRequest:
+    """One mapping query: "map ``workload`` at ``batch`` under
+    ``budget_bytes`` of on-chip buffer on ``accel``".
+
+    ``workload`` is a ``repro.workloads.Workload``; its ``name`` is the
+    cache identity, so distinct networks must carry distinct names."""
+    workload: object
+    batch: int
+    budget_bytes: float
+    accel: AccelConfig
+
+
+@dataclass
+class MapResponse:
+    """The solved mapping for one request.
+
+    ``strategy`` is trimmed to the workload's true ``n + 1`` positions
+    (positions the padded device rollout masked to SYNC are dropped).
+    ``valid`` is re-derived against THIS request's exact budget even when
+    the strategy came from the cache.  ``cached`` marks a strategy-cache
+    hit (no device work)."""
+    workload: str
+    strategy: np.ndarray
+    latency: float
+    peak_mem: float
+    speedup: float
+    valid: bool
+    cached: bool
+
+
+@functools.lru_cache(maxsize=1024)
+def _accel_key(accel: AccelConfig) -> tuple:
+    """Quantized accelerator identity for strategy-cache keys: the same
+    normalized ``accel_features`` the model conditions on, rounded so f32
+    noise cannot split one physical device into many keys."""
+    feats = np.asarray(accel_features(accel), np.float64)
+    return tuple(np.round(feats, 6).tolist())
+
+
+class MapperEngine:
+    """One checkpointed mapper serving heterogeneous traffic, recompile-free
+    in steady state.
+
+    Parameters: ``params``/``cfg`` — the checkpointed model (any registered
+    ``MapperBackend`` config; ``cfg.max_steps`` caps the largest usable
+    ``nmax`` bucket); ``nmax_buckets`` — the workload-length buckets
+    (default ``bucketing.default_nmax_buckets``); ``budget_quantum`` —
+    strategy-cache budget quantization (bytes); ``strategy_capacity`` —
+    LRU size; ``repair`` — the inference-time budget guard.
+    """
+
+    def __init__(self, params, cfg, *, repair: bool = True,
+                 nmax_buckets: tuple[int, ...] | None = None,
+                 strategy_capacity: int = 4096,
+                 budget_quantum: float = MB):
+        if nmax_buckets is None:
+            nmax_buckets = default_nmax_buckets(cfg.max_steps)
+        if max(nmax_buckets) > cfg.max_steps:
+            raise ValueError(
+                f"nmax bucket {max(nmax_buckets)} exceeds the model's "
+                f"max_steps={cfg.max_steps} trajectory capacity")
+        self.params = params
+        self.cfg = cfg
+        self.backend = backend_for(cfg)          # fail early on bad cfg
+        self.repair = repair
+        self.nmax_buckets = tuple(sorted(nmax_buckets))
+        self.budget_quantum = float(budget_quantum)
+        self.strategies = StrategyCache(strategy_capacity)
+        self._packed: dict = {}                  # (name, bpe, nmax) -> wl
+        self._compiled: set = set()              # (nmax bucket, C bucket)
+        self.compile_count = 0
+        self.requests_served = 0
+        self.device_calls = 0
+        self.rows_padded = 0
+        self.tick_dedup = 0
+
+    # -- request planning ----------------------------------------------------
+
+    def _pack(self, workload, accel: AccelConfig, nmax: int) -> dict:
+        """Packed-workload cache: packing depends on the accelerator only
+        through ``bytes_per_elem`` (the evaluators rescale in-graph,
+        DESIGN §11), so the key is (name, bpe, nmax)."""
+        key = (workload.name, float(accel.bytes_per_elem), nmax)
+        wl = self._packed.get(key)
+        if wl is None:
+            wl = self._packed[key] = cm.pack_workload(workload, accel, nmax)
+        return wl
+
+    def _strategy_key(self, req: MapRequest) -> tuple:
+        return (req.workload.name, int(req.batch),
+                budget_bucket(req.budget_bytes, self.budget_quantum),
+                _accel_key(req.accel))
+
+    # -- serving -------------------------------------------------------------
+
+    def serve(self, requests: list[MapRequest]) -> list[MapResponse]:
+        """Solve one arrival tick of requests.
+
+        Strategy-cache hits are answered without device work; misses are
+        deduplicated within the tick (identical condition keys share one
+        lane), coalesced by ``nmax`` bucket, padded to a pow2 request
+        batch, and served in one fused device call per bucket.  Responses
+        keep the request order."""
+        out: list = [None] * len(requests)
+        pending: dict = {}                       # key -> miss record
+        for i, req in enumerate(requests):
+            key = self._strategy_key(req)
+            if key in pending:                   # in-tick duplicate: one lane
+                pending[key][2].append((i, req))
+                self.tick_dedup += 1
+                continue
+            hit = self.strategies.get(key)
+            if hit is not None:
+                strat, lat, peak, speed = hit
+                out[i] = MapResponse(req.workload.name, strat, lat, peak,
+                                     speed, valid=peak <= req.budget_bytes,
+                                     cached=True)
+            else:
+                pending[key] = (key, req, [(i, req)])
+        groups = coalesce(
+            pending.values(),
+            lambda m: nmax_bucket(m[1].workload.n + 1, self.nmax_buckets))
+        for nb, group in groups.items():
+            self._serve_bucket(nb, group, out)
+        self.requests_served += len(requests)
+        return out
+
+    def serve_one(self, request: MapRequest) -> MapResponse:
+        return self.serve([request])[0]
+
+    def _serve_bucket(self, nb: int, group: list, out: list) -> None:
+        """Solve one group of miss records ``(key, req, [out indices])``
+        sharing an ``nmax`` bucket in one fused device call."""
+        C = len(group)
+        Cb = batch_bucket(C)
+        rows = [self._pack(r.workload, r.accel, nb) for _, r, _ in group]
+        accels = [r.accel for _, r, _ in group]
+        batches = [float(r.batch) for _, r, _ in group]
+        budgets = [float(r.budget_bytes) for _, r, _ in group]
+        pad = Cb - C
+        if pad:                                  # clone a real row: vmap
+            rows += rows[:1] * pad               # lanes are independent
+            accels += accels[:1] * pad
+            batches += batches[:1] * pad
+            budgets += budgets[:1] * pad
+            self.rows_padded += pad
+        sig = (nb, Cb)
+        if sig not in self._compiled:
+            self._compiled.add(sig)
+            self.compile_count += 1
+        res = dnnfuser_infer_batch(
+            self.params, self.cfg, cm.stack_workloads(rows),
+            np.asarray(batches, np.float32), np.asarray(budgets, np.float32),
+            accels, repair=self.repair)
+        self.device_calls += 1
+        for lane, (key, req, idxs) in enumerate(group):
+            strat = np.asarray(res["strategy"][lane][: req.workload.n + 1])
+            peak = float(res["peak_mem"][lane])
+            entry = (strat, float(res["latency"][lane]), peak,
+                     float(res["speedup"][lane]))
+            self.strategies.put(key, entry)
+            # duplicates shared the lane, but each keeps its own validity:
+            # the lane solved under the FIRST request's exact budget, and a
+            # reused strategy must never be called valid for a (same-bucket
+            # but tighter) budget it overflows
+            for k, (i, req_i) in enumerate(idxs):
+                valid = (bool(res["valid"][lane]) if k == 0
+                         else peak <= req_i.budget_bytes)
+                out[i] = MapResponse(req_i.workload.name, *entry,
+                                     valid=valid, cached=k > 0)
+
+    # -- warmup & stats ------------------------------------------------------
+
+    def warmup(self, workloads: list, accel: AccelConfig | None = None,
+               *, max_tick: int = 16) -> int:
+        """Materialize every (nmax bucket, batch bucket) program traffic
+        over ``workloads`` can hit, for arrival ticks up to ``max_tick``
+        requests.  Returns the number of programs compiled.  After warmup,
+        serving any mix of these workloads in ticks of <= ``max_tick``
+        requests triggers ZERO new compilations (the churn guard)."""
+        if accel is None:
+            accel = AccelConfig()
+        before = self.compile_count
+        reps: dict[int, object] = {}
+        for w in workloads:
+            reps.setdefault(nmax_bucket(w.n + 1, self.nmax_buckets), w)
+        for nb, w in sorted(reps.items()):
+            for cb in pow2_buckets(max_tick):
+                if (nb, cb) in self._compiled:
+                    continue
+                reqs = [MapRequest(w, 1 + i % 4, (8 + i) * MB, accel)
+                        for i in range(cb)]
+                sink: list = [None] * cb
+                self._serve_bucket(nb, [(self._strategy_key(r), r, [(j, r)])
+                                        for j, r in enumerate(reqs)], sink)
+        return self.compile_count - before
+
+    @property
+    def stats(self) -> dict:
+        """Serving counters (the benchmark's reported schema)."""
+        return {
+            "requests_served": self.requests_served,
+            "device_calls": self.device_calls,
+            "compile_count": self.compile_count,
+            "compiled_shapes": sorted(self._compiled),
+            "rows_padded": self.rows_padded,
+            "tick_dedup": self.tick_dedup,
+            "packed_workloads": len(self._packed),
+            "strategy_hits": self.strategies.hits,
+            "strategy_misses": self.strategies.misses,
+            "strategy_hit_rate": self.strategies.hit_rate,
+        }
