@@ -1,13 +1,36 @@
-"""Kernel-layer benchmark: population cost-model evaluation throughput.
+"""Kernel-layer benchmark: population cost-model evaluation throughput
+under the traced-hardware contract (DESIGN §13).
 
 Three implementations of the paper's search hot loop:
   naive   — per-candidate Python loop (ref_model; the paper's regime),
-  vmapped — one jitted vmap over the population (our G-Sampler's engine),
-  pallas  — the fusion_eval kernel (interpret mode on CPU; on TPU this is
-            the deployable path with the layer table VMEM-resident).
+  vmapped — one jitted vmap over the population (the XLA evaluator),
+  pallas  — the fusion_eval block kernel (interpret mode on CPU; on TPU
+            this is the deployable path with the layer table VMEM-resident),
+plus the production grid form: one ``evaluate_grid`` call over a
+(workload x ACCEL_ZOO x budget) condition block on each backend.
+
+Beyond wall clock, the run records the SEMANTIC gates of §13 and the
+committed ``BENCH_kernel.json`` baseline pins them:
+  - ``zoo_bitwise_match``: the pallas backend must be bit-identical to the
+    XLA evaluator on every zoo accelerator, including the BPE-mismatched
+    ones (pack-time int8 served on a 2-byte datacenter part) — the property
+    the backend-switchable teacher pipeline rests on;
+  - ``sweep_compiles``: sweeping all zoo accelerators at a fixed block
+    shape must reuse ONE compiled program (the accelerator is traced
+    kernel data, not a static argument).
+
+``--check BASELINE.json`` turns the harness into a regression gate in the
+style of ``bench_infer.py``: wall-clock metrics are ratio-gated (machines
+differ; ``--tol``), the semantic gates are hard.
+
+    PYTHONPATH=src python benchmarks/fusion_eval_kernel.py [--quick]
+        [--out BENCH_kernel.json] [--check BASELINE.json] [--tol 4.0]
 """
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
 import time
 
 import jax.numpy as jnp
@@ -15,13 +38,38 @@ import numpy as np
 
 from repro.core import PAPER_ACCEL, cost_model as cm
 from repro.core import ref_model
-from repro.kernels import fusion_eval_population
+from repro.core.accel import ACCEL_ZOO
+from repro.kernels import fusion_eval
 from repro.workloads import resnet18
 
-from . import common as C
+MB = float(2 ** 20)
+
+GATED_METRICS = ("vmapped_us_per_cand", "pallas_us_per_cand",
+                 "grid_pallas_us_per_cand")
 
 
-def run(quick: bool = False):
+def _timeit(fn, reps: int = 5) -> float:
+    fn()                                   # warm the jit cache
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _costout_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, b))
+
+
+def run(quick: bool = False, out: str | None = None) -> list:
+    """Suite entry point for ``benchmarks.run`` (CSV rows only)."""
+    rows, _ = run_report(quick=quick, out=out)
+    return rows
+
+
+def run_report(quick: bool = False, out: str | None = None):
     hw = PAPER_ACCEL
     wl_obj = resnet18()
     wl = cm.pack_workload(wl_obj, hw, nmax=64)
@@ -30,40 +78,162 @@ def run(quick: bool = False):
     pop_n = 512 if quick else 2048
     pop = np.stack([cm.random_strategy(rng, wl_obj.n, 64, 64)
                     for _ in range(pop_n)])
-    budget = 20.0 * C.MB
+    budget = 20.0 * MB
+    popj = jnp.asarray(pop)
 
+    # --- naive python reference (subset, extrapolated) ----------------------
     n_naive = min(pop_n, 64)
     t0 = time.perf_counter()
     for s in pop[:n_naive]:
         ref_model.evaluate_ref(wl_np, s, 64, budget, hw)
     t_naive = (time.perf_counter() - t0) / n_naive * pop_n
 
-    out = cm.evaluate_population(wl, jnp.asarray(pop), 64.0, budget, hw)
-    out.latency.block_until_ready()
-    t0 = time.perf_counter()
-    out = cm.evaluate_population(wl, jnp.asarray(pop), 64.0, budget, hw)
-    out.latency.block_until_ready()
-    t_vmap = time.perf_counter() - t0
+    # --- vmapped XLA evaluator ----------------------------------------------
+    t_vmap = _timeit(lambda: cm.evaluate_population(
+        wl, popj, 64.0, budget, hw).latency.block_until_ready())
 
-    lat, _, _ = fusion_eval_population(pop, wl, batch=64.0, hw=hw)
-    lat.block_until_ready()
-    t0 = time.perf_counter()
-    lat, _, _ = fusion_eval_population(pop, wl, batch=64.0, hw=hw)
-    lat.block_until_ready()
-    t_pl = time.perf_counter() - t0
+    # --- pallas kernel (same CostOut contract) ------------------------------
+    t_pl = _timeit(lambda: fusion_eval.fusion_eval_population(
+        popj, wl, batch=64.0, budget_bytes=budget,
+        hw=hw).latency.block_until_ready())
+
+    # --- §13 semantic gates: zoo-wide bit parity + one-program hw sweep -----
+    cache_size = getattr(fusion_eval._fusion_eval_grid_jit, "_cache_size",
+                         lambda: -1)
+    before = cache_size()
+    zoo_match = True
+    for acc in ACCEL_ZOO.values():                 # same block shape each time
+        got = fusion_eval.fusion_eval_population(
+            popj, wl, batch=64.0, budget_bytes=budget, hw=acc)
+        want = cm.evaluate_population(wl, popj, 64.0, budget, acc)
+        zoo_match &= _costout_equal(got, want)
+    sweep_compiles = cache_size() - before if before >= 0 else -1
+
+    # --- production grid form: one call over (workload x zoo x budget) ------
+    accels = list(ACCEL_ZOO.values())
+    Cn = len(accels)
+    grid_pop = 128 if quick else 512
+    wls = cm.stack_workloads([cm.pack_workload(wl_obj, a, 64)
+                              for a in accels])
+    strats = jnp.asarray(pop[:grid_pop])[None].repeat(Cn, axis=0)
+    batches = jnp.full((Cn,), 64.0, jnp.float32)
+    budgets = jnp.asarray(np.linspace(12, 48, Cn) * MB, np.float32)
+    t_grid_x = _timeit(lambda: cm.evaluate_grid(
+        wls, strats, batches, budgets, accels,
+        evaluator="xla").latency.block_until_ready())
+    t_grid_p = _timeit(lambda: cm.evaluate_grid(
+        wls, strats, batches, budgets, accels,
+        evaluator="pallas").latency.block_until_ready())
+    n_grid = Cn * grid_pop
 
     print("\n=== fusion_eval kernel: population evaluation "
-          f"(pop={pop_n}, resnet18)")
+          f"(pop={pop_n}, resnet18, traced hw)")
     print(f"naive python : {t_naive*1e3:9.1f} ms  (1.0x)")
     print(f"vmapped jit  : {t_vmap*1e3:9.1f} ms  ({t_naive/t_vmap:7.0f}x)")
     print(f"pallas(intrp): {t_pl*1e3:9.1f} ms  (interpret-mode CPU; "
           "TPU path keeps the layer table in VMEM)")
-    return [("fusion_eval/naive", t_naive / pop_n * 1e6, "per_candidate"),
-            ("fusion_eval/vmapped", t_vmap / pop_n * 1e6,
+    print(f"grid [{Cn}x{grid_pop}] xla {t_grid_x*1e3:7.1f} ms | pallas "
+          f"{t_grid_p*1e3:7.1f} ms")
+    print(f"zoo bit parity: {'OK' if zoo_match else 'BROKEN'} | hw-sweep "
+          f"compiles: {sweep_compiles}")
+
+    report = {
+        "bench": "kernel",
+        "device": __import__("jax").devices()[0].platform,
+        "quick": quick,
+        "results": {
+            "workload": wl_obj.name,
+            "pop": pop_n,
+            "naive_us_per_cand": t_naive / pop_n * 1e6,
+            "vmapped_us_per_cand": t_vmap / pop_n * 1e6,
+            "pallas_us_per_cand": t_pl / pop_n * 1e6,
+            "grid_conditions": Cn,
+            "grid_pop": grid_pop,
+            "grid_xla_us_per_cand": t_grid_x / n_grid * 1e6,
+            "grid_pallas_us_per_cand": t_grid_p / n_grid * 1e6,
+            "zoo_bitwise_match": bool(zoo_match),
+            "sweep_compiles": int(sweep_compiles),
+        },
+    }
+    path = pathlib.Path(out or "artifacts/bench/BENCH_kernel_last.json")
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {path}")
+
+    r = report["results"]
+    return [("fusion_eval/naive", r["naive_us_per_cand"], "per_candidate"),
+            ("fusion_eval/vmapped", r["vmapped_us_per_cand"],
              f"speedup={t_naive/t_vmap:.0f}x"),
-            ("fusion_eval/pallas_interpret", t_pl / pop_n * 1e6,
-             "cpu_interpret")]
+            ("fusion_eval/pallas_interpret", r["pallas_us_per_cand"],
+             f"zoo_bitwise={zoo_match}"),
+            ("fusion_eval/grid_pallas", r["grid_pallas_us_per_cand"],
+             f"compiles={sweep_compiles}")], report
+
+
+def check_regression(report: dict, baseline_path: str, tol: float) -> list:
+    """bench_infer-style gate: wall metrics ratio-gated by ``tol``; the §13
+    semantic fields (bit parity, one-program hw sweep) are hard gates."""
+    base = json.loads(pathlib.Path(baseline_path).read_text())
+    if base.get("quick") != report.get("quick"):
+        return [f"baseline {baseline_path} was written with "
+                f"quick={base.get('quick')} but this run used "
+                f"quick={report.get('quick')}; regenerate the baseline in "
+                f"the same mode"]
+    ref, new = base.get("results", {}), report["results"]
+    failures, compared = [], 0
+    for metric in GATED_METRICS:
+        if metric not in ref:
+            continue
+        compared += 1
+        if new[metric] > ref[metric] * tol:
+            failures.append(f"{metric}: {new[metric]:.2f} us > {tol:.1f}x "
+                            f"baseline {ref[metric]:.2f} us")
+    if not new.get("zoo_bitwise_match", False):
+        failures.append("zoo_bitwise_match is False — the pallas evaluator "
+                        "diverged from the XLA cost model (DESIGN §13)")
+    if "sweep_compiles" in ref and ref["sweep_compiles"] >= 0:
+        if new["sweep_compiles"] < 0:
+            # a hard gate that cannot measure must not go silently green
+            failures.append("sweep_compiles could not be measured (jit "
+                            "cache introspection unavailable) while the "
+                            "baseline pins it — re-point the probe or "
+                            "regenerate the baseline")
+        elif new["sweep_compiles"] > max(ref["sweep_compiles"], 0):
+            failures.append(f"hw sweep compiled {new['sweep_compiles']} "
+                            f"programs (baseline {ref['sweep_compiles']}) — "
+                            f"the accelerator went back to being a static "
+                            f"argument")
+    if compared == 0:
+        failures.append(f"no comparable metrics between this run and "
+                        f"{baseline_path} — regenerate the baseline")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller population (CI smoke)")
+    ap.add_argument("--out", default="BENCH_kernel.json")
+    ap.add_argument("--check", metavar="BASELINE",
+                    help="fail (exit 1) on perf regression vs --tol x this "
+                         "baseline, or on any §13 semantic-gate break")
+    ap.add_argument("--tol", type=float, default=4.0,
+                    help="allowed wall-clock ratio vs baseline (default 4)")
+    args = ap.parse_args()
+    out = args.out
+    if args.check and pathlib.Path(out).resolve() == \
+            pathlib.Path(args.check).resolve():
+        out = "artifacts/bench/BENCH_kernel_check.json"
+    _, report = run_report(quick=args.quick, out=out)
+    if args.check:
+        failures = check_regression(report, args.check, args.tol)
+        if failures:
+            print("KERNEL GATE FAILED vs", args.check)
+            for f in failures:
+                print("  ", f)
+            raise SystemExit(1)
+        print(f"kernel gate OK (tol {args.tol}x vs {args.check})")
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -15,7 +15,9 @@ from .cost_model import (SYNC, CostOut, evaluate, evaluate_population,
                          PrefixConsts, PrefixCarry, prefix_consts,
                          prefix_init, prefix_step, prefix_out,
                          prefix_probe_peak, prefix_scan, evaluate_grid,
-                         evaluate_grid_stats, baseline_grid)
+                         evaluate_grid_stats, baseline_grid,
+                         finalize_groups, default_evaluator,
+                         set_default_evaluator)
 from .env import (FusionEnv, STATE_DIM, encode_action, decode_action,
                   encode_action_jnp, decode_action_jnp, EnvConsts, env_make,
                   env_reset, env_observe, env_step, env_final)
@@ -60,7 +62,9 @@ __all__ = [
     "prefix_trace", "pack_workload", "PrefixConsts", "PrefixCarry",
     "prefix_consts", "prefix_init", "prefix_step", "prefix_out",
     "prefix_probe_peak", "prefix_scan", "stack_workloads", "evaluate_grid",
-    "evaluate_grid_stats", "baseline_grid", "FusionEnv", "STATE_DIM",
+    "evaluate_grid_stats", "baseline_grid", "finalize_groups",
+    "default_evaluator", "set_default_evaluator",
+    "FusionEnv", "STATE_DIM",
     "encode_action",
     "decode_action", "encode_action_jnp", "decode_action_jnp", "EnvConsts",
     "env_make", "env_reset", "env_observe", "env_step", "env_final",

@@ -12,6 +12,11 @@ on-chip time plus per-wave pipeline and per-group sync overheads.
 Everything is fixed-shape ``jnp`` so a whole GA population (and a batch of
 memory conditions) evaluates in a single jitted/vmapped call — this is the
 search hot loop the Pallas kernel ``kernels/fusion_eval`` also implements.
+The population/grid entry points dispatch between the two backends via
+their ``evaluator`` kwarg ("xla" | "pallas", DESIGN.md §13); both funnel
+their per-group decompositions through :func:`finalize_groups`, so on the
+CPU container (interpret mode) the backends are bit-identical and the
+G-Sampler teacher pipeline emits the same corpus on either.
 
 The accelerator is a CONDITION, not a compile-time constant (DESIGN.md
 §11): every entry point takes ``hw`` as either a host ``AccelConfig`` or a
@@ -41,10 +46,46 @@ __all__ = ["SYNC", "CostOut", "evaluate", "evaluate_population",
            "pack_workload", "stack_workloads", "PrefixConsts", "PrefixCarry",
            "prefix_consts", "prefix_init", "prefix_step", "prefix_out",
            "prefix_probe_peak", "prefix_scan", "evaluate_grid",
-           "evaluate_grid_stats", "baseline_grid"]
+           "evaluate_grid_stats", "baseline_grid", "finalize_groups",
+           "default_evaluator", "set_default_evaluator"]
 
 SYNC = -1  # strategy sentinel: flush activation off-chip after this layer
 _UTIL_MIN = 1.0 / 4096.0
+
+# ---------------------------------------------------------------------------
+# Evaluator-backend dispatch (DESIGN.md §13).
+#
+# The population/grid evaluators have two interchangeable backends: "xla"
+# (the vmapped jnp path below) and "pallas" (``kernels.fusion_eval``, the
+# block kernel; interpret mode on CPU).  Both share ``finalize_groups`` and
+# are bit-identical on the CPU container, so search/teacher pipelines may
+# flip backends without changing a single emitted corpus byte.  ``evaluator``
+# kwargs accept "xla" | "pallas" | None (None = the module default).
+# ---------------------------------------------------------------------------
+
+_EVALUATOR_BACKENDS = ("xla", "pallas")
+_DEFAULT_EVALUATOR = "xla"
+
+
+def default_evaluator() -> str:
+    """The backend used when an entry point's ``evaluator=None``."""
+    return _DEFAULT_EVALUATOR
+
+
+def set_default_evaluator(name: str) -> str:
+    """Set the process-wide default backend; returns the previous one."""
+    global _DEFAULT_EVALUATOR
+    prev = _DEFAULT_EVALUATOR
+    _DEFAULT_EVALUATOR = _resolve_evaluator(name)
+    return prev
+
+
+def _resolve_evaluator(evaluator: str | None) -> str:
+    ev = _DEFAULT_EVALUATOR if evaluator is None else evaluator
+    if ev not in _EVALUATOR_BACKENDS:
+        raise ValueError(f"evaluator must be one of {_EVALUATOR_BACKENDS}, "
+                         f"got {ev!r}")
+    return ev
 
 
 class CostOut(NamedTuple):
@@ -166,8 +207,6 @@ def _evaluate_full(wl: dict, strategy: jax.Array, batch: jax.Array,
     mem_i = jnp.where(fused, m_fused, jnp.minimum(m_fused, hw.stream_buf_bytes))
     M_g = jax.ops.segment_sum(mem_i * fmask, gid, num_segments=nseg,
                               indices_are_sorted=True)
-    nonempty = glen > 0.0
-    peak_mem = jnp.max(jnp.where(nonempty, M_g, 0.0))
 
     # --- off-chip traffic ---------------------------------------------------
     # Weights are re-fetched once per micro-batch wave (they are not held in
@@ -186,17 +225,38 @@ def _evaluate_full(wl: dict, strategy: jax.Array, batch: jax.Array,
     o_i = B * (A_prev + A) + W * waves
     O_g = jax.ops.segment_sum(o_i * fmask, gid, num_segments=nseg,
                               indices_are_sorted=True)
-    fill_g = (jax.ops.segment_sum(waves * fmask, gid, num_segments=nseg,
-                                  indices_are_sorted=True) * hw.t_pass
-              + nonempty.astype(jnp.float32) * hw.t_sync)
+    wave_g = jax.ops.segment_sum(waves * fmask, gid, num_segments=nseg,
+                                 indices_are_sorted=True)
 
+    out = finalize_groups(C_g, T_g, O_g, M_g, wave_g, glen,
+                          budget_bytes, hw)
+    return out, gid, M_g
+
+
+def finalize_groups(C_g, T_g, O_g, M_g, wave_g, glen, budget_bytes,
+                    hw) -> CostOut:
+    """Per-group decomposition -> CostOut (the shared reduction, DESIGN §13).
+
+    Inputs are the per-group component sums over the trailing group axis —
+    compute seconds, off-chip bytes, on-chip bytes, staged-act bytes,
+    micro-batch waves and member counts — exactly what the sorted
+    segment-sums above and the Pallas ``kernels.fusion_eval`` block kernel
+    both accumulate (in the same position order).  BOTH evaluator backends
+    funnel through this function, so the roofline max and the latency /
+    traffic / peak reductions lower identically — the keystone of the
+    backends' bit-exact equivalence.  ``hw`` leaves may carry broadcast
+    batch axes ([C, 1, 1] for grid blocks)."""
+    hw = as_hw(hw)
+    nonempty = glen > 0.0
+    peak_mem = jnp.max(jnp.where(nonempty, M_g, 0.0), axis=-1)
+    fill_g = wave_g * hw.t_pass + nonempty.astype(jnp.float32) * hw.t_sync
     L_g = jnp.maximum(jnp.maximum(C_g, T_g / hw.bw_offchip),
                       O_g / hw.bw_onchip) + fill_g
-    latency = jnp.sum(L_g)
-    traffic = jnp.sum(T_g)
-    n_groups = jnp.sum(nonempty.astype(jnp.int32))
+    latency = jnp.sum(L_g, axis=-1)
+    traffic = jnp.sum(T_g, axis=-1)
+    n_groups = jnp.sum(nonempty.astype(jnp.int32), axis=-1)
     valid = peak_mem <= jnp.asarray(budget_bytes, jnp.float32)
-    return CostOut(latency, peak_mem, traffic, valid, n_groups), gid, M_g
+    return CostOut(latency, peak_mem, traffic, valid, n_groups)
 
 
 @functools.partial(jax.jit, static_argnames=("nseg",))
@@ -249,8 +309,16 @@ def _population_jit(wl, strategies, batch, budget_bytes, hw):
 
 
 def evaluate_population(wl: dict, strategies: jax.Array, batch: jax.Array,
-                        budget_bytes: jax.Array, hw) -> CostOut:
-    """Vectorized cost of a population ``[pop, P]`` of strategies."""
+                        budget_bytes: jax.Array, hw, *,
+                        evaluator: str | None = None) -> CostOut:
+    """Vectorized cost of a population ``[pop, P]`` of strategies.
+
+    ``evaluator`` selects the backend ("xla" | "pallas" | None = the
+    module default, DESIGN §13); both are bit-identical on CPU."""
+    if _resolve_evaluator(evaluator) == "pallas":
+        from ..kernels.fusion_eval import fusion_eval_population
+        return fusion_eval_population(strategies, wl, batch=batch,
+                                      budget_bytes=budget_bytes, hw=hw)
     return _population_jit(wl, strategies, batch, budget_bytes, as_hw(hw))
 
 
@@ -262,7 +330,7 @@ def _population_stats_jit(wl, strategies, batch, budget_bytes, hw):
 
 def evaluate_population_stats(wl: dict, strategies: jax.Array,
                               batch: jax.Array, budget_bytes: jax.Array,
-                              hw):
+                              hw, *, evaluator: str | None = None):
     """Like :func:`evaluate_population` but also returns the per-strategy
     group decomposition: ``(CostOut [pop], gid [pop, P], M_g [pop, P])``.
 
@@ -270,6 +338,10 @@ def evaluate_population_stats(wl: dict, strategies: jax.Array,
     and ``M_g[p, g]`` that group's staged-activation peak — everything a
     constraint-repair operator needs to find the worst group and its span
     in one device call (DESIGN.md §3)."""
+    if _resolve_evaluator(evaluator) == "pallas":
+        from ..kernels.fusion_eval import fusion_eval_population_stats
+        return fusion_eval_population_stats(strategies, wl, batch=batch,
+                                            budget_bytes=budget_bytes, hw=hw)
     return _population_stats_jit(wl, strategies, batch, budget_bytes,
                                  as_hw(hw))
 
@@ -295,11 +367,19 @@ def _grid_jit(wls, strategies, batches, budgets, hw):
 
 
 def evaluate_grid(wls: dict, strategies: jax.Array, batches: jax.Array,
-                  budgets: jax.Array, hw) -> CostOut:
+                  budgets: jax.Array, hw, *,
+                  evaluator: str | None = None) -> CostOut:
     """CostOut [C, POP] of per-condition populations ``strategies``
     [C, POP, P] over stacked workloads [C, ...], per-condition ``batches``
     / ``budgets`` [C] and per-condition hardware (anything
-    ``accel.stack_hw`` accepts: one config, a list, or stacked vectors)."""
+    ``accel.stack_hw`` accepts: one config, a list, or stacked vectors).
+
+    ``evaluator`` selects the backend (DESIGN §13): "xla" vmaps the jnp
+    evaluator, "pallas" runs the ``kernels.fusion_eval`` block kernel
+    (interpret mode on CPU) — bit-identical outputs either way."""
+    if _resolve_evaluator(evaluator) == "pallas":
+        from ..kernels.fusion_eval import fusion_eval_grid
+        return fusion_eval_grid(wls, strategies, batches, budgets, hw)
     return _grid_jit(wls, strategies, batches, budgets,
                      stack_hw(hw, strategies.shape[0]))
 
@@ -313,11 +393,16 @@ def _grid_stats_jit(wls, strategies, batches, budgets, hw):
 
 
 def evaluate_grid_stats(wls: dict, strategies: jax.Array, batches: jax.Array,
-                        budgets: jax.Array, hw):
+                        budgets: jax.Array, hw, *,
+                        evaluator: str | None = None):
     """Grid counterpart of :func:`evaluate_population_stats`:
     ``(CostOut [C, POP], gid [C, POP, P], M_g [C, POP, P])`` — the
     constraint-repair operator's split/shrink targets for every child of
-    every condition in one call."""
+    every condition in one call.  ``evaluator`` as in
+    :func:`evaluate_grid` (DESIGN §13)."""
+    if _resolve_evaluator(evaluator) == "pallas":
+        from ..kernels.fusion_eval import fusion_eval_grid_stats
+        return fusion_eval_grid_stats(wls, strategies, batches, budgets, hw)
     return _grid_stats_jit(wls, strategies, batches, budgets,
                            stack_hw(hw, strategies.shape[0]))
 

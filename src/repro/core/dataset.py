@@ -228,6 +228,7 @@ def generate_teacher_corpus(workloads: list, hw, *,
                             max_steps: int = 64, top_k: int = 8,
                             ga_cfg: GSamplerConfig | None = None,
                             seed: int = 0, augment_jitter: int = 2,
+                            evaluator: str | None = None,
                             ) -> TrajectoryDataset:
     """Device-grid teacher pipeline: the scalable twin of
     :func:`collect_teacher_data`.
@@ -240,7 +241,9 @@ def generate_teacher_corpus(workloads: list, hw, *,
     duplicates.  Each trajectory stores its accelerator's normalized
     feature vector (``TrajectoryDataset.hw``), the condition the hw-aware
     mapper trains on.  Deterministic: a fixed ``seed`` reproduces the
-    corpus bit-for-bit."""
+    corpus bit-for-bit — on EITHER fitness backend (``evaluator`` = "xla"
+    | "pallas" | None, forwarded to the grid GA): the backends are
+    bit-identical (DESIGN §13), so the corpus does not depend on it."""
     accels = list(hw) if isinstance(hw, (list, tuple)) else [hw]
     if any(not isinstance(a, AccelConfig) for a in accels):
         raise TypeError("generate_teacher_corpus needs AccelConfig presets "
@@ -259,7 +262,7 @@ def generate_teacher_corpus(workloads: list, hw, *,
         [cm.pack_workload(w, a, max_steps) for w, a, _ in conds])
     res = gsampler_search_grid(wl_list, hw_list, batches, budgets,
                                nmax=max_steps, cfg=cfg, top_k=top_k,
-                               packed=wls)
+                               packed=wls, evaluator=evaluator)
     rng = np.random.default_rng(seed)
     cand = _augment_candidates(rng, res.strategies, ns, batch, top_k,
                                augment_jitter)

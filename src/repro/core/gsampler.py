@@ -241,7 +241,8 @@ def _fitness_jnp(latency, peak, budget):
     return jnp.where(over > 0.0, -1e3 * (1.0 + over) - latency, -latency)
 
 
-def _naive_uniform_grid(wls, batches, budgets, hw, iters: int = 18):
+def _naive_uniform_grid(wls, batches, budgets, hw, iters: int = 18,
+                        evaluator: str = "xla"):
     """Device twin of :func:`naive_uniform_mb`: per-condition binary search
     for the largest uniform micro-batch that stages everything on-chip."""
     C, P = wls["A"].shape
@@ -262,7 +263,8 @@ def _naive_uniform_grid(wls, batches, budgets, hw, iters: int = 18):
         done = lo > hi
         mid = jnp.maximum((lo + hi) // 2, 1)
         s = uniform(mid)
-        out = cm.evaluate_grid(wls, s[:, None, :], batches, budgets, hw)
+        out = cm.evaluate_grid(wls, s[:, None, :], batches, budgets, hw,
+                               evaluator=evaluator)
         ok = out.valid[:, 0] & ~done
         best = jnp.where(ok[:, None], s, best)
         lo = jnp.where(done, lo, jnp.where(ok, mid + 1, lo))
@@ -299,7 +301,8 @@ def _mutate_grid(key, child, valid_pos, n, B, cfg: GSamplerConfig):
     return child
 
 
-def _repair_grid(key, wls, brood, batches, budgets, hw, cfg: GSamplerConfig):
+def _repair_grid(key, wls, brood, batches, budgets, hw, cfg: GSamplerConfig,
+                 evaluator: str = "xla"):
     """Constraint repair for every condition's brood at once: while a child
     is over budget, split its worst fused group or shrink that group's
     largest staged micro-batch — the same operator as
@@ -318,7 +321,8 @@ def _repair_grid(key, wls, brood, batches, budgets, hw, cfg: GSamplerConfig):
     def round_fn(carry):
         s, key, i, _ = carry
         key, kc = jax.random.split(key)
-        out, gid, M_g = cm.evaluate_grid_stats(wls, s, batches, budgets, hw)
+        out, gid, M_g = cm.evaluate_grid_stats(wls, s, batches, budgets, hw,
+                                               evaluator=evaluator)
         invalid = ~out.valid                                      # [C, K]
         worst = jnp.argmax(M_g, axis=-1)                          # [C, K]
         members = (gid == worst[..., None]) & mask[:, None, :]    # [C, K, P]
@@ -346,11 +350,15 @@ def _repair_grid(key, wls, brood, batches, budgets, hw, cfg: GSamplerConfig):
     return s
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "top_k"))
+@functools.partial(jax.jit, static_argnames=("cfg", "top_k", "evaluator"))
 def _ga_grid(key, wls, batches, budgets, hw,
-             cfg: GSamplerConfig, top_k: int):
+             cfg: GSamplerConfig, top_k: int, evaluator: str = "xla"):
     """The whole grid GA as one device program.  Returns stacked elites
-    [C, top_k, P] with exact costs, plus the best-valid-speedup history."""
+    [C, top_k, P] with exact costs, plus the best-valid-speedup history.
+
+    ``evaluator`` selects the fitness/repair backend (DESIGN §13); the
+    backends are bit-identical, so the evolved populations — and therefore
+    the emitted corpus — do not depend on the choice."""
     C, P = wls["A"].shape
     POP, E = cfg.population, cfg.elite
     n = wls["n"]
@@ -368,10 +376,12 @@ def _ga_grid(key, wls, batches, budgets, hw,
     allsync = jnp.where(pos[None, :] == 0,
                         B[:, None].astype(jnp.int32), cm.SYNC)
     pop = pop.at[:, 0, :].set(allsync)
-    pop = pop.at[:, 1, :].set(_naive_uniform_grid(wls, batches, budgets, hw))
+    pop = pop.at[:, 1, :].set(_naive_uniform_grid(wls, batches, budgets, hw,
+                                                  evaluator=evaluator))
 
     def gen(pop, key):
-        out = cm.evaluate_grid(wls, pop, batches, budgets, hw)    # [C, POP]
+        out = cm.evaluate_grid(wls, pop, batches, budgets, hw,
+                               evaluator=evaluator)               # [C, POP]
         fit = _fitness_jnp(out.latency, out.peak_mem, budgets[:, None])
         order = jnp.argsort(-fit, axis=1)
         elites = jnp.take_along_axis(pop, order[:, :E, None], axis=1)
@@ -387,7 +397,8 @@ def _ga_grid(key, wls, batches, budgets, hw,
                             * n[:, None]).astype(jnp.int32)
         child = jnp.where(pos[None, None, :] < cut[..., None], pa, pb)
         child = _mutate_grid(km, child, valid_pos, n, B, cfg)
-        brood = _repair_grid(kr, wls, child, batches, budgets, hw, cfg)
+        brood = _repair_grid(kr, wls, child, batches, budgets, hw, cfg,
+                             evaluator=evaluator)
         new_pop = jnp.concatenate([elites, brood], axis=1)
         sp = base[:, None] / jnp.maximum(out.latency, 1e-12)
         best = jnp.max(jnp.where(out.valid, sp, 0.0), axis=1)
@@ -397,7 +408,8 @@ def _ga_grid(key, wls, batches, budgets, hw,
     pop, history = jax.lax.scan(gen, pop,
                                 jax.random.split(k_scan, cfg.generations))
 
-    out = cm.evaluate_grid(wls, pop, batches, budgets, hw)
+    out = cm.evaluate_grid(wls, pop, batches, budgets, hw,
+                           evaluator=evaluator)
     fit = _fitness_jnp(out.latency, out.peak_mem, budgets[:, None])
     order = jnp.argsort(-fit, axis=1)[:, :top_k]
     take = lambda x: jnp.take_along_axis(x, order, axis=1)
@@ -412,7 +424,8 @@ def _ga_grid(key, wls, batches, budgets, hw,
 def gsampler_search_grid(workloads: list, hw, batches,
                          budgets_bytes, *, nmax: int = 64,
                          cfg: GSamplerConfig = GSamplerConfig(),
-                         top_k: int = 8, packed=None) -> GridTeacherResult:
+                         top_k: int = 8, packed=None,
+                         evaluator: str | None = None) -> GridTeacherResult:
     """Search every (workload[c], accel[c], batches[c], budgets_bytes[c])
     condition in one fused device program (the teacher-corpus front door,
     DESIGN §10/§11).
@@ -426,7 +439,10 @@ def gsampler_search_grid(workloads: list, hw, batches,
     for the same grid (the corpus pipeline reuses one packing for search
     and decoration); when per-condition accelerators differ, each condition
     must be packed with its own accelerator.  Deterministic for a fixed
-    ``cfg.seed`` — the corpus-generation determinism tests rely on it."""
+    ``cfg.seed`` — the corpus-generation determinism tests rely on it —
+    and INDEPENDENT of ``evaluator`` ("xla" | "pallas" | None = the
+    ``cost_model`` default): the two fitness backends are bit-identical
+    (DESIGN §13), so the same seed yields the same result either way."""
     assert len(workloads) == len(batches) == len(budgets_bytes)
     t0 = time.perf_counter()
     C = len(workloads)
@@ -450,7 +466,7 @@ def gsampler_search_grid(workloads: list, hw, batches,
     batches = jnp.asarray(np.asarray(batches, np.float32))
     budgets = jnp.asarray(np.asarray(budgets_bytes, np.float32))
     out = _ga_grid(jax.random.PRNGKey(cfg.seed), wls, batches, budgets,
-                   hwv, cfg, top_k)
+                   hwv, cfg, top_k, cm._resolve_evaluator(evaluator))
     out = {k: np.asarray(v) for k, v in out.items()}
     # upper bound: the repair while_loop exits early once a brood is valid
     n_evals = C * cfg.population * (cfg.generations

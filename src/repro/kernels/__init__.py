@@ -4,17 +4,22 @@
    causal/window/GQA) — DESIGN §7
  - flash_decode:    split-K decode over long KV caches
  - rwkv6_scan:      chunked data-dependent-decay WKV6 recurrence
- - fusion_eval:     the paper's hot loop — population fusion-strategy
-                    evaluation with the layer table VMEM-resident
+ - fusion_eval:     the paper's hot loop — fusion-strategy evaluation over
+   a (workload x accel x budget) condition grid with the layer table
+   VMEM-resident; the production ``evaluator="pallas"`` backend of
+   ``cost_model.evaluate_grid`` — DESIGN §13
 
 Structure per kernel: ``<name>.py`` (pl.pallas_call + BlockSpec tiling),
 ``ops.py`` (jit'd public wrappers), ``ref.py`` (pure-jnp oracles).  On this
 CPU container kernels execute with ``interpret=True``; on TPU the models
-select them via ``attn_impl=pallas`` / the rwkv impl switch.
+select them via ``attn_impl=pallas`` / the rwkv impl switch and the cost
+model via its ``evaluator`` kwarg.
 """
 from . import ops, ref
 from .ops import (flash_attention, flash_decode, wkv6,
-                  fusion_eval_population)
+                  fusion_eval_population, fusion_eval_population_stats,
+                  fusion_eval_grid, fusion_eval_grid_stats)
 
 __all__ = ["ops", "ref", "flash_attention", "flash_decode", "wkv6",
-           "fusion_eval_population"]
+           "fusion_eval_population", "fusion_eval_population_stats",
+           "fusion_eval_grid", "fusion_eval_grid_stats"]

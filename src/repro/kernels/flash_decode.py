@@ -48,13 +48,23 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     B, _, Hq, hd = q.shape
     T, Hkv = k.shape[1], k.shape[2]
     G = Hq // Hkv
-    ns = T // bk
+    # clamp the split size to the cache and pad the cache to a whole number
+    # of splits: a bk that does not divide T must never silently drop tail
+    # keys (serving caches are 3*max_steps, rarely a multiple of 512).  The
+    # padded tail is masked by the ids < kv_len test in the kernel.
+    bk = max(1, min(bk, T))
+    pad = (-T) % bk
+    ns = (T + pad) // bk
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
 
     qt = q.reshape(B, Hq, 1, hd)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
+    if pad:
+        zpad = ((0, 0), (0, 0), (0, pad), (0, 0))
+        kt = jnp.pad(kt, zpad)
+        vt = jnp.pad(vt, zpad)
     kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(1), (1,))
 
     o, m, l = pl.pallas_call(

@@ -1,17 +1,35 @@
 """Population fusion-strategy evaluation (TPU Pallas) — the paper's search
-hot loop as a kernel.
+hot loop as a kernel, in production grid form (DESIGN §7, §13).
 
-G-Sampler evaluates 2k strategies per search and a production mapper
-serves many concurrent (workload, budget) queries; this kernel evaluates a
-BLOCK of candidate strategies per grid step entirely in VMEM.  The layer
-table (A/W/F/OE/UC/SKIP, padded to P positions) is resident in VMEM and
-shared by every candidate; per-candidate group accumulators live in
-registers/VPU lanes, so the sweep over the P chain positions is a
-sequential fori with [bp]-wide vector ops — no HBM traffic beyond one read
-of the strategy block and one write of the three result vectors.
+G-Sampler evaluates thousands of strategies per generation across a whole
+(workload x accelerator x budget) condition grid; this kernel evaluates a
+``[bp, P]`` BLOCK of candidate strategies per grid step entirely in VMEM.
+The per-condition layer table (A/W/F/OE/UC/SKIP, padded to P positions) is
+resident in VMEM and shared by every candidate in the block; per-candidate
+group accumulators live in registers/VPU lanes, so the sweep over the P
+chain positions is a statically unrolled loop of [bp]-wide vector ops — no
+HBM traffic beyond one read of the strategy block and one write of the
+per-group result matrices.
 
-Semantics are exactly ``core.cost_model.evaluate`` (same group/streaming/
-weight-wave rules); the oracle used in tests is ``core.ref_model``.
+THE ACCELERATOR IS TRACED DATA, not a compile-time constant: the hardware
+descriptor enters as a per-condition ``[C, HW_FEATURE_DIM]`` row (any form
+``accel.stack_hw`` accepts) and the pack-time ``wl["BPE"]`` -> serving
+``bytes_per_elem`` A/W rescale happens IN-KERNEL — exactly the
+``cost_model._scaled_AW`` contract of DESIGN §11, an IEEE identity when the
+datatypes match.  Sweeping the whole ``ACCEL_ZOO`` therefore reuses ONE
+compiled program per block shape (zero recompiles across accelerators).
+
+BIT-EXACTNESS CONTRACT (DESIGN §13): the kernel emits the per-group
+decomposition (compute / traffic / on-chip / memory / waves / length
+vectors plus per-position group ids) accumulated in the same position order
+as ``cost_model._evaluate_full``'s sorted segment-sums, and the CostOut
+roofline/reduction step runs OUTSIDE the kernel through
+``cost_model.finalize_groups`` — the same jnp expressions the XLA evaluator
+lowers.  On the CPU container (interpret mode, the ``kernels/ops.py``
+selection contract) the two backends are bit-identical, which is what lets
+``gsampler_search_grid`` produce the same teacher corpus on either
+``evaluator`` backend.  The oracles are ``kernels/ref.fusion_eval_ref`` /
+``fusion_eval_grid_ref`` and the loop-based ``core.ref_model``.
 """
 from __future__ import annotations
 
@@ -21,151 +39,275 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..core.accel import AccelConfig
+from ..core import cost_model as _cm
+from ..core.accel import HW_FEATURE_DIM, hw_array, stack_hw
 
-__all__ = ["fusion_eval_population"]
+__all__ = ["fusion_eval_population", "fusion_eval_population_stats",
+           "fusion_eval_grid", "fusion_eval_grid_stats"]
 
 _UTIL_MIN = 1.0 / 4096.0
+# HW_FIELDS slots the kernel reads from its [C, HW_FEATURE_DIM] hw row
+_NPE, _LANES, _FREQ = 0, 1, 2
+_BPE_SLOT, _STREAM = 6, 9
 
 
 def _fe_kernel(strat_ref, A_ref, W_ref, F_ref, OE_ref, UC_ref, SKIP_ref,
-               lat_ref, peak_ref, traf_ref, *, P: int, n: int, batch: float,
-               hw: AccelConfig):
-    bp = strat_ref.shape[0]
-    B = jnp.float32(batch)
-    strat = strat_ref[...].astype(jnp.float32)           # [bp, P]
+               n_ref, batch_ref, bpe_ref, hw_ref,
+               Cg_ref, Tg_ref, Og_ref, Mg_ref, Wg_ref, glen_ref, gid_ref,
+               *, P: int):
+    """One [bp, P] strategy block of one condition row.
 
-    A = A_ref[...][0]                                     # [P]
-    W = W_ref[...][0]
+    Emits the group decomposition (per-group component sums indexed by
+    group id, plus per-position group ids); latency/peak/validity are
+    assembled outside by ``cost_model.finalize_groups`` so both evaluator
+    backends share one reduction lowering (DESIGN §13)."""
+    bp = strat_ref.shape[1]
+    strat = strat_ref[...][0].astype(jnp.float32)         # [bp, P]
+    n = n_ref[...][0]
+    B = batch_ref[...][0]
+    hw = hw_ref[...][0]                                   # [HW_FEATURE_DIM]
+    lanes = hw[_NPE] * hw[_LANES]
+    peak_macs = lanes * hw[_FREQ]
+    stream_buf = hw[_STREAM]
+
+    # pack-time -> serving-datatype rescale, in-kernel (DESIGN §11/§13);
+    # the multiplier is exactly 1.0 when the datatypes match
+    scale = hw[_BPE_SLOT] / bpe_ref[...][0]
+    A = A_ref[...][0] * scale                             # [P]
+    W = W_ref[...][0] * scale
     F = F_ref[...][0]
-    OE = OE_ref[...][0]
+    OEv = OE_ref[...][0]
     UC = UC_ref[...][0]
     SKIP = SKIP_ref[...][0]
 
-    peak_macs = jnp.float32(hw.npe * hw.pe_lanes * hw.freq_hz)
-
     def util(mbe, oe, uc):
-        return jnp.clip(mbe * oe / (hw.npe * hw.pe_lanes), _UTIL_MIN, uc)
+        return jnp.clip(mbe * oe / lanes, _UTIL_MIN, uc)
 
     zeros = jnp.zeros((bp,), jnp.float32)
+    zmat = jnp.zeros((bp, P), jnp.float32)
+    pos = jnp.arange(P)
 
-    def flush(st):
-        (lat, peak, traf, g_comp, g_traf, g_on, g_mem, g_waves, g_len,
-         alt) = st
-        use_alt = g_len == 1.0
-        comp = jnp.where(use_alt, alt["comp"], g_comp)
-        trf = jnp.where(use_alt, alt["traf"], g_traf)
-        onc = jnp.where(use_alt, alt["on"], g_on)
-        mem = jnp.where(use_alt, alt["mem"], g_mem)
-        wav = jnp.where(use_alt, 1.0, g_waves)
-        lg = jnp.maximum(jnp.maximum(comp, trf / hw.bw_offchip),
-                         onc / hw.bw_onchip) + wav * hw.t_pass + hw.t_sync
-        nonempty = g_len > 0.0
-        lat = lat + jnp.where(nonempty, lg, 0.0)
-        peak = jnp.maximum(peak, jnp.where(nonempty, mem, 0.0))
-        traf = traf + jnp.where(nonempty, trf, 0.0)
-        return lat, peak, traf
+    # per-group output matrices (group id -> component sums)
+    C_g, T_g, O_g, M_g, wave_g, glen = (zmat,) * 6
+    gid_cols = [jnp.zeros((bp,), jnp.int32)]              # position 0: gid 0
+    # open-group accumulators + strategy-prefix carry
+    g_comp = g_traf = g_on = g_mem = g_wav = g_len = zeros
+    scount = jnp.zeros((bp,), jnp.int32)                  # syncs before pos i
+    prev_sync = jnp.zeros((bp,), bool)
+    prev_mb = jnp.clip(strat[:, 0], 1.0, B)
+    lastb = jnp.full((bp,), -1.0, jnp.float32)            # last sync position
 
-    def body(i, carry):
-        (lat, peak, traf, g_comp, g_traf, g_on, g_mem, g_waves, g_len,
-         prev_sync, prev_mb, lastb) = carry
+    for i in range(1, P):
         a = strat[:, i]
-        Ai = A[i]; Ap = A[i - 1]; Wi = W[i]; Fi = F[i]
-        OEi = OE[i]; UCi = UC[i]
+        live = jnp.asarray(i <= n)                        # mask: 1 <= i <= n
+        Ai, Ap, Wi, Fi = A[i], A[i - 1], W[i], F[i]
+        OEi, UCi = OEv[i], UC[i]
         src = SKIP[i]
-        sync = a < 0.0
+        gid_cols.append(scount)
+        sync = (a < 0.0) & live
         mb = jnp.clip(a, 1.0, B)
         mbe = jnp.where(sync, jnp.where(prev_sync, 1.0, prev_mb), mb)
         stage = jnp.where(sync, 1.0, mb)
-        head = (g_len == 0.0)
+        head = g_len == 0.0
 
+        # residual edge: same-group iff the source is after the last sync
+        # (gid[src] == gid[i]; position 0 shares gid 0 with the first group)
         has_skip = src >= 0
         same = has_skip & (src.astype(jnp.float32) > lastb)
         Asrc = A[jnp.maximum(src, 0)]
         hold = jnp.where(same, mbe * Asrc, 0.0)
         cross_t = jnp.where(has_skip & ~same, 2.0 * B * Asrc, 0.0)
 
-        is_tail = sync | (i == n)
+        is_tail = (sync | (i == n)) & live
         waves = jnp.ceil(B / mbe)
-        mem_i = stage * Ai + jnp.where(head, mbe * Ap, 0.0) + hold
-        traf_i = (jnp.where(head, B * Ap, 0.0)
-                  + jnp.where(is_tail, B * Ai, 0.0) + Wi * waves + cross_t)
+        head_f = jnp.where(head, 1.0, 0.0)
+        tail_f = jnp.where(is_tail, 1.0, 0.0)
+        # fused-style per-position terms — expression order mirrors
+        # cost_model._evaluate_full term by term (bit-exactness contract)
+        mem_i = stage * Ai + (head_f * mbe) * Ap + hold
+        traf_i = (head_f * B) * Ap + (tail_f * B) * Ai + Wi * waves + cross_t
         comp_i = B * Fi / peak_macs / util(mbe, OEi, UCi)
         on_i = B * (Ap + Ai) + Wi * waves
 
-        # streaming alternative (used when this layer ends up alone)
+        # streaming alternative: this layer alone in its group (unfused:
+        # one full-batch pass, working set clamped to the streaming buffer)
         hold_a = jnp.where(same, B * Asrc, 0.0)
-        mem_a = jnp.minimum(stage * Ai + B * Ap + hold_a,
-                            jnp.float32(hw.stream_buf_bytes))
-        alt = {"comp": B * Fi / peak_macs / util(jnp.float32(B), OEi, UCi),
-               "traf": B * Ap + B * Ai + Wi + cross_t,
-               "on": B * (Ap + Ai) + Wi,
-               "mem": mem_a}
+        mem_a = jnp.minimum(stage * Ai + (head_f * B) * Ap + hold_a,
+                            stream_buf)
+        comp_a = B * Fi / peak_macs / util(jnp.full((bp,), B), OEi, UCi)
+        traf_a = (head_f * B) * Ap + (tail_f * B) * Ai + Wi * 1.0 + cross_t
+        on_a = B * (Ap + Ai) + Wi * 1.0
 
-        g_comp += comp_i; g_traf += traf_i; g_on += on_i
-        g_mem += mem_i; g_waves += waves; g_len += 1.0
+        lv = jnp.where(live, 1.0, 0.0)
+        g_comp = g_comp + comp_i * lv
+        g_traf = g_traf + traf_i * lv
+        g_on = g_on + on_i * lv
+        g_mem = g_mem + mem_i * lv
+        g_wav = g_wav + waves * lv
+        g_len = g_len + lv
 
-        st = (lat, peak, traf, g_comp, g_traf, g_on, g_mem, g_waves, g_len,
-              alt)
-        latf, peakf, traff = flush(st)
-        do_flush = is_tail
-        lat = jnp.where(do_flush, latf, lat)
-        peak = jnp.where(do_flush, peakf, peak)
-        traf = jnp.where(do_flush, traff, traf)
-        rz = lambda x: jnp.where(do_flush, zeros, x)
+        single = g_len == 1.0
+        Cc = jnp.where(single, comp_a, g_comp)
+        Tc = jnp.where(single, traf_a, g_traf)
+        Oc = jnp.where(single, on_a, g_on)
+        Mc = jnp.where(single, mem_a, g_mem)
+        Wc = jnp.where(single, 1.0, g_wav)
+
+        onehot = (pos[None, :] == scount[:, None]) & is_tail[:, None]
+        C_g = jnp.where(onehot, Cc[:, None], C_g)
+        T_g = jnp.where(onehot, Tc[:, None], T_g)
+        O_g = jnp.where(onehot, Oc[:, None], O_g)
+        M_g = jnp.where(onehot, Mc[:, None], M_g)
+        wave_g = jnp.where(onehot, Wc[:, None], wave_g)
+        glen = jnp.where(onehot, g_len[:, None], glen)
+
+        rz = lambda x: jnp.where(is_tail, zeros, x)
         g_comp, g_traf, g_on = rz(g_comp), rz(g_traf), rz(g_on)
-        g_mem, g_waves, g_len = rz(g_mem), rz(g_waves), rz(g_len)
-        lastb = jnp.where(sync, jnp.full((bp,), jnp.float32(i)), lastb)
-        return (lat, peak, traf, g_comp, g_traf, g_on, g_mem, g_waves,
-                g_len, sync, mb, lastb)
+        g_mem, g_wav, g_len = rz(g_mem), rz(g_wav), rz(g_len)
+        scount = scount + jnp.where(sync, 1, 0)
+        lastb = jnp.where(sync, jnp.float32(i), lastb)
+        prev_sync = sync
+        prev_mb = mb
 
-    init = (zeros, zeros, zeros, zeros, zeros, zeros, zeros, zeros, zeros,
-            jnp.zeros((bp,), bool), jnp.clip(strat[:, 0], 1.0, B),
-            jnp.full((bp,), -1.0, jnp.float32))
-    out = jax.lax.fori_loop(1, n + 1, body, init)
-    lat_ref[...] = out[0][:, None]
-    peak_ref[...] = out[1][:, None]
-    traf_ref[...] = out[2][:, None]
-
-
-def fusion_eval_population(strategies, wl: dict, *, batch: float,
-                           hw: AccelConfig, n: int | None = None,
-                           bp: int = 128, interpret: bool | None = None):
-    """strategies [pop, P] int32; wl = cost_model.pack_workload arrays.
-    Returns (latency [pop], peak_mem [pop], traffic [pop])."""
-    import numpy as _np
-    if n is None:
-        n = int(_np.asarray(wl["n"]))
-    wl2 = {k: v for k, v in wl.items() if k != "n"}
-    return _fusion_eval_jit(jnp.asarray(strategies), wl2, batch=float(batch),
-                            hw=hw, n=n, bp=bp, interpret=interpret)
+    Cg_ref[...] = C_g[None]
+    Tg_ref[...] = T_g[None]
+    Og_ref[...] = O_g[None]
+    Mg_ref[...] = M_g[None]
+    Wg_ref[...] = wave_g[None]
+    glen_ref[...] = glen[None]
+    gid_ref[...] = jnp.stack(gid_cols, axis=-1)[None]
 
 
-@functools.partial(jax.jit, static_argnames=("batch", "hw", "bp", "n",
-                                             "interpret"))
-def _fusion_eval_jit(strategies: jax.Array, wl: dict, *, batch: float,
-                     hw: AccelConfig, n: int, bp: int = 128,
-                     interpret: bool | None = None):
-    pop, P = strategies.shape
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    pad = (-pop) % bp
-    if pad:
-        strategies = jnp.pad(strategies, ((0, pad), (0, 0)),
-                             constant_values=-1)
-    npop = strategies.shape[0]
-    row = lambda k, dt: wl[k].astype(dt).reshape(1, P)
-    args = (strategies, row("A", jnp.float32), row("W", jnp.float32),
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "interpret"))
+def _fusion_eval_grid_jit(strategies, wls: dict, batches, budgets, hwrows,
+                          *, bp: int, interpret: bool):
+    C, POP, P = strategies.shape
+    NP = _ceil_to(POP, bp)
+    if NP != POP:
+        strategies = jnp.pad(strategies, ((0, 0), (0, NP - POP), (0, 0)),
+                             constant_values=_cm.SYNC)
+    row = lambda k, dt: wls[k].astype(dt).reshape(C, P)
+    args = (strategies,
+            row("A", jnp.float32), row("W", jnp.float32),
             row("F", jnp.float32), row("OE", jnp.float32),
-            row("UC", jnp.float32), row("SKIP", jnp.int32))
+            row("UC", jnp.float32), row("SKIP", jnp.int32),
+            wls["n"].astype(jnp.int32).reshape(C),
+            batches.astype(jnp.float32).reshape(C),
+            wls["BPE"].astype(jnp.float32).reshape(C),
+            hwrows.astype(jnp.float32).reshape(C, HW_FEATURE_DIM))
 
-    lat, peak, traf = pl.pallas_call(
-        functools.partial(_fe_kernel, P=P, n=n, batch=float(batch), hw=hw),
-        grid=(npop // bp,),
-        in_specs=[pl.BlockSpec((bp, P), lambda g: (g, 0))]
-        + [pl.BlockSpec((1, P), lambda g: (0, 0))] * 6,
-        out_specs=[pl.BlockSpec((bp, 1), lambda g: (g, 0))] * 3,
-        out_shape=[jax.ShapeDtypeStruct((npop, 1), jnp.float32)] * 3,
+    cond_spec = [pl.BlockSpec((1, P), lambda c, g: (c, 0))] * 6
+    scal_spec = [pl.BlockSpec((1,), lambda c, g: (c,))] * 3
+    outs = pl.pallas_call(
+        functools.partial(_fe_kernel, P=P),
+        grid=(C, NP // bp),
+        in_specs=[pl.BlockSpec((1, bp, P), lambda c, g: (c, g, 0))]
+        + cond_spec + scal_spec
+        + [pl.BlockSpec((1, HW_FEATURE_DIM), lambda c, g: (c, 0))],
+        out_specs=[pl.BlockSpec((1, bp, P), lambda c, g: (c, g, 0))] * 7,
+        out_shape=[jax.ShapeDtypeStruct((C, NP, P), jnp.float32)] * 6
+        + [jax.ShapeDtypeStruct((C, NP, P), jnp.int32)],
         interpret=interpret,
     )(*args)
-    return lat[:pop, 0], peak[:pop, 0], traf[:pop, 0]
+    C_g, T_g, O_g, M_g, wave_g, glen, gid = (o[:, :POP] for o in outs)
+    hw = _cm.as_hw(hwrows)
+    bc = lambda x: x[:, None, None]
+    hwb = jax.tree_util.tree_map(bc, hw)
+    out = _cm.finalize_groups(C_g, T_g, O_g, M_g, wave_g, glen,
+                              budgets[:, None], hwb)
+    return out, gid, M_g
+
+
+def _block_size(pop: int, bp: int) -> int:
+    """Block width: cover small populations with one block (padded to the
+    next pow2 lane count), cap at ``bp``."""
+    b = 8
+    while b < pop and b < bp:
+        b *= 2
+    return b
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+def fusion_eval_grid(wls: dict, strategies, batches, budgets, hw, *,
+                     bp: int = 128, interpret: bool | None = None):
+    """Pallas backend of ``cost_model.evaluate_grid`` (same contract):
+    CostOut [C, POP] for strategies [C, POP, P] over stacked workloads,
+    per-condition batches/budgets [C] and per-condition hardware (anything
+    ``accel.stack_hw`` accepts).  Zero recompiles across accelerators for a
+    fixed block shape — the hw row is traced kernel data."""
+    strategies = jnp.asarray(strategies)
+    C = strategies.shape[0]
+    out, _, _ = _fusion_eval_grid_jit(
+        strategies, _kernel_wls(wls), jnp.asarray(batches),
+        jnp.asarray(budgets), hw_array(stack_hw(hw, C)),
+        bp=_block_size(strategies.shape[1], bp),
+        interpret=_resolve_interpret(interpret))
+    return out
+
+
+def fusion_eval_grid_stats(wls: dict, strategies, batches, budgets, hw, *,
+                           bp: int = 128, interpret: bool | None = None):
+    """Pallas backend of ``cost_model.evaluate_grid_stats``:
+    ``(CostOut [C, POP], gid [C, POP, P], M_g [C, POP, P])`` — the group
+    decomposition the G-Sampler repair operator consumes."""
+    strategies = jnp.asarray(strategies)
+    C = strategies.shape[0]
+    return _fusion_eval_grid_jit(
+        strategies, _kernel_wls(wls), jnp.asarray(batches),
+        jnp.asarray(budgets), hw_array(stack_hw(hw, C)),
+        bp=_block_size(strategies.shape[1], bp),
+        interpret=_resolve_interpret(interpret))
+
+
+_KERNEL_KEYS = ("A", "W", "F", "OE", "UC", "SKIP", "n", "BPE")
+
+
+def _kernel_wls(wls: dict) -> dict:
+    """The packed-workload subset the kernel reads (mask is derived from
+    ``n`` in-kernel; SHAPE6 is a decoration-only feature)."""
+    missing = [k for k in _KERNEL_KEYS if k not in wls]
+    if missing:
+        raise KeyError(f"packed workload missing {missing} — pack with "
+                       f"cost_model.pack_workload (BPE is required for the "
+                       f"in-kernel rescale, DESIGN §13)")
+    return {k: wls[k] for k in _KERNEL_KEYS}
+
+
+def _lift(wl: dict):
+    return {k: jnp.asarray(v)[None] for k, v in _kernel_wls(wl).items()}
+
+
+def fusion_eval_population(strategies, wl: dict, *, batch, budget_bytes,
+                           hw, bp: int = 128,
+                           interpret: bool | None = None):
+    """Single-condition form: CostOut [pop] for strategies [pop, P] against
+    one packed workload — ``cost_model.evaluate_population``'s contract.
+    ``hw`` may be an AccelConfig or a traced ``accel.HwVec``."""
+    out = fusion_eval_grid(
+        _lift(wl), jnp.asarray(strategies)[None],
+        jnp.asarray(batch, jnp.float32).reshape(1),
+        jnp.asarray(budget_bytes, jnp.float32).reshape(1),
+        stack_hw(hw, 1), bp=bp, interpret=interpret)
+    return jax.tree_util.tree_map(lambda x: x[0], out)
+
+
+def fusion_eval_population_stats(strategies, wl: dict, *, batch,
+                                 budget_bytes, hw, bp: int = 128,
+                                 interpret: bool | None = None):
+    """Single-condition stats form: ``(CostOut [pop], gid [pop, P],
+    M_g [pop, P])`` — ``cost_model.evaluate_population_stats``'s contract."""
+    out, gid, M_g = fusion_eval_grid_stats(
+        _lift(wl), jnp.asarray(strategies)[None],
+        jnp.asarray(batch, jnp.float32).reshape(1),
+        jnp.asarray(budget_bytes, jnp.float32).reshape(1),
+        stack_hw(hw, 1), bp=bp, interpret=interpret)
+    return (jax.tree_util.tree_map(lambda x: x[0], out), gid[0], M_g[0])

@@ -1,8 +1,9 @@
 """Public jit'd wrappers for the Pallas kernels (the ``ops`` layer).
 
-Selection contract: the models call these when ``attn_impl="pallas"``; on
-the CPU container they execute with ``interpret=True`` (pure-Python kernel
-body) which is how the per-kernel shape/dtype sweeps in
+Selection contract: the models call these when ``attn_impl="pallas"`` and
+the cost model dispatches to them when ``evaluator="pallas"`` (DESIGN §13);
+on the CPU container they execute with ``interpret=True`` (pure-Python
+kernel body) which is how the per-kernel shape/dtype sweeps in
 ``tests/test_kernels.py`` validate them against ``ref.py``.
 """
 from __future__ import annotations
@@ -10,7 +11,10 @@ from __future__ import annotations
 from .flash_attention import flash_attention
 from .flash_decode import flash_decode
 from .rwkv6_scan import wkv6
-from .fusion_eval import fusion_eval_population
+from .fusion_eval import (fusion_eval_population,
+                          fusion_eval_population_stats,
+                          fusion_eval_grid, fusion_eval_grid_stats)
 
 __all__ = ["flash_attention", "flash_decode", "wkv6",
-           "fusion_eval_population"]
+           "fusion_eval_population", "fusion_eval_population_stats",
+           "fusion_eval_grid", "fusion_eval_grid_stats"]

@@ -13,7 +13,8 @@ from ..core import cost_model as _cm
 from ..nn.attention import attend as _attend
 from ..nn.rwkv import wkv_scan as _wkv_scan
 
-__all__ = ["attention_ref", "decode_ref", "wkv6_ref", "fusion_eval_ref"]
+__all__ = ["attention_ref", "decode_ref", "wkv6_ref", "fusion_eval_ref",
+           "fusion_eval_grid_ref"]
 
 
 def attention_ref(q, k, v, *, causal=True, window=-1):
@@ -34,8 +35,23 @@ def wkv6_ref(r, k, v, w, u, s0):
 
 
 def fusion_eval_ref(strategies, wl, *, batch, budget_bytes, hw):
-    """Vmapped analytical cost model (itself cross-checked against the
-    loop-based ``core.ref_model`` in tests/test_cost_model.py)."""
-    out = _cm.evaluate_population(wl, jnp.asarray(strategies), float(batch),
-                                  float(budget_bytes), hw)
-    return out.latency, out.peak_mem, out.traffic
+    """Vmapped analytical cost model, CostOut [pop] (itself cross-checked
+    against the loop-based ``core.ref_model`` in tests/test_cost_model.py).
+    ``hw`` may be an AccelConfig or a traced ``accel.HwVec`` — the §11/§13
+    contract the kernel shares: pack-time ``wl["BPE"]`` A/W bytes rescale
+    to the serving accelerator happens in-graph."""
+    return _cm.evaluate_population(wl, jnp.asarray(strategies),
+                                   jnp.asarray(batch, jnp.float32),
+                                   jnp.asarray(budget_bytes, jnp.float32),
+                                   hw, evaluator="xla")
+
+
+def fusion_eval_grid_ref(wls, strategies, batches, budgets, hw):
+    """Grid oracle: ``cost_model.evaluate_grid_stats`` pinned to the XLA
+    backend — ``(CostOut [C, POP], gid [C, POP, P], M_g [C, POP, P])``,
+    the contract ``fusion_eval_grid_stats`` must reproduce bit-for-bit on
+    CPU (DESIGN §13)."""
+    return _cm.evaluate_grid_stats(wls, jnp.asarray(strategies),
+                                   jnp.asarray(batches),
+                                   jnp.asarray(budgets), hw,
+                                   evaluator="xla")

@@ -144,8 +144,33 @@ def attend(q, k, v, *, causal: bool = True, window=-1,
       j < kv_len                   (if kv_len given; masks unwritten cache)
     """
     if impl == "pallas":
-        from ..kernels.flash_attention import flash_attention as _fa
-        return _fa(q, k, v, causal=causal, window=window)
+        # The KV-cached paths carry q_offset/kv_len masking the pallas
+        # prefill kernel does not implement — dropping them here would
+        # attend over the UNWRITTEN cache tail (the staleness bug pinned by
+        # tests/test_kernels.py::test_attend_pallas_*).  Dispatch:
+        #  - uncached full sequence      -> flash_attention (as before);
+        #  - single-token cached decode  -> flash_decode (kv_len-masked
+        #    split-K, the deployable decode kernel);
+        #  - multi-token cache append    -> the XLA masking math below,
+        #    bit-exact with impl="xla" (this is what keeps the cached
+        #    decode of model.dt_decode_step — 2-3 token appends — equal to
+        #    dt_apply whichever impl is selected).  TODO: thread
+        #    q_offset/kv_len masking into flash_attention so long cached
+        #    prefills keep the flash kernel on TPU instead of this
+        #    correct-but-dense fallback.
+        cached = (kv_len is not None
+                  or not (isinstance(q_offset, int) and q_offset == 0))
+        if not cached:
+            from ..kernels.flash_attention import flash_attention as _fa
+            return _fa(q, k, v, causal=causal, window=window)
+        if (q.shape[1] == 1 and causal and kv_len is not None
+                and isinstance(window, int) and window == -1):
+            from ..kernels.flash_decode import flash_decode as _fd
+            # exact single-token causal mask: j <= q_offset AND j < kv_len
+            # == j < min(kv_len, q_offset + 1) — so a mid-cache query
+            # (q_offset < kv_len - 1) masks identically to impl="xla"
+            return _fd(q, k, v, jnp.minimum(jnp.asarray(kv_len),
+                                            jnp.asarray(q_offset) + 1))
     if q.shape[1] > q_chunk:
         return _attend_chunked(q, k, v, causal=causal, window=window,
                                q_offset=q_offset, kv_len=kv_len,

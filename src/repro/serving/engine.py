@@ -221,7 +221,13 @@ class MapperEngine:
         over ``workloads`` can hit, for arrival ticks up to ``max_tick``
         requests.  Returns the number of programs compiled.  After warmup,
         serving any mix of these workloads in ticks of <= ``max_tick``
-        requests triggers ZERO new compilations (the churn guard)."""
+        requests triggers ZERO new compilations (the churn guard).
+
+        The warmed set is independent of ``cost_model``'s evaluator
+        backend: serving rides the §9 prefix-carry episode, not the §13
+        grid evaluator, so flipping ``set_default_evaluator`` never
+        invalidates a warmed engine (``stats`` reports the active backend
+        for operational visibility)."""
         if accel is None:
             accel = AccelConfig()
         before = self.compile_count
@@ -246,6 +252,7 @@ class MapperEngine:
             "requests_served": self.requests_served,
             "device_calls": self.device_calls,
             "compile_count": self.compile_count,
+            "cost_evaluator": cm.default_evaluator(),
             "compiled_shapes": sorted(self._compiled),
             "rows_padded": self.rows_padded,
             "tick_dedup": self.tick_dedup,

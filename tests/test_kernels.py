@@ -4,12 +4,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import fusion_eval, ops, ref
 from repro.core import cost_model as cm
-from repro.core.accel import PAPER_ACCEL
-from repro.workloads import resnet18, vgg16
+from repro.core import ref_model
+from repro.core.accel import ACCEL_ZOO, PAPER_ACCEL
+from repro.nn.attention import attend
+from repro.workloads import resnet18, tiny_cnn, vgg16
 
 RNG = np.random.default_rng(0)
+MB = 2.0 ** 20
 
 
 def _tol(dtype):
@@ -67,20 +70,183 @@ def test_wkv6_sweep(B, T, H, n, chunk):
                                rtol=5e-5, atol=5e-5)
 
 
-@pytest.mark.parametrize("wl_fn,batch", [(vgg16, 64), (resnet18, 32)])
-def test_fusion_eval_sweep(wl_fn, batch):
-    hw = PAPER_ACCEL
-    w = wl_fn(batch=batch)
-    wl = cm.pack_workload(w, hw, nmax=64)
-    pop = np.stack([cm.random_strategy(RNG, w.n, 64, batch)
+# ---------------------------------------------------------------------------
+# fusion_eval: the production grid evaluator (DESIGN §13).
+#
+# The kernel is packed ONCE with the paper accelerator (1-byte tensors) and
+# then served across the whole ACCEL_ZOO — including the 2-byte datacenter
+# part, the pack-time/serve-time BPE mismatch that the pre-§13 kernel
+# silently evaluated wrong.  Against the XLA evaluator the contract is
+# BIT-exactness (what makes the gsampler evaluator switch corpus-neutral);
+# against the independent f64 loop oracle (core.ref_model) it is the
+# existing 1e-5 kernel tolerance.
+# ---------------------------------------------------------------------------
+
+_FE_WL = resnet18(batch=32)
+_FE_PACKED = cm.pack_workload(_FE_WL, PAPER_ACCEL, nmax=64)
+_FE_POP = np.stack([cm.random_strategy(RNG, _FE_WL.n, 64, 32)
                     for _ in range(64)])
-    lat, peak, traf = ops.fusion_eval_population(
-        pop, wl, batch=float(batch), hw=hw, interpret=True)
-    rl, rp, rt = ref.fusion_eval_ref(pop, wl, batch=batch,
-                                     budget_bytes=20 * 2 ** 20, hw=hw)
-    np.testing.assert_allclose(np.asarray(lat), np.asarray(rl), rtol=1e-5)
-    np.testing.assert_allclose(np.asarray(peak), np.asarray(rp), rtol=1e-5)
-    np.testing.assert_allclose(np.asarray(traf), np.asarray(rt), rtol=1e-5)
+
+
+def _assert_costout_equal(got, want):
+    for field, a, b in zip(got._fields, got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=field)
+
+
+@pytest.mark.parametrize("accel", sorted(ACCEL_ZOO))
+def test_fusion_eval_zoo_sweep(accel):
+    """Bit parity with the XLA evaluator on every zoo accelerator, incl.
+    the serve-time BPE mismatch (pack bpe=1, datacenter bpe=2)."""
+    hw = ACCEL_ZOO[accel]
+    out = ops.fusion_eval_population(_FE_POP, _FE_PACKED, batch=32.0,
+                                     budget_bytes=20 * MB, hw=hw,
+                                     interpret=True)
+    want = ref.fusion_eval_ref(_FE_POP, _FE_PACKED, batch=32.0,
+                               budget_bytes=20 * MB, hw=hw)
+    _assert_costout_equal(out, want)
+
+
+@pytest.mark.parametrize("accel", ["edge", "datacenter"])
+def test_fusion_eval_matches_ref_model(accel):
+    """Independent oracle: the f64 loop model, with the workload packed
+    DIRECTLY at the serving accelerator's datatype — the ground truth the
+    in-kernel BPE rescale must reproduce."""
+    hw = ACCEL_ZOO[accel]
+    wl_serve = {k: np.asarray(v)
+                for k, v in cm.pack_workload(_FE_WL, hw, nmax=64).items()}
+    out = ops.fusion_eval_population(_FE_POP, _FE_PACKED, batch=32.0,
+                                     budget_bytes=20 * MB, hw=hw,
+                                     interpret=True)
+    for i in range(0, len(_FE_POP), 7):
+        want = ref_model.evaluate_ref(wl_serve, _FE_POP[i], 32, 20 * MB, hw)
+        for k in ("latency", "peak_mem", "traffic"):
+            a = float(np.asarray(getattr(out, k))[i])
+            assert abs(a - want[k]) <= 1e-5 * max(abs(want[k]), 1.0), \
+                (accel, i, k, a, want[k])
+        assert bool(np.asarray(out.valid)[i]) == want["valid"]
+        assert int(np.asarray(out.n_groups)[i]) == want["n_groups"]
+
+
+def test_fusion_eval_grid_blocks():
+    """[C, POP, P] grid contract vs evaluate_grid_stats: heterogeneous
+    workloads x accels x budgets, non-pow2 population, bit parity incl.
+    the repair-operator stats (masked gid + per-group footprints)."""
+    wl_objs = [resnet18(), vgg16(), tiny_cnn()]
+    pack_accs = [PAPER_ACCEL, ACCEL_ZOO["datacenter"], ACCEL_ZOO["nano"]]
+    serve_accs = [ACCEL_ZOO["datacenter"], PAPER_ACCEL, ACCEL_ZOO["mobile"]]
+    wls = cm.stack_workloads([cm.pack_workload(w, a, 64)
+                              for w, a in zip(wl_objs, pack_accs)])
+    strats = np.stack([
+        np.stack([cm.random_strategy(RNG, w.n, 64, 16) for _ in range(9)])
+        for w in wl_objs])
+    batches = np.full(3, 16.0, np.float32)
+    budgets = np.asarray([20 * MB, 48 * MB, 4 * MB], np.float32)
+    out, gid, M_g = ops.fusion_eval_grid_stats(wls, strats, batches,
+                                               budgets, serve_accs,
+                                               interpret=True)
+    want, wgid, wMg = ref.fusion_eval_grid_ref(wls, strats, batches,
+                                               budgets, serve_accs)
+    _assert_costout_equal(out, want)
+    np.testing.assert_array_equal(np.asarray(M_g), np.asarray(wMg))
+    mask = np.asarray(wls["mask"])
+    for c in range(3):                      # gid is defined under the mask
+        np.testing.assert_array_equal(np.asarray(gid)[c][:, mask[c]],
+                                      np.asarray(wgid)[c][:, mask[c]])
+    # the plain grid entry point rides the same program
+    out2 = ops.fusion_eval_grid(wls, strats, batches, budgets, serve_accs,
+                                interpret=True)
+    _assert_costout_equal(out2, want)
+
+
+@pytest.mark.parametrize("pop_n", [1, 5])
+def test_fusion_eval_nonpow2_population(pop_n):
+    """Odd population sizes pad to the block width and unpad exactly."""
+    w = tiny_cnn()
+    wl = cm.pack_workload(w, PAPER_ACCEL, nmax=32)
+    pop = np.stack([cm.random_strategy(RNG, w.n, 32, 16)
+                    for _ in range(pop_n)])
+    out = ops.fusion_eval_population(pop, wl, batch=16.0,
+                                     budget_bytes=4 * MB, hw=PAPER_ACCEL,
+                                     interpret=True)
+    want = cm.evaluate_population(wl, jnp.asarray(pop), 16.0, 4 * MB,
+                                  PAPER_ACCEL)
+    _assert_costout_equal(out, want)
+
+
+def test_fusion_eval_zero_recompiles_across_accels():
+    """The accelerator is traced kernel data: sweeping the zoo at a fixed
+    block shape must not grow the jit cache (the §13 serving property)."""
+    cache_size = getattr(fusion_eval._fusion_eval_grid_jit, "_cache_size",
+                         None)
+    if cache_size is None:
+        pytest.skip("jax version exposes no jit cache introspection")
+    ops.fusion_eval_population(_FE_POP, _FE_PACKED, batch=32.0,
+                               budget_bytes=20 * MB, hw=PAPER_ACCEL,
+                               interpret=True)
+    before = cache_size()
+    for hw in ACCEL_ZOO.values():
+        ops.fusion_eval_population(_FE_POP, _FE_PACKED, batch=32.0,
+                                   budget_bytes=20 * MB, hw=hw,
+                                   interpret=True)
+    assert cache_size() == before, \
+        "hw sweep recompiled — the accelerator became a static argument"
+
+
+# ---------------------------------------------------------------------------
+# attend() pallas dispatch over KV caches (the flash_decode audit): the
+# cached paths carry q_offset/kv_len masking; dropping it (the pre-§13
+# dispatch) read the UNWRITTEN cache tail.
+# ---------------------------------------------------------------------------
+
+
+def test_attend_pallas_cached_decode_masks_tail():
+    """Single-token cached decode routes to flash_decode and must mask the
+    garbage tail beyond kv_len (also exercises the bk > T clamp)."""
+    B, T, Hq, Hkv, hd = 2, 60, 4, 2, 16
+    kv_len = 37
+    q = jnp.asarray(RNG.normal(size=(B, 1, Hq, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, T, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, T, Hkv, hd)), jnp.float32)
+    k = k.at[:, kv_len:].set(1e6)            # poison the unwritten tail
+    v = v.at[:, kv_len:].set(-1e6)
+    for q_off in (kv_len - 1, 20):          # last-token and mid-cache query
+        ox = attend(q, k, v, causal=True, q_offset=q_off, kv_len=kv_len,
+                    impl="xla")
+        op = attend(q, k, v, causal=True, q_offset=q_off, kv_len=kv_len,
+                    impl="pallas")
+        np.testing.assert_allclose(np.asarray(op), np.asarray(ox),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_attend_pallas_cached_append_bitexact_xla():
+    """Multi-token cache appends (the dt_decode_step shape: 2-3 tokens per
+    step) have no pallas kernel — the dispatch must fall back to the exact
+    XLA masking math, keeping cached decode == full forward bit-for-bit
+    whether or not the pallas path is selected."""
+    B, T, Hq, Hkv, hd = 2, 60, 4, 4, 16
+    k = jnp.asarray(RNG.normal(size=(B, T, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, T, Hkv, hd)), jnp.float32)
+    for S, kv_len in ((2, 2), (3, 17), (3, 60)):
+        q = jnp.asarray(RNG.normal(size=(B, S, Hq, hd)), jnp.float32)
+        ox = attend(q, k, v, causal=True, q_offset=kv_len - S,
+                    kv_len=kv_len, impl="xla")
+        op = attend(q, k, v, causal=True, q_offset=kv_len - S,
+                    kv_len=kv_len, impl="pallas")
+        np.testing.assert_array_equal(np.asarray(op), np.asarray(ox))
+
+
+def test_flash_decode_cache_not_multiple_of_block():
+    """bk > T and T % bk != 0 must clamp/pad instead of dropping tail keys."""
+    B, T, Hq, Hkv, hd = 1, 72, 4, 2, 32
+    q = jnp.asarray(RNG.normal(size=(B, 1, Hq, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, T, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, T, Hkv, hd)), jnp.float32)
+    for kv_len, bk in ((72, 512), (50, 32), (7, 16)):
+        out = ops.flash_decode(q, k, v, kv_len, bk=bk, interpret=True)
+        want = ref.decode_ref(q, k, v, kv_len)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
 
 
 def test_model_pallas_path_matches_xla():

@@ -59,3 +59,54 @@ def test_elites_are_distinct_and_valid(env):
         assert valid
         seen.add(s[: env.n + 1].tobytes())
     assert len(seen) == len(res.elites)
+
+
+# ---------------------------------------------------------------------------
+# Evaluator-backend equivalence (DESIGN §13): the grid G-Sampler and the
+# teacher-corpus pipeline must be BIT-identical per seed whether fitness
+# runs on the XLA evaluator or the Pallas fusion_eval kernel (interpret on
+# this CPU container) — the property that makes the backend switch safe to
+# flip in production without regenerating a single corpus.
+# ---------------------------------------------------------------------------
+
+_BE_CFG = GSamplerConfig(population=8, generations=4, elite=2,
+                         repair_tries=2, seed=3)
+
+
+def _grid_args():
+    from repro.core.accel import ACCEL_ZOO
+    from repro.workloads import tiny_cnn
+    wls = [tiny_cnn(), tiny_cnn()]
+    hws = [PAPER_ACCEL, ACCEL_ZOO["datacenter"]]
+    return wls, hws, [8.0, 8.0], [2 * MB, 4 * MB]
+
+
+def test_gsampler_grid_backend_equivalence():
+    from repro.core import gsampler_search_grid
+    wls, hws, batches, budgets = _grid_args()
+    res = {ev: gsampler_search_grid(wls, hws, batches, budgets, nmax=16,
+                                    cfg=_BE_CFG, top_k=4, evaluator=ev)
+           for ev in ("xla", "pallas")}
+    for field in ("strategies", "latency", "peak_mem", "speedup", "valid",
+                  "history", "baseline_latency"):
+        np.testing.assert_array_equal(getattr(res["xla"], field),
+                                      getattr(res["pallas"], field),
+                                      err_msg=field)
+    assert res["xla"].valid.any()           # the grid actually solved
+
+
+def test_teacher_corpus_backend_equivalence():
+    from repro.core.accel import ACCEL_ZOO
+    from repro.core.dataset import generate_teacher_corpus
+    from repro.workloads import tiny_cnn
+    ds = {ev: generate_teacher_corpus(
+              [tiny_cnn()], [PAPER_ACCEL, ACCEL_ZOO["datacenter"]], batch=8,
+              budgets_mb=[2.0], max_steps=16, top_k=4, ga_cfg=_BE_CFG,
+              seed=5, evaluator=ev)
+          for ev in ("xla", "pallas")}
+    for field in ("rtg", "states", "actions", "mask", "t0", "hw"):
+        np.testing.assert_array_equal(getattr(ds["xla"], field),
+                                      getattr(ds["pallas"], field),
+                                      err_msg=field)
+    assert ds["xla"].meta == ds["pallas"].meta
+    assert len(ds["xla"]) > 0
