@@ -1,26 +1,30 @@
-"""One mapper, one engine: a production-shaped serving front door.
+"""One mapper, one engine: a production-shaped async serving front door.
 
     PYTHONPATH=src python examples/serve_mapper.py [--requests 96]
 
 A deployed mapper service fields a MIXED stream — "map vgg16 under 20 MB
 at batch 32 on a mobile NPU" next to "map tiny_cnn under 3 MB on edge" —
-and must answer every tick without recompiling or re-searching.  This is
-the three-layer §12 stack end to end:
+arriving one request at a time, and must answer without recompiling or
+re-searching.  This is the §12/§14 stack end to end:
 
- - core: ``dnnfuser_infer_batch`` rolls heterogeneous (workload, batch,
-   budget, accel) rows in ONE device call — the workload itself is a
-   traced per-row condition (DESIGN §12), the accelerator too (§11);
+ - core: the fused episode rolls heterogeneous (workload, batch, budget,
+   accel) rows in ONE device call — the workload itself is a traced
+   per-row condition (DESIGN §12), the accelerator too (§11);
  - engine: ``serving.MapperEngine`` buckets request shapes (pow2 batches x
    nmax buckets -> a warmed, closed set of compiled programs), dedupes and
    caches solved strategies;
- - front door: this script — train an hw-conditioned mapper once, warm the
-   engine, then serve arrival ticks and report throughput, cache hit
-   rates and the zero-recompile steady state.
+ - front door: ``serving.AsyncMapperScheduler`` — continuous batching
+   over the live stream: cache hits resolve at submit, misses coalesce
+   until a full device call forms or a flush deadline expires (§14);
+ - restart: the strategy cache persists to disk, so a FRESH engine in the
+   next process starts warm — repeat conditions never touch the device.
 
 The stream mixes zoo networks x zoo accelerators (including one never
 trained on) x budgets never seen in training.
 """
 import argparse
+import pathlib
+import tempfile
 import time
 
 import jax
@@ -29,6 +33,7 @@ import numpy as np
 from repro.core import (ACCEL_ZOO, DTConfig, GSamplerConfig, HW_FEATURE_DIM,
                         MapperEngine, MapRequest, TrainConfig, dt_init,
                         dt_loss, generate_teacher_corpus, train_model)
+from repro.serving import AsyncMapperScheduler
 from repro.workloads import resnet18, tiny_cnn, vgg16
 
 MB = 2 ** 20
@@ -43,7 +48,7 @@ def main():
 
     train_nets = [vgg16(), tiny_cnn()]
     train_accels = [ACCEL_ZOO["edge"], ACCEL_ZOO["mobile"]]
-    print("[1/3] training an hw-conditioned mapper "
+    print("[1/4] training an hw-conditioned mapper "
           "(teacher @ 16-64 MB on edge + mobile) ...")
     ds = generate_teacher_corpus(
         train_nets, train_accels, batch=64, budgets_mb=[16, 32, 48, 64],
@@ -59,8 +64,9 @@ def main():
     serve_nets = [vgg16(), tiny_cnn(), resnet18()]   # resnet18: UNSEEN net
     serve_accels = [ACCEL_ZOO["edge"], ACCEL_ZOO["mobile"],
                     ACCEL_ZOO["laptop"]]             # laptop: UNSEEN accel
-    engine = MapperEngine(params, cfg)
-    print(f"[2/3] engine warmup (nmax buckets {engine.nmax_buckets}, "
+    cache_file = pathlib.Path(tempfile.mkdtemp()) / "strategies.json"
+    engine = MapperEngine(params, cfg, cache_path=cache_file)
+    print(f"[2/4] engine warmup (nmax buckets {engine.nmax_buckets}, "
           f"ticks <= {args.tick}) ...")
     t0 = time.perf_counter()
     n_programs = engine.warmup(serve_nets, ACCEL_ZOO["edge"],
@@ -76,24 +82,47 @@ def main():
                          float(rng.choice(budgets)),
                          serve_accels[rng.integers(3)])
               for _ in range(args.requests)]
-    print(f"[3/3] serving {args.requests} mixed requests in ticks of "
-          f"{args.tick} ...")
+    print(f"[3/4] async front door: {args.requests} mixed requests, "
+          f"one at a time, coalesced up to {args.tick}-wide (§14) ...")
+    # Requests arrive ~1 ms apart; the scheduler resolves cache hits at
+    # submit and flushes a lane once it fills or its deadline expires.
+    sched = AsyncMapperScheduler(engine, flush_ms=25.0, max_wave=args.tick)
     compiles_before = engine.compile_count
     t0 = time.perf_counter()
-    responses = []
-    for i in range(0, len(stream), args.tick):
-        responses += engine.serve(stream[i:i + args.tick])
+    futures = []
+    for i, req in enumerate(stream):
+        futures.append(sched.submit(req, now=i * 1e-3))
+        sched.pump(now=i * 1e-3)
+    sched.drain(now=len(stream) * 1e-3)
     wall = time.perf_counter() - t0
-    s = engine.stats
+    responses = [f.result() for f in futures]
+    s = engine.stats()
+    ss = s["scheduler"]
+    lat = sorted(f.latency_s for f in futures)
+    p50, p99 = lat[len(lat) // 2], lat[int(len(lat) * 0.99)]
 
     print(f"      {len(stream)} requests in {wall*1e3:.0f} ms = "
           f"{len(stream)/wall:.0f} req/s over {s['device_calls'] - n_programs}"
-          f" device calls")
+          f" device calls; e2e p50 {p50*1e3:.0f} ms / p99 {p99*1e3:.0f} ms")
+    print(f"      {ss['resolved_at_submit']} resolved at submit; flushes: "
+          f"{ss['flushes']}")
     print(f"      strategy cache: {s['strategy_hits']} hits / "
           f"{s['strategy_misses']} misses (rate {s['strategy_hit_rate']:.2f})"
           f", {s['tick_dedup']} in-tick dedups")
     print(f"      recompiles in steady state: "
           f"{engine.compile_count - compiles_before} (must be 0)")
+
+    # -- warm restart: a FRESH engine loads the persisted strategies --------
+    engine.save_cache()
+    warm = MapperEngine(params, cfg, cache_path=cache_file)
+    replay = warm.serve(stream)          # no warmup, no device: all cache hits
+    ws = warm.stats()
+    same = all(np.array_equal(a.strategy, b.strategy) and a.valid == b.valid
+               for a, b in zip(replay, responses))
+    print(f"[4/4] warm restart: fresh engine loaded "
+          f"{ws['strategy_cache']['entries']} persisted strategies, replayed "
+          f"the stream with {ws['device_calls']} device calls and "
+          f"{ws['compile_count']} compiles; bit-identical: {same}")
     if not any(r.valid for r in responses):
         print(f"      0/{len(responses)} within budget — every requested "
               f"budget is below the workloads' irreducible (all-SYNC) "

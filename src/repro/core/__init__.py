@@ -44,7 +44,9 @@ from .infer import (InferResult, dnnfuser_infer, s2s_infer,
 # re-exported here so front doors import one namespace.  The re-export is
 # lazy (PEP 562): an eager import would cycle when ``repro.serving`` is
 # imported first (serving pulls core submodules mid-initialization).
-_SERVING_API = ("MapperEngine", "MapRequest", "MapResponse", "StrategyCache")
+_SERVING_API = ("MapperEngine", "MapRequest", "MapResponse", "StrategyCache",
+                "AsyncMapperScheduler", "MapFuture", "AdmissionError",
+                "ReplicaGroup")
 
 
 def __getattr__(name):
@@ -77,6 +79,7 @@ __all__ = [
     "s2s_decode_step", "s2s_stream_init", "s2s_stream_step", "S2SBackend",
     "MapperBackend", "backend_for", "register_backend",
     "MapperEngine", "MapRequest", "MapResponse", "StrategyCache",
+    "AsyncMapperScheduler", "MapFuture", "AdmissionError", "ReplicaGroup",
     "TrajectoryDataset",
     "collect_teacher_data", "merge_datasets", "generate_teacher_corpus",
     "window_dataset", "returns_to_go", "TrainConfig", "train_model",

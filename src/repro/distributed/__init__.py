@@ -1,5 +1,7 @@
 from .sharding import (param_specs, batch_specs, decode_state_specs_sharded,
-                       shard_spec_for_path)
+                       shard_spec_for_path, data_parallel_mesh,
+                       replicate_tree, shard_leading_axis)
 
 __all__ = ["param_specs", "batch_specs", "decode_state_specs_sharded",
-           "shard_spec_for_path"]
+           "shard_spec_for_path", "data_parallel_mesh", "replicate_tree",
+           "shard_leading_axis"]

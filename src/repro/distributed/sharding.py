@@ -27,7 +27,7 @@ from ..launch.mesh import dp_axes, batch_axes
 
 __all__ = ["shard_spec_for_path", "param_specs", "batch_specs",
            "decode_state_specs_sharded", "logical_shard", "ambient_mesh",
-           "data_parallel_mesh"]
+           "data_parallel_mesh", "replicate_tree", "shard_leading_axis"]
 
 
 def data_parallel_mesh(n_devices: int | None = None):
@@ -38,6 +38,41 @@ def data_parallel_mesh(n_devices: int | None = None):
     import jax
     devs = jax.devices()[: n_devices or len(jax.devices())]
     return jax.sharding.Mesh(np.asarray(devs), ("data",))
+
+
+def replicate_tree(tree, mesh):
+    """Commit every leaf of ``tree`` fully replicated over ``mesh``.
+
+    The serving replicas' parameter placement (DESIGN §14): one copy of
+    the checkpointed params per device, so a tick sharded over the mesh
+    finds its weights locally on every replica."""
+    sh = NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), tree)
+
+
+def shard_leading_axis(tree, mesh, *, axis: str = "data"):
+    """Commit every leaf of ``tree`` sharded over ``mesh`` along its
+    leading axis (trailing dims replicated).
+
+    This is how a formed serving tick fans out over engine replicas: the
+    per-row condition arrays (stacked workloads, batches, budgets, hw
+    rows) all carry the request-lane axis first, and the fused episode is
+    an independent vmap over that axis, so GSPMD partitions it with zero
+    cross-device communication — each replica rolls out its slice of the
+    tick bit-identically to a single-device call.  Every leaf's leading
+    dim must divide the mesh size (the engine pads ticks to guarantee
+    it)."""
+    n = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    sh = NamedSharding(mesh, P(axis))
+
+    def put(x):
+        x = np.asarray(x) if not isinstance(x, jax.Array) else x
+        if x.ndim == 0 or x.shape[0] % n:
+            raise ValueError(
+                f"cannot shard leading axis of shape {getattr(x, 'shape', ())}"
+                f" over {n} replicas; pad the tick to a multiple of {n}")
+        return jax.device_put(x, sh)
+    return jax.tree_util.tree_map(put, tree)
 
 
 def ambient_mesh():

@@ -34,6 +34,8 @@ selection contract) the two backends are bit-identical, which is what lets
 from __future__ import annotations
 
 import functools
+import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +45,8 @@ from ..core import cost_model as _cm
 from ..core.accel import HW_FEATURE_DIM, hw_array, stack_hw
 
 __all__ = ["fusion_eval_population", "fusion_eval_population_stats",
-           "fusion_eval_grid", "fusion_eval_grid_stats"]
+           "fusion_eval_grid", "fusion_eval_grid_stats",
+           "compiled_backend_supported", "autotune_block", "backend_stats"]
 
 _UTIL_MIN = 1.0 / 4096.0
 # HW_FIELDS slots the kernel reads from its [C, HW_FEATURE_DIM] hw row
@@ -231,41 +234,199 @@ def _block_size(pop: int, bp: int) -> int:
     return b
 
 
+# -- compiled (non-interpret) lowering: probe / fallback / autotune ----------
+#
+# ``interpret=False`` is the production path on accelerator backends: the
+# kernel lowers to Mosaic/Triton instead of being emulated op-by-op.  Not
+# every backend can lower Pallas (CPU cannot — jax raises "Only interpret
+# mode is supported on CPU backend."), so support is PROBED once per
+# process with a trivial kernel and memoized; callers that ask for the
+# compiled path on an unsupported backend get a clearly-warned interpret
+# fallback with bit-identical results (the kernel body is backend-neutral
+# jnp — the DESIGN §13 parity contract) instead of a crash.  The fallback
+# is also armed at call time: if a *specific* program fails to lower even
+# though the probe passed, that call (and all later ones) falls back too.
+
+_COMPILED_OK: bool | None = None      # memoized probe result (None = unprobed)
+_FALLBACKS = 0                        # compiled->interpret retries served
+_LEGACY_BP = 128                      # pre-autotune default block width
+
+
+def compiled_backend_supported() -> bool:
+    """Can this process's default backend lower a Pallas kernel with
+    ``interpret=False``?  Probed once with a trivial copy kernel and
+    memoized (compiling the probe is milliseconds; re-raising per call
+    would be seconds)."""
+    global _COMPILED_OK
+    if _COMPILED_OK is None:
+        def _probe(x_ref, o_ref):
+            o_ref[...] = x_ref[...] * 2.0
+        try:
+            out = pl.pallas_call(
+                _probe,
+                out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+                interpret=False,
+            )(jnp.ones((8, 128), jnp.float32))
+            jax.block_until_ready(out)
+            _COMPILED_OK = True
+        except Exception:
+            _COMPILED_OK = False
+    return _COMPILED_OK
+
+
+def _note_fallback(reason: str) -> None:
+    global _COMPILED_OK, _FALLBACKS
+    _COMPILED_OK = False
+    _FALLBACKS += 1
+    if _FALLBACKS == 1:                       # warn once, count every time
+        warnings.warn(
+            f"fusion_eval: compiled (interpret=False) Pallas lowering is "
+            f"unavailable on backend '{jax.default_backend()}' — falling "
+            f"back to interpret mode (bit-identical, slower). {reason}",
+            RuntimeWarning, stacklevel=3)
+
+
+def backend_stats() -> dict:
+    """Operational visibility for the kernel lowering path: the probe
+    verdict (None until first asked), how many compiled calls fell back
+    to interpret, and the autotuned block widths chosen so far."""
+    return {
+        "backend": jax.default_backend(),
+        "compiled_supported": _COMPILED_OK,
+        "interpret_fallbacks": _FALLBACKS,
+        "autotuned_bp": dict(_AUTOTUNED),
+    }
+
+
+_AUTOTUNED: dict = {}                 # (P, pop bucket) -> chosen bp
+
+
+def autotune_block(P: int, pop: int,
+                   candidates: tuple = (32, 64, 128, 256)) -> int:
+    """Pick the fastest block width for a ``[pop, P]`` evaluation on the
+    compiled backend by timing each candidate on synthetic data (one
+    warm-up compile + best-of-2 timed calls per candidate); memoized per
+    (P, pop-bucket).  On interpret backends the block width only sets
+    emulation chunking, so the legacy default is returned untimed."""
+    key = (int(P), _block_size(pop, max(candidates)))
+    got = _AUTOTUNED.get(key)
+    if got is not None:
+        return got
+    if not compiled_backend_supported():
+        return _AUTOTUNED.setdefault(key, _block_size(pop, _LEGACY_BP))
+    import numpy as np
+    rng = np.random.default_rng(0)
+    popb = key[1]
+    strat = jnp.asarray(
+        rng.integers(-1, 5, size=(1, popb, P)).astype(np.float32))
+    wls = {"A": jnp.full((1, P), 1e4, jnp.float32),
+           "W": jnp.full((1, P), 1e4, jnp.float32),
+           "F": jnp.full((1, P), 1e6, jnp.float32),
+           "OE": jnp.ones((1, P), jnp.float32),
+           "UC": jnp.ones((1, P), jnp.float32),
+           "SKIP": jnp.full((1, P), -1, jnp.int32),
+           "n": jnp.full((1,), P - 1, jnp.int32),
+           "BPE": jnp.ones((1,), jnp.float32)}
+    batches = jnp.ones((1,), jnp.float32)
+    budgets = jnp.full((1,), 2.0 ** 24, jnp.float32)
+    hwrows = hw_array(stack_hw(None, 1))
+    best, best_t = None, float("inf")
+    for bp in candidates:
+        bpc = _block_size(popb, bp)
+        if best is not None and bpc == best:
+            continue
+        try:
+            out = _call_grid(strat, wls, batches, budgets, hwrows,
+                             bp=bpc, interpret=False)
+            jax.block_until_ready(out)
+            t = float("inf")
+            for _ in range(2):
+                t0 = time.perf_counter()
+                jax.block_until_ready(
+                    _call_grid(strat, wls, batches, budgets, hwrows,
+                               bp=bpc, interpret=False))
+                t = min(t, time.perf_counter() - t0)
+        except Exception:
+            continue
+        if t < best_t:
+            best, best_t = bpc, t
+    if best is None:                  # every candidate failed to lower
+        best = _block_size(pop, _LEGACY_BP)
+    return _AUTOTUNED.setdefault(key, best)
+
+
+def _call_grid(strategies, wls, batches, budgets, hwrows, *,
+               bp: int, interpret: bool):
+    """The one funnel to the jitted kernel: serves compiled requests on
+    unsupported backends via the warned interpret fallback, including
+    programs that fail to lower only at compile time."""
+    if not interpret and not compiled_backend_supported():
+        _note_fallback("(probe failed)")
+        interpret = True
+    try:
+        return _fusion_eval_grid_jit(strategies, wls, batches, budgets,
+                                     hwrows, bp=bp, interpret=interpret)
+    except Exception as e:
+        if interpret:
+            raise
+        _note_fallback(f"({type(e).__name__}: {e})")
+        return _fusion_eval_grid_jit(strategies, wls, batches, budgets,
+                                     hwrows, bp=bp, interpret=True)
+
+
 def _resolve_interpret(interpret: bool | None) -> bool:
+    """Default lowering: compiled wherever the backend supports it,
+    interpret otherwise (the probe, not a platform allowlist)."""
     if interpret is None:
-        return jax.default_backend() == "cpu"
+        return not compiled_backend_supported()
     return interpret
 
 
+def _resolve_bp(pop: int, P: int, bp: int | None, interpret: bool) -> int:
+    """Default block width: the autotuned choice on compiled backends,
+    the legacy default under interpret (where it only chunks emulation).
+    An explicit ``bp`` always wins (clamped to the population)."""
+    if bp is not None:
+        return _block_size(pop, bp)
+    if interpret:
+        return _block_size(pop, _LEGACY_BP)
+    return _block_size(pop, autotune_block(P, pop))
+
+
 def fusion_eval_grid(wls: dict, strategies, batches, budgets, hw, *,
-                     bp: int = 128, interpret: bool | None = None):
+                     bp: int | None = None, interpret: bool | None = None):
     """Pallas backend of ``cost_model.evaluate_grid`` (same contract):
     CostOut [C, POP] for strategies [C, POP, P] over stacked workloads,
     per-condition batches/budgets [C] and per-condition hardware (anything
     ``accel.stack_hw`` accepts).  Zero recompiles across accelerators for a
-    fixed block shape — the hw row is traced kernel data."""
+    fixed block shape — the hw row is traced kernel data.
+
+    ``interpret=None`` compiles wherever the backend can lower Pallas and
+    interprets elsewhere; ``bp=None`` autotunes the block width on
+    compiled backends (``autotune_block``)."""
     strategies = jnp.asarray(strategies)
-    C = strategies.shape[0]
-    out, _, _ = _fusion_eval_grid_jit(
+    C, POP, P = strategies.shape
+    interp = _resolve_interpret(interpret)
+    out, _, _ = _call_grid(
         strategies, _kernel_wls(wls), jnp.asarray(batches),
         jnp.asarray(budgets), hw_array(stack_hw(hw, C)),
-        bp=_block_size(strategies.shape[1], bp),
-        interpret=_resolve_interpret(interpret))
+        bp=_resolve_bp(POP, P, bp, interp), interpret=interp)
     return out
 
 
 def fusion_eval_grid_stats(wls: dict, strategies, batches, budgets, hw, *,
-                           bp: int = 128, interpret: bool | None = None):
+                           bp: int | None = None,
+                           interpret: bool | None = None):
     """Pallas backend of ``cost_model.evaluate_grid_stats``:
     ``(CostOut [C, POP], gid [C, POP, P], M_g [C, POP, P])`` — the group
     decomposition the G-Sampler repair operator consumes."""
     strategies = jnp.asarray(strategies)
-    C = strategies.shape[0]
-    return _fusion_eval_grid_jit(
+    C, POP, P = strategies.shape
+    interp = _resolve_interpret(interpret)
+    return _call_grid(
         strategies, _kernel_wls(wls), jnp.asarray(batches),
         jnp.asarray(budgets), hw_array(stack_hw(hw, C)),
-        bp=_block_size(strategies.shape[1], bp),
-        interpret=_resolve_interpret(interpret))
+        bp=_resolve_bp(POP, P, bp, interp), interpret=interp)
 
 
 _KERNEL_KEYS = ("A", "W", "F", "OE", "UC", "SKIP", "n", "BPE")
@@ -287,7 +448,7 @@ def _lift(wl: dict):
 
 
 def fusion_eval_population(strategies, wl: dict, *, batch, budget_bytes,
-                           hw, bp: int = 128,
+                           hw, bp: int | None = None,
                            interpret: bool | None = None):
     """Single-condition form: CostOut [pop] for strategies [pop, P] against
     one packed workload — ``cost_model.evaluate_population``'s contract.
@@ -301,7 +462,7 @@ def fusion_eval_population(strategies, wl: dict, *, batch, budget_bytes,
 
 
 def fusion_eval_population_stats(strategies, wl: dict, *, batch,
-                                 budget_bytes, hw, bp: int = 128,
+                                 budget_bytes, hw, bp: int | None = None,
                                  interpret: bool | None = None):
     """Single-condition stats form: ``(CostOut [pop], gid [pop, P],
     M_g [pop, P])`` — ``cost_model.evaluate_population_stats``'s contract."""

@@ -1,17 +1,27 @@
-"""The layered serving stack (DESIGN.md §12).
+"""The layered serving stack (DESIGN.md §12, §14).
 
-``engine.MapperEngine`` is the production front door over the traced
-serving core (``repro.core.infer.dnnfuser_infer_batch``): it buckets
-request shapes so steady-state traffic never recompiles (``bucketing``),
-caches solved strategies (``cache.StrategyCache``), and coalesces a mixed
-stream of (network, batch, budget, accelerator) queries into one fused
-device call per ``nmax`` bucket.
+``engine.MapperEngine`` is the production core over the traced serving
+episode (``repro.core.infer``): it buckets request shapes so steady-state
+traffic never recompiles (``bucketing``), caches solved strategies with a
+persistent cross-process file layer (``cache.StrategyCache``), coalesces
+a mixed stream of (network, batch, budget, accelerator) queries into
+fused device calls, and optionally shards those calls across data-parallel
+device replicas (``replicas.ReplicaGroup``).
+``scheduler.AsyncMapperScheduler`` is the async front door: continuous
+batching over a live request stream with admission control and
+deadline-bounded flushes.
 """
 from .bucketing import (batch_bucket, budget_bucket, coalesce,
-                        default_nmax_buckets, nmax_bucket, pow2_buckets)
-from .cache import StrategyCache
+                        default_nmax_buckets, nmax_bucket, pow2_buckets,
+                        pow2_chunks)
+from .cache import CACHE_FORMAT, StrategyCache
 from .engine import MapperEngine, MapRequest, MapResponse
+from .replicas import ReplicaGroup
+from .scheduler import AdmissionError, AsyncMapperScheduler, MapFuture
 
 __all__ = ["MapperEngine", "MapRequest", "MapResponse", "StrategyCache",
+           "CACHE_FORMAT", "AsyncMapperScheduler", "MapFuture",
+           "AdmissionError", "ReplicaGroup",
            "batch_bucket", "budget_bucket", "coalesce",
-           "default_nmax_buckets", "nmax_bucket", "pow2_buckets"]
+           "default_nmax_buckets", "nmax_bucket", "pow2_buckets",
+           "pow2_chunks"]

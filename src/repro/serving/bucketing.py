@@ -30,7 +30,7 @@ from collections import OrderedDict
 from typing import Callable, Iterable, Sequence
 
 __all__ = ["batch_bucket", "nmax_bucket", "budget_bucket",
-           "default_nmax_buckets", "pow2_buckets", "coalesce"]
+           "default_nmax_buckets", "pow2_buckets", "pow2_chunks", "coalesce"]
 
 MB = float(2 ** 20)
 
@@ -46,6 +46,22 @@ def pow2_buckets(max_bucket: int) -> tuple[int, ...]:
     """All request-batch buckets up to ``batch_bucket(max_bucket)``."""
     top = batch_bucket(max_bucket)
     return tuple(1 << i for i in range(top.bit_length()))
+
+
+def pow2_chunks(c: int, cap: int) -> tuple[int, ...]:
+    """Split a group of ``c`` requests into device-call chunk sizes, each
+    no wider than ``cap`` (the widest warmed pow2 bucket).
+
+    The oversized-tick escape hatch (DESIGN §14): a tick wider than the
+    warmed set must NOT pad up to an unwarmed pow2 program — it is cut
+    into full ``cap``-wide chunks plus one remainder chunk that pads to
+    its own (warmed, <= cap) pow2 bucket.  E.g. ``pow2_chunks(23, 8) ==
+    (8, 8, 7)`` — the trailing 7 pads to the warmed 8-lane program."""
+    if c < 1:
+        raise ValueError(f"need at least one request, got {c}")
+    cap = batch_bucket(cap)
+    full, rem = divmod(c, cap)
+    return (cap,) * full + ((rem,) if rem else ())
 
 
 def nmax_bucket(n_pos: int, buckets: Sequence[int]) -> int:

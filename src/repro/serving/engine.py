@@ -1,42 +1,59 @@
-"""MapperEngine: the layered serving front door (DESIGN.md §12).
+"""MapperEngine: the layered serving front door (DESIGN.md §12, §14).
 
 Layer map — each layer only talks to the one below:
 
  - **core** (``repro.core.infer``): the traced episode.  Everything that
    varies per request — workload, batch, budget, accelerator — is per-row
-   DATA of one jitted program (``dnnfuser_infer_batch`` over
+   DATA of one jitted program (``infer._fused_batch`` over
    ``cost_model.stack_workloads``), so a mixed batch of networks serves in
    one device call;
  - **engine** (this module): checkpointed params + everything a device
    program must not recompute per request — a packed-workload cache, shape
    bucketing (``bucketing``: pow2 request batches x ``nmax`` buckets, so
    steady-state traffic hits a warmed, countable set of compiled
-   programs), and a solved-strategy LRU (``cache.StrategyCache``);
- - **front door** (``examples/serve_mapper.py``,
-   ``benchmarks/bench_serving.py``): accepts a request stream, calls
-   :meth:`MapperEngine.serve` per arrival tick.
+   programs), oversized-tick chunking (``bucketing.pow2_chunks``), a
+   solved-strategy cache with a persistent cross-process file layer
+   (``cache.StrategyCache``), and optional data-parallel device replicas
+   (``replicas.ReplicaGroup``);
+ - **front door** (``scheduler.AsyncMapperScheduler``,
+   ``examples/serve_mapper.py``, ``benchmarks/bench_serving.py``): accepts
+   a request stream, forms ticks, calls :meth:`MapperEngine.serve`.
+
+Determinism contract (DESIGN §14): by default the solving identity of a
+request is its EXACT condition ``(workload, batch, f32 budget, accel)``
+— dedup and cache hits only ever reuse a strategy solved under the very
+same condition — so batched/coalesced/replicated serving is bit-identical
+to serving each request alone, independent of arrival order and tick
+formation.  ``approx_budget_sharing=True`` restores the pre-§14 quantized
+budget keys (higher hit rates, per-request validity still re-derived) at
+the cost of that per-request bit-identity.
 
 Compile accounting: the engine routes every device call through the one
 module-level jitted entry point with a closed set of shape signatures
-``(nmax bucket, batch bucket)``; ``compile_count`` increments exactly when
-a signature is first materialized.  After :meth:`warmup` covers the set,
-steady-state serving MUST NOT grow it — the recompile-churn guard
-(``tests/test_serving.py``) and the serving benchmark both assert on it.
+``(nmax bucket, padded lane count)``; ``compile_count`` increments exactly
+when a signature is first materialized.  After :meth:`warmup` covers the
+set, steady-state serving MUST NOT grow it — oversized ticks are split
+into warmed pow2 chunks instead of padding up to an unwarmed program —
+which the recompile-churn guards (``tests/test_serving.py``,
+``tests/test_scheduler.py``) and the serving benchmark assert on.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+import hashlib
+from dataclasses import dataclass
 
 import numpy as np
 
-from ..core.accel import AccelConfig, accel_features
+from ..core.accel import AccelConfig, HwVec, accel_features, hw_array
 from ..core.backend import backend_for
-from ..core.infer import dnnfuser_infer_batch
+from ..core import infer as _infer
 from ..core import cost_model as cm
 from .bucketing import (MB, batch_bucket, budget_bucket, coalesce,
-                        default_nmax_buckets, nmax_bucket, pow2_buckets)
+                        default_nmax_buckets, nmax_bucket, pow2_buckets,
+                        pow2_chunks)
 from .cache import StrategyCache
+from .replicas import ReplicaGroup
 
 __all__ = ["MapRequest", "MapResponse", "MapperEngine"]
 
@@ -60,9 +77,10 @@ class MapResponse:
 
     ``strategy`` is trimmed to the workload's true ``n + 1`` positions
     (positions the padded device rollout masked to SYNC are dropped).
-    ``valid`` is re-derived against THIS request's exact budget even when
-    the strategy came from the cache.  ``cached`` marks a strategy-cache
-    hit (no device work)."""
+    ``valid`` is re-derived against THIS request's budget at serving
+    precision (f32, matching the device comparison) even when the
+    strategy came from the cache.  ``cached`` marks a strategy-cache hit
+    or an in-tick duplicate (no extra device work)."""
     workload: str
     strategy: np.ndarray
     latency: float
@@ -81,6 +99,27 @@ def _accel_key(accel: AccelConfig) -> tuple:
     return tuple(np.round(feats, 6).tolist())
 
 
+def _fits(peak: float, budget: float) -> bool:
+    """Budget validity at serving precision: the device compares f32 peak
+    to the f32 budget it was handed, so every host-side re-derivation
+    compares in f32 too — a cache hit can never flip validity vs the
+    device answer for the same condition."""
+    return bool(np.float32(peak) <= np.float32(budget))
+
+
+def _fingerprint(params, cfg) -> str:
+    """Checkpoint identity for persisted caches: a digest over the config
+    repr and every param leaf's bytes.  Two engines share cache files iff
+    they would produce bit-identical strategies."""
+    import jax
+    h = hashlib.sha256(repr(cfg).encode())
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        h.update(str(path).encode())
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()[:16]
+
+
 class MapperEngine:
     """One checkpointed mapper serving heterogeneous traffic, recompile-free
     in steady state.
@@ -88,15 +127,26 @@ class MapperEngine:
     Parameters: ``params``/``cfg`` — the checkpointed model (any registered
     ``MapperBackend`` config; ``cfg.max_steps`` caps the largest usable
     ``nmax`` bucket); ``nmax_buckets`` — the workload-length buckets
-    (default ``bucketing.default_nmax_buckets``); ``budget_quantum`` —
-    strategy-cache budget quantization (bytes); ``strategy_capacity`` —
-    LRU size; ``repair`` — the inference-time budget guard.
+    (default ``bucketing.default_nmax_buckets``); ``max_coalesce`` — the
+    widest device call the engine will form (wider ticks chunk);
+    ``strategy_capacity`` — LRU size; ``budget_quantum`` +
+    ``approx_budget_sharing`` — the strategy-cache budget identity (exact
+    f32 by default; quantized sharing opt-in); ``cache_path`` — persistent
+    strategy-cache file, read-through loaded at init; ``checkpoint_id`` —
+    cache identity override (defaults to a params fingerprint);
+    ``replicas`` — a ``ReplicaGroup`` or replica count for data-parallel
+    multi-device serving; ``repair`` — the inference-time budget guard.
     """
 
     def __init__(self, params, cfg, *, repair: bool = True,
                  nmax_buckets: tuple[int, ...] | None = None,
+                 max_coalesce: int = 16,
                  strategy_capacity: int = 4096,
-                 budget_quantum: float = MB):
+                 budget_quantum: float = MB,
+                 approx_budget_sharing: bool = False,
+                 cache_path=None,
+                 checkpoint_id: str | None = None,
+                 replicas: ReplicaGroup | int | None = None):
         if nmax_buckets is None:
             nmax_buckets = default_nmax_buckets(cfg.max_steps)
         if max(nmax_buckets) > cfg.max_steps:
@@ -108,32 +158,76 @@ class MapperEngine:
         self.backend = backend_for(cfg)          # fail early on bad cfg
         self.repair = repair
         self.nmax_buckets = tuple(sorted(nmax_buckets))
+        self.max_coalesce = batch_bucket(max_coalesce)
         self.budget_quantum = float(budget_quantum)
-        self.strategies = StrategyCache(strategy_capacity)
-        self._packed: dict = {}                  # (name, bpe, nmax) -> wl
-        self._compiled: set = set()              # (nmax bucket, C bucket)
+        self.approx_budget_sharing = bool(approx_budget_sharing)
+        if isinstance(replicas, int):
+            replicas = ReplicaGroup(replicas)
+        self.replicas = replicas
+        if replicas is not None and replicas.n > self.max_coalesce:
+            raise ValueError(f"{replicas.n} replicas need max_coalesce >= "
+                             f"{replicas.n}, got {self.max_coalesce}")
+        self._params_dev = (replicas.replicate_params(params)
+                            if replicas is not None else params)
+        self.checkpoint_id = checkpoint_id or _fingerprint(params, cfg)
+        self.strategies = StrategyCache(strategy_capacity, context={
+            "checkpoint": self.checkpoint_id,
+            "budget_sharing": ("approx" if self.approx_budget_sharing
+                               else "exact"),
+            "budget_quantum": self.budget_quantum,
+        })
+        self.cache_path = cache_path
+        if cache_path is not None:
+            self.strategies.load(cache_path)
+        self.scheduler = None                    # backref set by the scheduler
+        self._packed: dict = {}                  # (name, bpe, nmax) -> np dict
+        self._hw_rows: dict = {}                 # accel -> (np [10], np [F])
+        self._compiled: set = set()              # (nmax bucket, padded lanes)
+        self._warmed_cap: int | None = None      # widest warmed lane count
         self.compile_count = 0
         self.requests_served = 0
         self.device_calls = 0
         self.rows_padded = 0
         self.tick_dedup = 0
+        self.coalesce_hist: dict[int, int] = {}  # true chunk width -> count
 
     # -- request planning ----------------------------------------------------
 
+    @property
+    def chunk_cap(self) -> int:
+        """Widest device call the engine currently forms: the warmed pow2
+        cap once :meth:`warmup` has run, else ``max_coalesce``."""
+        return self._warmed_cap or self.max_coalesce
+
     def _pack(self, workload, accel: AccelConfig, nmax: int) -> dict:
-        """Packed-workload cache: packing depends on the accelerator only
-        through ``bytes_per_elem`` (the evaluators rescale in-graph,
-        DESIGN §11), so the key is (name, bpe, nmax)."""
+        """Packed-workload cache (host numpy form — stacking per tick is
+        pure ``np.stack``, no per-call device traffic): packing depends on
+        the accelerator only through ``bytes_per_elem`` (the evaluators
+        rescale in-graph, DESIGN §11), so the key is (name, bpe, nmax)."""
         key = (workload.name, float(accel.bytes_per_elem), nmax)
         wl = self._packed.get(key)
         if wl is None:
-            wl = self._packed[key] = cm.pack_workload(workload, accel, nmax)
+            packed = cm.pack_workload(workload, accel, nmax)
+            wl = self._packed[key] = {k: np.asarray(v)
+                                      for k, v in packed.items()}
         return wl
 
+    def _hw_row(self, accel: AccelConfig) -> tuple:
+        """Cached (raw hw vector, normalized feature row) for one accel."""
+        ent = self._hw_rows.get(accel)
+        if ent is None:
+            raw = np.asarray(hw_array(accel), np.float32)
+            feat = (np.asarray(accel_features(accel), np.float32)
+                    if getattr(self.cfg, "hw_dim", 0) else None)
+            ent = self._hw_rows[accel] = (raw, feat)
+        return ent
+
     def _strategy_key(self, req: MapRequest) -> tuple:
-        return (req.workload.name, int(req.batch),
-                budget_bucket(req.budget_bytes, self.budget_quantum),
-                _accel_key(req.accel))
+        if self.approx_budget_sharing:
+            bid = budget_bucket(req.budget_bytes, self.budget_quantum)
+        else:
+            bid = float(np.float32(req.budget_bytes))  # serving precision
+        return (req.workload.name, int(req.batch), bid, _accel_key(req.accel))
 
     # -- serving -------------------------------------------------------------
 
@@ -142,9 +236,10 @@ class MapperEngine:
 
         Strategy-cache hits are answered without device work; misses are
         deduplicated within the tick (identical condition keys share one
-        lane), coalesced by ``nmax`` bucket, padded to a pow2 request
-        batch, and served in one fused device call per bucket.  Responses
-        keep the request order."""
+        lane), coalesced by ``nmax`` bucket, chunked to at most
+        :attr:`chunk_cap` lanes, padded to a pow2 request batch, and
+        served in fused device calls.  Responses keep the request
+        order."""
         out: list = [None] * len(requests)
         pending: dict = {}                       # key -> miss record
         for i, req in enumerate(requests):
@@ -155,10 +250,7 @@ class MapperEngine:
                 continue
             hit = self.strategies.get(key)
             if hit is not None:
-                strat, lat, peak, speed = hit
-                out[i] = MapResponse(req.workload.name, strat, lat, peak,
-                                     speed, valid=peak <= req.budget_bytes,
-                                     cached=True)
+                out[i] = self._hit_response(req, hit)
             else:
                 pending[key] = (key, req, [(i, req)])
         groups = coalesce(
@@ -172,19 +264,53 @@ class MapperEngine:
     def serve_one(self, request: MapRequest) -> MapResponse:
         return self.serve([request])[0]
 
+    def serve_cached(self, request: MapRequest) -> MapResponse | None:
+        """Answer from the strategy cache alone, or None on a miss.
+
+        The scheduler's admission fast path: a hit resolves immediately
+        instead of queueing for a tick (no device work, no flush
+        latency).  A hit counts exactly like one inside :meth:`serve`; a
+        miss does NOT count — the request will queue and re-probe in its
+        tick, and that probe is the one real miss."""
+        key = self._strategy_key(request)
+        if key not in self.strategies:           # peek: miss counted in serve
+            return None
+        hit = self.strategies.get(key)
+        if hit is None:                          # racy eviction between checks
+            return None
+        self.requests_served += 1
+        return self._hit_response(request, hit)
+
+    def _hit_response(self, req: MapRequest, entry: tuple) -> MapResponse:
+        strat, lat, peak, speed = entry
+        return MapResponse(req.workload.name, strat, lat, peak, speed,
+                           valid=_fits(peak, req.budget_bytes), cached=True)
+
     def _serve_bucket(self, nb: int, group: list, out: list) -> None:
         """Solve one group of miss records ``(key, req, [out indices])``
-        sharing an ``nmax`` bucket in one fused device call."""
+        sharing an ``nmax`` bucket, in fused device calls of at most
+        :attr:`chunk_cap` lanes each (the oversized-tick escape hatch:
+        a group wider than the warmed set is cut into warmed pow2 chunks
+        rather than padded up to an unwarmed program)."""
+        start = 0
+        for width in pow2_chunks(len(group), self.chunk_cap):
+            self._serve_chunk(nb, group[start:start + width], out)
+            start += width
+
+    def _serve_chunk(self, nb: int, group: list, out: list) -> None:
         C = len(group)
         Cb = batch_bucket(C)
+        if self.replicas is not None:
+            Cb = self.replicas.pad_width(Cb)     # >= one lane per replica
         rows = [self._pack(r.workload, r.accel, nb) for _, r, _ in group]
-        accels = [r.accel for _, r, _ in group]
-        batches = [float(r.batch) for _, r, _ in group]
-        budgets = [float(r.budget_bytes) for _, r, _ in group]
+        hw_raw, hw_feat = zip(*(self._hw_row(r.accel) for _, r, _ in group))
+        batches = [np.float32(r.batch) for _, r, _ in group]
+        budgets = [np.float32(r.budget_bytes) for _, r, _ in group]
         pad = Cb - C
         if pad:                                  # clone a real row: vmap
             rows += rows[:1] * pad               # lanes are independent
-            accels += accels[:1] * pad
+            hw_raw += hw_raw[:1] * pad
+            hw_feat += hw_feat[:1] * pad
             batches += batches[:1] * pad
             budgets += budgets[:1] * pad
             self.rows_padded += pad
@@ -192,72 +318,133 @@ class MapperEngine:
         if sig not in self._compiled:
             self._compiled.add(sig)
             self.compile_count += 1
-        res = dnnfuser_infer_batch(
-            self.params, self.cfg, cm.stack_workloads(rows),
-            np.asarray(batches, np.float32), np.asarray(budgets, np.float32),
-            accels, repair=self.repair)
+        wl = {k: np.stack([r[k] for r in rows]) for k in rows[0]}
+        hwv = HwVec(*np.moveaxis(np.stack(hw_raw), -1, 0))
+        hwf = None if hw_feat[0] is None else np.stack(hw_feat)
+        args = (wl, np.asarray(batches, np.float32),
+                np.asarray(budgets, np.float32), hwv, hwf)
+        if self.replicas is not None:
+            args = self.replicas.shard_tick(args)
+            self.replicas.account_rows(Cb)
+        res = _infer._fused_batch(self._params_dev, self.cfg, *args,
+                                  self.repair, self.backend, True)
+        res = {k: np.asarray(v) for k, v in res.items()}
         self.device_calls += 1
+        self.coalesce_hist[C] = self.coalesce_hist.get(C, 0) + 1
         for lane, (key, req, idxs) in enumerate(group):
             strat = np.asarray(res["strategy"][lane][: req.workload.n + 1])
             peak = float(res["peak_mem"][lane])
             entry = (strat, float(res["latency"][lane]), peak,
                      float(res["speedup"][lane]))
             self.strategies.put(key, entry)
-            # duplicates shared the lane, but each keeps its own validity:
-            # the lane solved under the FIRST request's exact budget, and a
-            # reused strategy must never be called valid for a (same-bucket
-            # but tighter) budget it overflows
+            # in-tick duplicates share the lane.  Under the default exact
+            # budget identity every duplicate carries the SAME budget, so
+            # the device's own validity applies to all of them; under
+            # approx sharing a duplicate may carry a different (same-
+            # bucket) budget and validity is re-derived, f32-faithfully,
+            # against its own budget.
             for k, (i, req_i) in enumerate(idxs):
-                valid = (bool(res["valid"][lane]) if k == 0
-                         else peak <= req_i.budget_bytes)
+                valid = (bool(res["valid"][lane])
+                         if req_i.budget_bytes == req.budget_bytes
+                         else _fits(peak, req_i.budget_bytes))
                 out[i] = MapResponse(req_i.workload.name, *entry,
                                      valid=valid, cached=k > 0)
+
+    # -- persistence (DESIGN §14) --------------------------------------------
+
+    def save_cache(self, path=None) -> int:
+        """Persist the strategy cache (merge-write; see
+        ``StrategyCache.save``).  Returns the number of entries written."""
+        path = path if path is not None else self.cache_path
+        if path is None:
+            raise ValueError("no cache path: pass one here or construct the "
+                             "engine with cache_path=")
+        return self.strategies.save(path)
+
+    def load_cache(self, path=None, *, strict: bool = False) -> int:
+        """Read-through load of a persisted strategy cache.  Returns the
+        number of entries loaded (0 on missing/stale files unless
+        ``strict``)."""
+        path = path if path is not None else self.cache_path
+        if path is None:
+            raise ValueError("no cache path: pass one here or construct the "
+                             "engine with cache_path=")
+        return self.strategies.load(path, strict=strict)
 
     # -- warmup & stats ------------------------------------------------------
 
     def warmup(self, workloads: list, accel: AccelConfig | None = None,
-               *, max_tick: int = 16) -> int:
-        """Materialize every (nmax bucket, batch bucket) program traffic
-        over ``workloads`` can hit, for arrival ticks up to ``max_tick``
-        requests.  Returns the number of programs compiled.  After warmup,
-        serving any mix of these workloads in ticks of <= ``max_tick``
-        requests triggers ZERO new compilations (the churn guard).
+               *, max_tick: int | None = None) -> int:
+        """Materialize every (nmax bucket, padded lane count) program
+        traffic over ``workloads`` can hit.  Returns the number of
+        programs compiled.  After warmup, serving any mix of these
+        workloads triggers ZERO new compilations for ticks of ANY size:
+        ticks wider than the warmed cap are chunked into warmed pow2
+        programs (``bucketing.pow2_chunks``), never padded up to an
+        unwarmed one.
 
-        The warmed set is independent of ``cost_model``'s evaluator
-        backend: serving rides the §9 prefix-carry episode, not the §13
-        grid evaluator, so flipping ``set_default_evaluator`` never
-        invalidates a warmed engine (``stats`` reports the active backend
-        for operational visibility)."""
+        ``max_tick`` (default ``max_coalesce``) bounds the warmed lane
+        counts; it is clamped to ``max_coalesce`` since the engine never
+        forms a wider call.  The warmed set is independent of
+        ``cost_model``'s evaluator backend: serving rides the §9
+        prefix-carry episode, not the §13 grid evaluator, so flipping
+        ``set_default_evaluator`` never invalidates a warmed engine
+        (``stats`` reports the active backend for operational
+        visibility)."""
         if accel is None:
             accel = AccelConfig()
+        if max_tick is None:
+            max_tick = self.max_coalesce
+        cap = batch_bucket(min(max_tick, self.max_coalesce))
         before = self.compile_count
         reps: dict[int, object] = {}
         for w in workloads:
             reps.setdefault(nmax_bucket(w.n + 1, self.nmax_buckets), w)
         for nb, w in sorted(reps.items()):
-            for cb in pow2_buckets(max_tick):
-                if (nb, cb) in self._compiled:
+            for cb in pow2_buckets(cap):
+                eff = cb if self.replicas is None \
+                    else self.replicas.pad_width(cb)
+                if (nb, eff) in self._compiled:
                     continue
                 reqs = [MapRequest(w, 1 + i % 4, (8 + i) * MB, accel)
                         for i in range(cb)]
                 sink: list = [None] * cb
                 self._serve_bucket(nb, [(self._strategy_key(r), r, [(j, r)])
                                         for j, r in enumerate(reqs)], sink)
+        self._warmed_cap = max(self._warmed_cap or 0, cap)
         return self.compile_count - before
 
-    @property
     def stats(self) -> dict:
-        """Serving counters (the benchmark's reported schema)."""
-        return {
+        """One observability dict across every serving layer (DESIGN §14):
+        the engine's batching/compile counters, the strategy cache with
+        its persistence counters, per-replica accounting when replicated,
+        and the attached scheduler's queue counters when one is driving
+        this engine."""
+        s = {
             "requests_served": self.requests_served,
             "device_calls": self.device_calls,
             "compile_count": self.compile_count,
             "cost_evaluator": cm.default_evaluator(),
             "compiled_shapes": sorted(self._compiled),
+            "chunk_cap": self.chunk_cap,
             "rows_padded": self.rows_padded,
             "tick_dedup": self.tick_dedup,
+            "coalesce_width_hist": dict(sorted(self.coalesce_hist.items())),
             "packed_workloads": len(self._packed),
             "strategy_hits": self.strategies.hits,
             "strategy_misses": self.strategies.misses,
             "strategy_hit_rate": self.strategies.hit_rate,
+            "strategy_cache": {
+                "entries": len(self.strategies),
+                "capacity": self.strategies.capacity,
+                "shared_hits": self.strategies.shared_hits,
+                "loads": self.strategies.loads,
+                "saves": self.strategies.saves,
+                "stale_skipped": self.strategies.stale_skipped,
+            },
+            "replicas": (None if self.replicas is None
+                         else self.replicas.stats()),
         }
+        if self.scheduler is not None:
+            s["scheduler"] = self.scheduler.stats()
+        return s

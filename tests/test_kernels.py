@@ -262,3 +262,50 @@ def test_model_pallas_path_matches_xla():
     lp, _ = model.forward(params, cfg, batch, impl="pallas")
     np.testing.assert_allclose(np.asarray(lx), np.asarray(lp),
                                rtol=2e-4, atol=2e-4)
+
+
+# --- compiled (non-interpret) lowering: probe / fallback / autotune ---------
+
+def test_compiled_backend_probe_memoized_on_cpu():
+    """The CPU container cannot lower Pallas compiled; the probe must say
+    so (memoized — the second call is free)."""
+    assert fusion_eval.compiled_backend_supported() is False
+    assert fusion_eval.compiled_backend_supported() is False
+    s = fusion_eval.backend_stats()
+    assert s["backend"] == "cpu" and s["compiled_supported"] is False
+
+
+def test_compiled_request_falls_back_bit_identically():
+    """Explicitly asking for interpret=False on an unsupported backend
+    must WARN and serve the interpret result — bit-identical, no crash
+    (the DESIGN §14 graceful-fallback contract)."""
+    import warnings
+    want = ops.fusion_eval_population(_FE_POP, _FE_PACKED, batch=32.0,
+                                      budget_bytes=20 * MB, hw=PAPER_ACCEL,
+                                      interpret=True)
+    before = fusion_eval.backend_stats()["interpret_fallbacks"]
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        got = ops.fusion_eval_population(_FE_POP, _FE_PACKED, batch=32.0,
+                                         budget_bytes=20 * MB,
+                                         hw=PAPER_ACCEL, interpret=False)
+    _assert_costout_equal(got, want)
+    stats = fusion_eval.backend_stats()
+    assert stats["interpret_fallbacks"] == before + 1
+    if before == 0:                              # warn once, count always
+        assert any("interpret mode" in str(w.message) for w in rec)
+    # the default (interpret=None) resolves to the probe verdict, so the
+    # same call without flags is also bit-identical
+    auto = ops.fusion_eval_population(_FE_POP, _FE_PACKED, batch=32.0,
+                                      budget_bytes=20 * MB, hw=PAPER_ACCEL)
+    _assert_costout_equal(auto, want)
+
+
+def test_autotune_block_on_interpret_backend_returns_legacy_default():
+    """Autotuning times compiled programs; under interpret it must return
+    the legacy block width untimed (and memoize it), so bp=None keeps
+    CPU-CI behavior identical to the old bp=128 default."""
+    bp = fusion_eval.autotune_block(64, _FE_POP.shape[0])
+    assert bp == fusion_eval._block_size(_FE_POP.shape[0], 128)
+    key = (64, fusion_eval._block_size(_FE_POP.shape[0], 256))
+    assert fusion_eval.backend_stats()["autotuned_bp"][key] == bp

@@ -1,0 +1,107 @@
+"""Data-parallel engine replicas (DESIGN.md §14).
+
+The replica contract: sharding a formed tick's independent vmap lanes
+across a ("data",) mesh is a PLACEMENT decision, not a numeric one —
+per-row results are bit-identical to the single-device program, and the
+engine's compile accounting/warmed-set closure still hold.
+
+The container exposes one physical CPU device, so the multi-device path
+runs in a subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count``
+(exactly how the CI scaling-smoke job runs it); the single-device
+``ReplicaGroup(1)`` path runs in-process.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ACCEL_ZOO, DTConfig, dt_init
+from repro.serving import MapperEngine, MapRequest, ReplicaGroup
+from repro.workloads import tiny_cnn
+
+MB = 2 ** 20
+
+CFG = DTConfig(max_steps=20)
+PARAMS = dt_init(jax.random.PRNGKey(2), CFG)
+
+
+def test_replica_group_validates_count():
+    avail = len(jax.devices())
+    with pytest.raises(ValueError, match="visible"):
+        ReplicaGroup(avail + 1)
+    with pytest.raises(ValueError, match="visible"):
+        ReplicaGroup(0)
+    g = ReplicaGroup(1)
+    assert g.n == 1 and g.pad_width(1) == 1
+    s = g.stats()
+    assert s["n_replicas"] == 1 and s["sharded_calls"] == 0
+
+
+def test_single_replica_engine_bit_identical_inprocess():
+    """replicas=1 exercises the full placement path (replicated params,
+    sharded ticks) on one device — results must match the plain engine."""
+    plain = MapperEngine(PARAMS, CFG)
+    rep = MapperEngine(PARAMS, CFG, replicas=1)
+    reqs = [MapRequest(tiny_cnn(), 1 + i % 3, (6 + i) * MB,
+                       ACCEL_ZOO["edge"]) for i in range(5)]
+    base = [plain.serve_one(r) for r in reqs]
+    out = rep.serve(reqs)
+    for a, b in zip(out, base):
+        assert (a.strategy == b.strategy).all()
+        assert a.latency == b.latency and a.valid == b.valid
+    rs = rep.stats()["replicas"]
+    assert rs["n_replicas"] == 1 and rs["sharded_calls"] >= 1
+    assert sum(rs["rows_per_replica"]) >= len(reqs)
+
+
+_SUBPROC = textwrap.dedent("""
+    import jax, numpy as np
+    assert len(jax.devices()) == 2, jax.devices()
+    from repro.core import ACCEL_ZOO, DTConfig, dt_init
+    from repro.serving import MapperEngine, MapRequest
+    from repro.workloads import tiny_cnn
+
+    MB = 2 ** 20
+    cfg = DTConfig(max_steps=8, n_blocks=1, d_model=32, d_ff=64)
+    params = dt_init(jax.random.PRNGKey(2), cfg)
+    reqs = [MapRequest(tiny_cnn(), 1 + i % 3, (6 + i) * MB,
+                       ACCEL_ZOO["edge"]) for i in range(5)]
+    single = MapperEngine(params, cfg)
+    base = [single.serve_one(r) for r in reqs]
+    rep = MapperEngine(params, cfg, replicas=2)
+    out = rep.serve(reqs)
+    for a, b in zip(out, base):
+        assert (a.strategy == b.strategy).all()
+        assert a.latency == b.latency and a.peak_mem == b.peak_mem
+        assert a.valid == b.valid
+    rs = rep.stats()["replicas"]
+    assert rs["n_replicas"] == 2 and len(rs["devices"]) == 2
+    assert rs["sharded_calls"] >= 1
+    assert rs["rows_per_replica"][0] == rs["rows_per_replica"][1] > 0
+    # replica padding: even a 1-request tick pads to one lane per replica
+    calls = rep.device_calls
+    rep.serve([MapRequest(tiny_cnn(), 4, 32 * MB, ACCEL_ZOO["edge"])])
+    assert rep.device_calls == calls + 1
+    assert rep.rows_padded >= 1                  # 1 request -> 2 lanes
+    print("REPLICA_PARITY_OK")
+""")
+
+
+def test_two_replica_parity_subprocess():
+    """Shard a tick across 2 (virtual) devices; per-row results must be
+    bit-identical to the single-device engine in the same process."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=2").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                          capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "REPLICA_PARITY_OK" in proc.stdout

@@ -171,11 +171,40 @@ def test_engine_zero_recompiles_after_warmup():
     if jit_cache is not None:                    # cross-check jax's cache
         assert jit_cache() == jit_before, \
             "engine counter says 0 but jax compiled new programs"
-    assert eng.stats["strategy_misses"] > 0      # it did real device work
+    assert eng.stats()["strategy_misses"] > 0    # it did real device work
+
+
+def test_engine_exact_budget_identity_is_default():
+    """DESIGN §14: by default the strategy identity is the EXACT condition
+    — a nearby (same-quantum) budget is a different condition and must
+    NOT reuse the cached strategy, which is what makes coalesced serving
+    bit-identical to per-request serving regardless of arrival order."""
+    eng = MapperEngine(PARAMS, CFG)
+    req = MapRequest(vgg16(), 64, 20 * MB, ACCEL_ZOO["edge"])
+    r1 = eng.serve_one(req)
+    assert not r1.cached
+    r2 = eng.serve_one(req)                      # identical condition: hit
+    assert r2.cached and (r2.strategy == r1.strategy).all()
+    near = eng.serve_one(MapRequest(vgg16(), 64, 20 * MB + 1000,
+                                    ACCEL_ZOO["edge"]))
+    assert not near.cached                       # nearby budget: solved fresh
+    # in-tick dedup follows the same identity: only EXACT duplicates share
+    # a lane
+    eng2 = MapperEngine(PARAMS, CFG)
+    eng2.serve([req, MapRequest(vgg16(), 64, 20 * MB + 1000,
+                                ACCEL_ZOO["edge"])])
+    assert eng2.tick_dedup == 0
+    eng2.serve([MapRequest(resnet18(), 32, 14 * MB, ACCEL_ZOO["mobile"]),
+                MapRequest(resnet18(), 32, 14 * MB, ACCEL_ZOO["mobile"])])
+    assert eng2.tick_dedup == 1
 
 
 def test_engine_strategy_cache_hits_and_budget_quantization():
-    eng = MapperEngine(PARAMS, CFG, budget_quantum=MB)
+    """The opt-in ``approx_budget_sharing=True`` mode restores quantized
+    budget identities (same-quantum conditions share one solved strategy)
+    while validity stays per-request."""
+    eng = MapperEngine(PARAMS, CFG, budget_quantum=MB,
+                       approx_budget_sharing=True)
     req = MapRequest(vgg16(), 64, 20 * MB, ACCEL_ZOO["edge"])
     r1 = eng.serve_one(req)
     assert not r1.cached
@@ -196,7 +225,8 @@ def test_engine_strategy_cache_hits_and_budget_quantization():
     # validity: a huge budget_quantum collapses a generous and an
     # impossible budget into one bucket — the impossible one must still
     # come back invalid
-    wide = MapperEngine(PARAMS, CFG, budget_quantum=64 * MB)
+    wide = MapperEngine(PARAMS, CFG, budget_quantum=64 * MB,
+                        approx_budget_sharing=True)
     roomy, tiny = wide.serve([
         MapRequest(vgg16(), 64, 40 * MB, ACCEL_ZOO["edge"]),
         MapRequest(vgg16(), 64, 1024.0, ACCEL_ZOO["edge"])])
@@ -209,7 +239,7 @@ def test_engine_strategy_cache_hits_and_budget_quantization():
                                         ACCEL_ZOO["edge"])).cached
     assert not eng.serve_one(MapRequest(vgg16(), 64, 20 * MB,
                                         ACCEL_ZOO["mobile"])).cached
-    assert eng.stats["strategy_hit_rate"] > 0
+    assert eng.stats()["strategy_hit_rate"] > 0
 
 
 def test_engine_rejects_oversized_bucket_config():
@@ -218,6 +248,81 @@ def test_engine_rejects_oversized_bucket_config():
     eng = MapperEngine(PARAMS, CFG)              # mobilenet (n=53) > 20
     with pytest.raises(ValueError, match="nmax bucket"):
         eng.serve_one(MapRequest(mobilenet_v2(), 64, 20 * MB, PAPER_ACCEL))
+
+
+# --- persistent strategy cache (DESIGN §14) ---------------------------------
+
+def test_strategy_cache_persists_across_engines(tmp_path):
+    """Cross-process amortization: strategies solved by one engine, saved,
+    then loaded read-through by a FRESH engine must serve as hits — no
+    device calls, no compiles — and bit-identically."""
+    path = tmp_path / "strategies.json"
+    eng = MapperEngine(PARAMS, CFG)
+    reqs = [MapRequest(vgg16(), 64, 20 * MB, ACCEL_ZOO["edge"]),
+            MapRequest(tiny_cnn(), 16, 3 * MB, ACCEL_ZOO["mobile"])]
+    first = eng.serve(reqs)
+    assert eng.save_cache(path) == len(reqs)
+    fresh = MapperEngine(PARAMS, CFG, cache_path=path)
+    again = fresh.serve(reqs)
+    assert fresh.device_calls == 0 and fresh.compile_count == 0
+    for a, b in zip(first, again):
+        assert b.cached and (a.strategy == b.strategy).all()
+        assert a.latency == b.latency and a.valid == b.valid
+    assert fresh.strategies.shared_hits == len(reqs)
+    # merge-write: a second engine's strategies union into the same file
+    eng2 = MapperEngine(PARAMS, CFG)
+    extra = MapRequest(resnet18(), 32, 14 * MB, ACCEL_ZOO["laptop"])
+    eng2.serve_one(extra)
+    assert eng2.save_cache(path) == 1 + len(reqs)
+    both = MapperEngine(PARAMS, CFG, cache_path=path)
+    assert both.serve_cached(extra) is not None
+    assert both.serve_cached(reqs[0]) is not None
+
+
+def test_strategy_cache_rejects_stale_checkpoint(tmp_path):
+    """A persisted cache is keyed to its checkpoint fingerprint: a file
+    written under different params must load ZERO entries (and raise
+    under strict=True) — never serve another checkpoint's strategies."""
+    path = tmp_path / "strategies.json"
+    eng = MapperEngine(PARAMS, CFG)
+    eng.serve_one(MapRequest(vgg16(), 64, 20 * MB, ACCEL_ZOO["edge"]))
+    eng.save_cache(path)
+    other_params = dt_init(jax.random.PRNGKey(7), CFG)
+    other = MapperEngine(other_params, CFG)
+    assert other.load_cache(path) == 0
+    assert other.strategies.stale_skipped == 1
+    with pytest.raises(ValueError, match="incompatible"):
+        other.load_cache(path, strict=True)
+    # budget-identity modes don't share files either: exact keys must not
+    # resolve against quantized ones
+    approx = MapperEngine(PARAMS, CFG, approx_budget_sharing=True)
+    assert approx.load_cache(path) == 0
+
+
+def test_engine_stats_schema():
+    """S2: one observability dict across every layer — queueing, admission,
+    coalescing, per-replica and cache persistence counters all in one
+    ``stats()`` call."""
+    from repro.serving import AsyncMapperScheduler
+    eng = MapperEngine(PARAMS, CFG)
+    sched = AsyncMapperScheduler(eng, flush_ms=0.0, max_wave=4)
+    sched.submit(MapRequest(vgg16(), 64, 20 * MB, ACCEL_ZOO["edge"]), now=0.0)
+    sched.drain(0.01)
+    s = eng.stats()
+    for key in ("requests_served", "device_calls", "compile_count",
+                "compiled_shapes", "chunk_cap", "rows_padded", "tick_dedup",
+                "coalesce_width_hist", "strategy_hit_rate", "strategy_cache",
+                "replicas", "scheduler"):
+        assert key in s, key
+    assert s["coalesce_width_hist"] == {1: 1}
+    for key in ("entries", "capacity", "shared_hits", "loads", "saves",
+                "stale_skipped"):
+        assert key in s["strategy_cache"], key
+    for key in ("queue_depth", "max_queue_depth", "submitted", "rejected",
+                "resolved_at_submit", "flushes"):
+        assert key in s["scheduler"], key
+    assert s["scheduler"]["submitted"] == 1
+    assert s["replicas"] is None                 # unreplicated engine
 
 
 # --- backend protocol -------------------------------------------------------
