@@ -1,0 +1,368 @@
+"""Closed-loop drift benchmark (DESIGN.md §15).
+
+A scripted, seeded drift stream hits TWO engines built from the SAME
+narrowly-trained base mapper (trained only on the in-distribution
+(workload x accel x budget) grid):
+
+ - ``closed_loop``: a :class:`~repro.RefreshWorker` polls between ticks —
+   the §15 pipeline (drift report -> G-Sampled teacher corpus for the
+   drifted region -> ``fine_tune`` -> ``upgrade_pytree`` restore -> probe
+   gate -> hot swap) runs exactly as in production;
+ - ``frozen``: the same engine with no worker — the pre-§15 behaviour.
+
+Three phases, identical for both engines:
+
+ - phase A: in-distribution traffic (declared via
+   ``ServingConfig.known_*``) — establishes the hit-rate baseline and
+   seeds the replay buffer's retained conditions;
+ - phase B: the shift — ~75% of requests move to NOVEL zoo accelerators
+   (``laptop``/``datacenter``, never in the teacher corpus) at unseen
+   budgets.  The monitor's unseen-accel window fires mid-phase and the
+   closed-loop engine refreshes + swaps while serving;
+ - phase C: post-swap traffic over the drifted mix.
+
+EVAL: every distinct drifted condition is scored as DT speedup vs a
+fresh per-condition G-Sampler search (the §11 ratio).  The committed
+claim is RECOVERY: ``closed_ratio >= --min-ratio`` (default 0.98) while
+``frozen_ratio`` stays at least ``--min-gap`` below it — the swap bought
+back teacher-level quality the frozen mapper lost.  The harness also
+enforces the swap mechanics: zero steady-state recompiles ACROSS the
+hot swap (phases B+C on warmed programs), at least one ACCEPTED refresh,
+and a bit-exact cached response for a non-drifted key after the swap.
+
+``--check BENCH_drift.json`` turns all of that into the CI gate (plus a
+machine-relative latency tolerance vs the committed baseline).
+
+    PYTHONPATH=src python benchmarks/bench_drift.py [--quick]
+        [--out BENCH_drift.json] [--check BASELINE.json] [--tol 2.5]
+        [--min-ratio 0.98] [--min-gap 0.02]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro import (ACCEL_ZOO, DriftConfig, DTConfig, GSamplerConfig,
+                   HW_FEATURE_DIM, MapperEngine, MapRequest, RefreshWorker,
+                   ServingConfig, TrainConfig, dnnfuser_infer, dt_init,
+                   dt_loss, generate_teacher_corpus, gsampler_search,
+                   restore_params, train_model)
+from repro.core import FusionEnv
+from repro.workloads import resnet18, tiny_cnn, vgg16
+
+try:                                   # as a module (benchmarks.run) ...
+    from .common import fmt_speedup, load_or
+except ImportError:                    # ... or as a script
+    from common import fmt_speedup, load_or
+
+MB = float(2 ** 20)
+TICK = 8
+BATCH = 64                             # matches RefreshWorker's corpus batch
+TRAIN_ACCELS = ["edge", "mobile"]
+DRIFT_ACCELS = ["laptop", "datacenter"]
+
+
+def _setup(quick: bool) -> dict:
+    """``ga`` is both the base-corpus teacher and the EVAL reference;
+    ``refresh_ga`` is the refresh teacher — deliberately stronger, so the
+    corpus the fine-tune imitates is at least as good as the reference
+    the ratio is scored against (a refresh that imitates a weaker teacher
+    cannot reach ratio 1.0 no matter how well it trains)."""
+    if quick:
+        return dict(workloads=[tiny_cnn()], budgets=[2.0, 6.0],
+                    drift_budgets=[6.0, 16.0], max_steps=16, steps=240,
+                    refresh_steps=400, n_phase=64, window=32,
+                    ga=GSamplerConfig(population=32, generations=24, seed=0),
+                    refresh_ga=GSamplerConfig(population=48, generations=40,
+                                              seed=0))
+    return dict(workloads=[vgg16(), resnet18()], budgets=[16.0, 32.0, 48.0],
+                drift_budgets=[24.0, 40.0], max_steps=20, steps=600,
+                refresh_steps=400, n_phase=128, window=32,
+                ga=GSamplerConfig(seed=0),
+                refresh_ga=GSamplerConfig(population=64, generations=72,
+                                          seed=0))
+
+
+def _train_base(su: dict, quick: bool):
+    """The narrow base mapper: teacher corpus over the in-distribution
+    grid ONLY (train accels, train budgets), served from its checkpoint;
+    cached under artifacts/bench (delete to regenerate)."""
+    cfg = DTConfig(max_steps=su["max_steps"], hw_dim=HW_FEATURE_DIM)
+    accels = [ACCEL_ZOO[n] for n in TRAIN_ACCELS]
+    mode = "quick" if quick else "full"
+    ckpt_dir = pathlib.Path("artifacts/bench") / f"driftbase_ckpt_{mode}"
+
+    def build():
+        ds = generate_teacher_corpus(
+            su["workloads"], accels, batch=BATCH, budgets_mb=su["budgets"],
+            max_steps=su["max_steps"], ga_cfg=su["ga"], top_k=6, seed=0)
+        params = dt_init(jax.random.PRNGKey(0), cfg)
+        params, log = train_model(
+            lambda p, b: dt_loss(p, cfg, b), params, ds,
+            TrainConfig(steps=su["steps"], batch_size=16,
+                        warmup=min(50, su["steps"] // 5), seed=0),
+            ckpt_dir=ckpt_dir, resume=False)
+        params = restore_params(ckpt_dir, params)
+        return {"params": jax.device_get(params),
+                "final_loss": log["final_loss"], "n_traj": len(ds)}
+
+    art = load_or(f"driftbase_{mode}", build)
+    return art, cfg
+
+
+def make_stream(su: dict, n: int, seed: int, drift_frac: float) -> list:
+    """Seeded request stream: each draw is drifted (novel accel at an
+    unseen budget) with probability ``drift_frac``, else in-distribution.
+    ``drift_frac=0`` is pure phase-A traffic."""
+    rng = np.random.default_rng(seed)
+    indist = [(w, ACCEL_ZOO[a], b) for w in su["workloads"]
+              for a in TRAIN_ACCELS for b in su["budgets"]]
+    drifted = [(w, ACCEL_ZOO[a], b) for w in su["workloads"]
+               for a in DRIFT_ACCELS for b in su["drift_budgets"]]
+    out = []
+    for _ in range(n):
+        pool = drifted if rng.random() < drift_frac else indist
+        w, acc, b = pool[rng.integers(0, len(pool))]
+        out.append(MapRequest(w, BATCH, b * MB, acc))
+    return out
+
+
+def serve_phase(engine, stream: list, worker=None) -> dict:
+    """Serve one phase in fixed-width ticks; the closed-loop engine polls
+    its worker between ticks (the §15 'off the request path' hook), so
+    any refresh wall-time lands here, not on a request."""
+    t0 = time.perf_counter()
+    for i in range(0, len(stream), TICK):
+        engine.serve(stream[i:i + TICK])
+        if worker is not None:
+            worker.poll()
+    wall = time.perf_counter() - t0
+    d = engine.stats()["drift"]
+    return {"requests": len(stream), "wall_s": wall,
+            "ms_per_request": wall * 1e3 / len(stream),
+            "reports_fired": d["reports_fired"],
+            "swaps_accepted": d["swaps_accepted"]}
+
+
+def eval_ratios(params_by_name: dict, cfg, su: dict, max_conds: int = 6):
+    """Score every distinct drifted condition: DT speedup (per candidate
+    params) vs ONE fresh G-Sampler search per condition (shared across
+    candidates, same GA budget the teachers used)."""
+    conds = [(w, ACCEL_ZOO[a], b) for w in su["workloads"]
+             for a in DRIFT_ACCELS for b in su["drift_budgets"]]
+    if len(conds) > max_conds:
+        idx = np.linspace(0, len(conds) - 1, max_conds).astype(int)
+        conds = [conds[i] for i in idx]
+    rows = []
+    for w, acc, b in conds:
+        env = FusionEnv(w, acc, batch=BATCH, budget_bytes=b * MB,
+                        nmax=su["max_steps"])
+        gs = gsampler_search(env, su["ga"], top_k=4)
+        row = dict(workload=w.name, accel=acc.name, budget_mb=b,
+                   teacher_speedup=gs.speedup, teacher_valid=gs.valid)
+        for name, params in params_by_name.items():
+            r = dnnfuser_infer(params, cfg, env)
+            row[f"{name}_speedup"] = float(r.speedup)
+            row[f"{name}_valid"] = bool(r.valid)
+            row[f"{name}_ratio"] = (float(r.speedup) / gs.speedup
+                                    if (r.valid and gs.valid) else 0.0)
+        rows.append(row)
+        print("  " + " vs ".join(
+            f"{n} {fmt_speedup(row[f'{n}_speedup'], row[f'{n}_valid']):>5s}x"
+            for n in params_by_name)
+            + f" vs G-Sampler {fmt_speedup(gs.speedup, gs.valid):>5s}x  "
+            f"[{w.name} @ {acc.name} {b:.0f}MB]")
+    means = {name: float(np.mean([r[f"{name}_ratio"] for r in rows]))
+             for name in params_by_name}
+    return rows, means
+
+
+def run(quick: bool = False, out: str = "BENCH_drift.json") -> list:
+    su = _setup(quick)
+    art, cfg = _train_base(su, quick)
+    base_params = art["params"]
+    print(f"base mapper: {art['n_traj']} teacher trajectories over "
+          f"{TRAIN_ACCELS} x {su['budgets']}MB, imitation loss "
+          f"{art['final_loss']:.4f}; drift -> {DRIFT_ACCELS} x "
+          f"{su['drift_budgets']}MB")
+
+    config = ServingConfig(
+        known_accels=tuple(TRAIN_ACCELS),
+        known_workloads=tuple(w.name for w in su["workloads"]),
+        drift=DriftConfig(window=su["window"]))
+    engines = {
+        "closed_loop": MapperEngine.from_config(base_params, cfg, config),
+        "frozen": MapperEngine.from_config(base_params, cfg, config),
+    }
+    worker = RefreshWorker(
+        engines["closed_loop"],
+        train=TrainConfig(steps=su["refresh_steps"], batch_size=16,
+                          lr=3e-4, warmup=min(40, su["refresh_steps"] // 5)),
+        ga=su["refresh_ga"], batch=BATCH, top_k=2, seed=1)
+    workers = {"closed_loop": worker, "frozen": None}
+
+    streams = {"A": make_stream(su, su["n_phase"], seed=0, drift_frac=0.0),
+               "B": make_stream(su, su["n_phase"], seed=1, drift_frac=0.75),
+               "C": make_stream(su, su["n_phase"], seed=2, drift_frac=0.75)}
+    probe_req = streams["A"][0]          # a non-drifted key to pin bit-exact
+
+    phases, compiles, bit_exact = {}, {}, {}
+    for name, eng in engines.items():
+        eng.warmup([w for w in su["workloads"]], ACCEL_ZOO["edge"],
+                   max_tick=TICK)
+        phases[name] = {"A": serve_phase(eng, streams["A"], workers[name])}
+        pre = eng.serve([probe_req])[0]              # cached from phase A
+        before = eng.compile_count
+        phases[name]["B"] = serve_phase(eng, streams["B"], workers[name])
+        phases[name]["C"] = serve_phase(eng, streams["C"], workers[name])
+        compiles[name] = eng.compile_count - before  # across the hot swap
+        post = eng.serve([probe_req])[0]
+        bit_exact[name] = bool(post.cached and
+                               np.array_equal(pre.strategy, post.strategy))
+        d = eng.stats()["drift"]
+        print(f"{name:11s}: {d['reports_fired']} drift reports, "
+              f"{d['swaps_accepted']} swaps accepted, "
+              f"{d['cache_invalidated']} cache entries invalidated, "
+              f"{compiles[name]} steady compiles across B+C, "
+              f"non-drifted bit-exact={bit_exact[name]}")
+
+    print("eval: distinct drifted conditions vs fresh G-Sampler")
+    rows, means = eval_ratios(
+        {"closed_loop": engines["closed_loop"].params,
+         "frozen": base_params}, cfg, su)
+    closed_stats = engines["closed_loop"].stats()["drift"]
+    report = {
+        "bench": "drift",
+        "device": jax.devices()[0].platform,
+        "quick": quick,
+        "n_phase": su["n_phase"],
+        "tick": TICK,
+        "window": su["window"],
+        "drift_frac": 0.75,
+        "train_accels": TRAIN_ACCELS,
+        "drift_accels": DRIFT_ACCELS,
+        "train_budgets_mb": su["budgets"],
+        "drift_budgets_mb": su["drift_budgets"],
+        "imitation_loss": art["final_loss"],
+        "phases": phases,
+        "drift_stats": {k: closed_stats[k] for k in
+                        ("windows_evaluated", "reports_fired",
+                         "swaps_accepted", "swaps_rejected",
+                         "cache_invalidated", "baseline_hit_rate")},
+        "refresh": worker.last_result,
+        "steady_new_compiles": compiles,
+        "non_drifted_bit_exact": bit_exact,
+        "results": rows,
+        "closed_ratio": means["closed_loop"],
+        "frozen_ratio": means["frozen"],
+        "recovery_gap": means["closed_loop"] - means["frozen"],
+    }
+    print(f"drifted-region DT/G-Sampler ratio: closed-loop "
+          f"{report['closed_ratio']:.3f} vs frozen "
+          f"{report['frozen_ratio']:.3f} "
+          f"(recovery gap {report['recovery_gap']:+.3f})")
+    path = pathlib.Path(out)
+    path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {path}")
+    if report["drift_stats"]["swaps_accepted"] < 1:
+        # RuntimeError, not SystemExit: benchmarks/run.py isolates suite
+        # failures with `except Exception` and must keep running
+        raise RuntimeError(
+            "the closed loop never accepted a swap — drift either did not "
+            f"fire ({report['drift_stats']['reports_fired']} reports) or "
+            f"every candidate was gated out ({worker.last_result})")
+    mode = "quick" if quick else "full"
+    return [(f"drift_closed_loop_{mode}",
+             phases["closed_loop"]["C"]["ms_per_request"] * 1e3,
+             f"ratio={report['closed_ratio']:.2f}"),
+            (f"drift_frozen_{mode}",
+             phases["frozen"]["C"]["ms_per_request"] * 1e3,
+             f"ratio={report['frozen_ratio']:.2f}")]
+
+
+def check_regression(report: dict, baseline_path: str, tol: float,
+                     min_ratio: float, min_gap: float) -> list:
+    """Gate rules (empty list = pass).  Quality gates are DT/G-Sampler
+    ratios measured ON THIS machine; only the latency gate is relative to
+    the committed baseline (with a generous tolerance)."""
+    base = json.loads(pathlib.Path(baseline_path).read_text())
+    failures = []
+    if base.get("quick") != report.get("quick"):
+        return [f"baseline {baseline_path} was written with "
+                f"quick={base.get('quick')} but this run used "
+                f"quick={report.get('quick')}; regenerate the baseline"]
+    if report["drift_stats"]["swaps_accepted"] < 1:
+        failures.append("no accepted hot swap: drift_stats="
+                        f"{report['drift_stats']}")
+    if report["closed_ratio"] < min_ratio:
+        failures.append(
+            f"closed-loop drifted-region ratio {report['closed_ratio']:.3f} "
+            f"< {min_ratio:.2f} — the refresh did not recover "
+            f"teacher-level quality")
+    if report["frozen_ratio"] > report["closed_ratio"] - min_gap:
+        failures.append(
+            f"frozen ratio {report['frozen_ratio']:.3f} is within "
+            f"{min_gap:.2f} of closed-loop {report['closed_ratio']:.3f} — "
+            f"the drift stream is not actually out-of-distribution")
+    for name, n in report["steady_new_compiles"].items():
+        if n != 0:
+            failures.append(f"{name}: {n} steady-state recompiles across "
+                            f"the drift phases (hot swap must not recompile)")
+    for name, ok in report["non_drifted_bit_exact"].items():
+        if not ok:
+            failures.append(f"{name}: non-drifted cached response changed "
+                            f"across the swap (§15 bit-exactness contract)")
+    new = report["phases"]["closed_loop"]["C"]["ms_per_request"]
+    old = (base.get("phases", {}).get("closed_loop", {}).get("C", {})
+           .get("ms_per_request"))
+    if old is None:
+        failures.append(f"baseline {baseline_path} has no closed_loop "
+                        f"phase-C ms_per_request — regenerate it")
+    elif new > old * tol:
+        failures.append(f"closed_loop post-swap ms_per_request: {new:.2f} > "
+                        f"{tol:.1f}x baseline {old:.2f}")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized: tiny workload, small GA, short training")
+    ap.add_argument("--out", default="BENCH_drift.json")
+    ap.add_argument("--check", metavar="BASELINE",
+                    help="fail (exit 1) on regression vs this baseline")
+    ap.add_argument("--tol", type=float, default=2.5,
+                    help="allowed post-swap latency ratio vs the baseline")
+    ap.add_argument("--min-ratio", type=float, default=0.98,
+                    help="required closed-loop drifted-region DT/G-Sampler "
+                         "ratio")
+    ap.add_argument("--min-gap", type=float, default=0.02,
+                    help="required closed-loop margin over the frozen "
+                         "baseline")
+    args = ap.parse_args()
+    if args.check and pathlib.Path(args.out).resolve() == \
+            pathlib.Path(args.check).resolve():
+        args.out = "artifacts/bench/BENCH_drift_check.json"
+        pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    run(quick=args.quick, out=args.out)
+    report = json.loads(pathlib.Path(args.out).read_text())
+    if args.check:
+        failures = check_regression(report, args.check, args.tol,
+                                    args.min_ratio, args.min_gap)
+        if failures:
+            print("DRIFT REGRESSION vs", args.check)
+            for f in failures:
+                print("  ", f)
+            raise SystemExit(1)
+        print(f"drift gate OK (closed >= {args.min_ratio}, gap >= "
+              f"{args.min_gap}, zero swap recompiles, bit-exact non-drifted "
+              f"vs {args.check})")
+
+
+if __name__ == "__main__":
+    main()

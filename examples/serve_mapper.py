@@ -1,26 +1,29 @@
-"""One mapper, one engine: a production-shaped async serving front door.
+"""One mapper, one engine, one loop: production serving that repairs itself.
 
     PYTHONPATH=src python examples/serve_mapper.py [--requests 96]
 
 A deployed mapper service fields a MIXED stream — "map vgg16 under 20 MB
 at batch 32 on a mobile NPU" next to "map tiny_cnn under 3 MB on edge" —
 arriving one request at a time, and must answer without recompiling or
-re-searching.  This is the §12/§14 stack end to end:
+re-searching.  Then the traffic CHANGES: a device class the mapper never
+trained on starts dominating.  This is the §12–§15 stack end to end,
+driven entirely through the supported public surface (``import repro``):
 
- - core: the fused episode rolls heterogeneous (workload, batch, budget,
-   accel) rows in ONE device call — the workload itself is a traced
-   per-row condition (DESIGN §12), the accelerator too (§11);
- - engine: ``serving.MapperEngine`` buckets request shapes (pow2 batches x
-   nmax buckets -> a warmed, closed set of compiled programs), dedupes and
-   caches solved strategies;
- - front door: ``serving.AsyncMapperScheduler`` — continuous batching
-   over the live stream: cache hits resolve at submit, misses coalesce
-   until a full device call forms or a flush deadline expires (§14);
- - restart: the strategy cache persists to disk, so a FRESH engine in the
-   next process starts warm — repeat conditions never touch the device.
-
-The stream mixes zoo networks x zoo accelerators (including one never
-trained on) x budgets never seen in training.
+ - ``repro.serve`` builds the whole stack — engine + async front door —
+   from ONE frozen :class:`repro.ServingConfig` (§15);
+ - the engine buckets request shapes into a warmed, closed set of
+   compiled programs, dedupes and caches solved strategies (§12), and
+   the scheduler coalesces the live stream — cache hits resolve at
+   submit, misses ride one fused device call (§14);
+ - every served condition lands in a replay buffer; when the stream
+   shifts to an UNSEEN accelerator, the ``DriftMonitor`` fires, a
+   ``RefreshWorker`` G-Samples a fresh teacher corpus for exactly the
+   drifted region, fine-tunes off the serving path, and — only after the
+   candidate beats the live params on a held-out probe — hot-swaps them
+   behind the running scheduler: zero recompiles, non-drifted cached
+   responses bit-exact (§15);
+ - the strategy cache persists, so a FRESH engine next process starts
+   warm.
 """
 import argparse
 import pathlib
@@ -30,13 +33,30 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (ACCEL_ZOO, DTConfig, GSamplerConfig, HW_FEATURE_DIM,
-                        MapperEngine, MapRequest, TrainConfig, dt_init,
-                        dt_loss, generate_teacher_corpus, train_model)
-from repro.serving import AsyncMapperScheduler
+import repro
+from repro import (ACCEL_ZOO, DriftConfig, DTConfig, GSamplerConfig,
+                   HW_FEATURE_DIM, MapRequest, RefreshWorker, ServingConfig,
+                   TrainConfig, dt_init, dt_loss, generate_teacher_corpus,
+                   train_model)
 from repro.workloads import resnet18, tiny_cnn, vgg16
 
 MB = 2 ** 20
+
+
+def pump_stream(sched, stream, worker=None, gap_s=1e-3):
+    """Submit one request per ``gap_s`` of simulated time; the closed-loop
+    variant polls its refresh worker between pumps (§15: the refresh runs
+    between ticks, never on a request)."""
+    futures = []
+    for i, req in enumerate(stream):
+        futures.append(sched.submit(req, now=i * gap_s))
+        sched.pump(now=i * gap_s)
+        if worker is not None:
+            worker.poll()
+    sched.drain(now=len(stream) * gap_s)
+    if worker is not None:
+        worker.poll()
+    return futures
 
 
 def main():
@@ -48,7 +68,7 @@ def main():
 
     train_nets = [vgg16(), tiny_cnn()]
     train_accels = [ACCEL_ZOO["edge"], ACCEL_ZOO["mobile"]]
-    print("[1/4] training an hw-conditioned mapper "
+    print("[1/5] training an hw-conditioned mapper "
           "(teacher @ 16-64 MB on edge + mobile) ...")
     ds = generate_teacher_corpus(
         train_nets, train_accels, batch=64, budgets_mb=[16, 32, 48, 64],
@@ -60,21 +80,26 @@ def main():
     print(f"      {len(ds)} trajectories; final imitation loss "
           f"{log['final_loss']:.4f}")
 
-    # -- the engine: one warmup, then a closed set of compiled programs ------
+    # -- one config, one call: the whole serving stack -----------------------
     serve_nets = [vgg16(), tiny_cnn(), resnet18()]   # resnet18: UNSEEN net
     serve_accels = [ACCEL_ZOO["edge"], ACCEL_ZOO["mobile"],
                     ACCEL_ZOO["laptop"]]             # laptop: UNSEEN accel
     cache_file = pathlib.Path(tempfile.mkdtemp()) / "strategies.json"
-    engine = MapperEngine(params, cfg, cache_path=cache_file)
-    print(f"[2/4] engine warmup (nmax buckets {engine.nmax_buckets}, "
-          f"ticks <= {args.tick}) ...")
+    config = ServingConfig(
+        cache_path=cache_file, flush_ms=25.0, max_wave=args.tick,
+        known_accels=tuple(a.name for a in serve_accels),
+        known_workloads=tuple(w.name for w in serve_nets),
+        drift=DriftConfig(window=32))
+    print(f"[2/5] repro.serve: engine + async scheduler from one "
+          f"ServingConfig; warmup (ticks <= {args.tick}) ...")
     t0 = time.perf_counter()
-    n_programs = engine.warmup(serve_nets, ACCEL_ZOO["edge"],
-                               max_tick=args.tick)
-    print(f"      {n_programs} programs compiled in "
-          f"{time.perf_counter() - t0:.1f} s — steady state reuses these")
+    sched = repro.serve(params, cfg, config, warm=serve_nets,
+                        accel=ACCEL_ZOO["edge"])
+    engine = sched.engine
+    print(f"      warmed in {time.perf_counter() - t0:.1f} s (nmax buckets "
+          f"{engine.nmax_buckets}) — steady state reuses these programs")
 
-    # -- mixed open-loop stream: unseen budgets, unseen accel, unseen net ----
+    # -- act I: mixed open-loop stream over the declared conditions ----------
     rng = np.random.default_rng(0)
     budgets = np.linspace(7.0, 50.0, 12) * MB        # never trained on
     stream = [MapRequest(serve_nets[rng.integers(3)],
@@ -82,63 +107,73 @@ def main():
                          float(rng.choice(budgets)),
                          serve_accels[rng.integers(3)])
               for _ in range(args.requests)]
-    print(f"[3/4] async front door: {args.requests} mixed requests, "
+    print(f"[3/5] async front door: {args.requests} mixed requests, "
           f"one at a time, coalesced up to {args.tick}-wide (§14) ...")
-    # Requests arrive ~1 ms apart; the scheduler resolves cache hits at
-    # submit and flushes a lane once it fills or its deadline expires.
-    sched = AsyncMapperScheduler(engine, flush_ms=25.0, max_wave=args.tick)
     compiles_before = engine.compile_count
     t0 = time.perf_counter()
-    futures = []
-    for i, req in enumerate(stream):
-        futures.append(sched.submit(req, now=i * 1e-3))
-        sched.pump(now=i * 1e-3)
-    sched.drain(now=len(stream) * 1e-3)
+    futures = pump_stream(sched, stream)
     wall = time.perf_counter() - t0
     responses = [f.result() for f in futures]
     s = engine.stats()
-    ss = s["scheduler"]
     lat = sorted(f.latency_s for f in futures)
-    p50, p99 = lat[len(lat) // 2], lat[int(len(lat) * 0.99)]
-
     print(f"      {len(stream)} requests in {wall*1e3:.0f} ms = "
-          f"{len(stream)/wall:.0f} req/s over {s['device_calls'] - n_programs}"
-          f" device calls; e2e p50 {p50*1e3:.0f} ms / p99 {p99*1e3:.0f} ms")
-    print(f"      {ss['resolved_at_submit']} resolved at submit; flushes: "
-          f"{ss['flushes']}")
-    print(f"      strategy cache: {s['strategy_hits']} hits / "
-          f"{s['strategy_misses']} misses (rate {s['strategy_hit_rate']:.2f})"
-          f", {s['tick_dedup']} in-tick dedups")
-    print(f"      recompiles in steady state: "
+          f"{len(stream)/wall:.0f} req/s; e2e p50 "
+          f"{lat[len(lat)//2]*1e3:.0f} ms; "
+          f"{s['scheduler']['resolved_at_submit']} resolved at submit; "
+          f"cache hit rate {s['strategy_hit_rate']:.2f}; recompiles "
           f"{engine.compile_count - compiles_before} (must be 0)")
 
-    # -- warm restart: a FRESH engine loads the persisted strategies --------
+    # -- act II: the traffic drifts to an accelerator we never trained on ----
+    dc = ACCEL_ZOO["datacenter"]
+    drift_budgets = [10.0 * MB, 30.0 * MB]
+    drifted = [MapRequest(train_nets[rng.integers(2)], 64,
+                          float(drift_budgets[rng.integers(2)]), dc)
+               if rng.random() < 0.75 else stream[rng.integers(len(stream))]
+               for _ in range(2 * config.drift.window)]
+    worker = RefreshWorker(
+        engine, train=TrainConfig(steps=200, batch_size=16, lr=3e-4,
+                                  warmup=20),
+        ga=GSamplerConfig(population=32, generations=24), seed=1)
+    probe = stream[0]                    # a non-drifted key to pin bit-exact
+    pre = engine.serve([probe])[0]
+    print(f"[4/5] drift: {len(drifted)} requests, 75% on '{dc.name}' "
+          f"(never trained) — the monitor watches windows of "
+          f"{config.drift.window} ...")
+    compiles_before = engine.compile_count
+    pump_stream(sched, drifted, worker=worker)
+    d = engine.stats()["drift"]
+    res = worker.last_result
+    if res is None:
+        print("      no drift report fired — stream stayed in distribution")
+    else:
+        print(f"      {d['reports_fired']} drift report(s); refresh: "
+              f"corpus={res['corpus_size']} trajectories, probe "
+              f"{res['live_score']:.2f} -> {res['candidate_score']:.2f}, "
+              f"accepted={res['accepted']}")
+    print(f"      {d['swaps_accepted']} hot swap(s), "
+          f"{d['cache_invalidated']} drifted cache entries invalidated, "
+          f"recompiles {engine.compile_count - compiles_before} (must be 0)")
+    post = engine.serve([probe])[0]
+    same = bool(post.cached and np.array_equal(pre.strategy, post.strategy))
+    print(f"      non-drifted key still cached + bit-exact: {same}")
+    dres = engine.serve([MapRequest(w, 64, b, dc)
+                         for w in train_nets for b in drift_budgets])
+    best = max(dres, key=lambda r: r.speedup)
+    print(f"      post-swap '{dc.name}' grid: "
+          f"{sum(r.valid for r in dres)}/{len(dres)} within budget, best "
+          f"{best.workload} -> {best.speedup:.2f}x")
+
+    # -- act III: warm restart — the next process starts from the file -------
     engine.save_cache()
-    warm = MapperEngine(params, cfg, cache_path=cache_file)
-    replay = warm.serve(stream)          # no warmup, no device: all cache hits
-    ws = warm.stats()
-    same = all(np.array_equal(a.strategy, b.strategy) and a.valid == b.valid
-               for a, b in zip(replay, responses))
-    print(f"[4/4] warm restart: fresh engine loaded "
+    fresh = repro.MapperEngine.from_config(engine.params, cfg, config)
+    replay = fresh.serve(drifted)        # no warmup, no device: cache hits
+    ws = fresh.stats()
+    print(f"[5/5] warm restart: fresh engine loaded "
           f"{ws['strategy_cache']['entries']} persisted strategies, replayed "
-          f"the stream with {ws['device_calls']} device calls and "
-          f"{ws['compile_count']} compiles; bit-identical: {same}")
-    if not any(r.valid for r in responses):
-        print(f"      0/{len(responses)} within budget — every requested "
-              f"budget is below the workloads' irreducible (all-SYNC) "
-              f"working set")
-        return
-    for acc in serve_accels:
-        sel = [r for r, q in zip(responses, stream) if q.accel is acc]
-        ok = sum(r.valid for r in sel)
-        tag = " (UNSEEN)" if acc.name == "laptop" else ""
-        best = max((r.speedup for r in sel if r.valid), default=0.0)
-        print(f"      {acc.name:7s}{tag}: {ok}/{len(sel)} within budget; "
-              f"speedups up to {best:.2f}x")
-    best = max((r for r in responses if r.valid), key=lambda r: r.speedup)
-    print(f"      best: {best.workload} -> {best.speedup:.2f}x, "
-          f"usage {best.peak_mem/MB:.1f} MB, "
-          f"strategy {[int(v) for v in best.strategy]}")
+          f"the drifted stream with {ws['device_calls']} device calls and "
+          f"{ws['compile_count']} compiles "
+          f"(hit rate {ws['strategy_hit_rate']:.2f}, "
+          f"{sum(r.valid for r in replay)}/{len(replay)} within budget)")
 
 
 if __name__ == "__main__":

@@ -11,5 +11,84 @@ DP/FSDP/TP/EP/SP sharding, multi-pod dry-run + roofline;
 repro.kernels — Pallas TPU kernels; repro.{data,optim,checkpoint,
 runtime} — pipeline, optimizers, elastic checkpoints, fault-tolerant
 training loop.  See DESIGN.md / EXPERIMENTS.md.
+
+The SUPPORTED public surface is ``__all__`` below (DESIGN §15): model
+configs and one-shot inference, the teacher/training pipeline, the
+accelerator zoo, and the serving stack behind one frozen
+:class:`ServingConfig` — user code imports from ``repro``, never from
+deep submodule paths.  :func:`serve` is the one-call production front
+door.  Re-exports resolve lazily (PEP 562), so ``import repro`` stays
+cheap and the core/serving import cycle never forms.
 """
 __version__ = "0.1.0"
+
+# name -> home submodule of every supported public symbol.  README's
+# quickstarts and tests/test_docs.py import against THIS table.
+_PUBLIC = {
+    # the paper core: model + one-shot inference
+    "DTConfig": "core", "dt_init": "core", "dt_loss": "core",
+    "S2SConfig": "core", "s2s_init": "core", "s2s_loss": "core",
+    "dnnfuser_infer": "core", "dnnfuser_infer_batch": "core",
+    "InferResult": "core",
+    # teacher + training
+    "GSamplerConfig": "core", "gsampler_search": "core",
+    "generate_teacher_corpus": "core", "TrajectoryDataset": "core",
+    "TrainConfig": "core", "train_model": "core", "fine_tune": "core",
+    "restore_params": "core",
+    # the hardware-condition space (DESIGN §11)
+    "AccelConfig": "core", "ACCEL_ZOO": "core", "PAPER_ACCEL": "core",
+    "HW_FEATURE_DIM": "core", "accel_features": "core",
+    # the serving stack (DESIGN §12, §14, §15)
+    "ServingConfig": "serving", "DriftConfig": "serving",
+    "MapperEngine": "serving", "MapRequest": "serving",
+    "MapResponse": "serving", "StrategyCache": "serving",
+    "AsyncMapperScheduler": "serving", "MapFuture": "serving",
+    "AdmissionError": "serving", "ReplicaGroup": "serving",
+    "DriftMonitor": "serving", "DriftReport": "serving",
+    "RefreshWorker": "serving",
+    # workloads
+    "Workload": "workloads", "CNN_ZOO": "workloads",
+    "get_workload": "workloads", "vgg16": "workloads",
+    "resnet18": "workloads", "resnet50": "workloads",
+    "mobilenet_v2": "workloads", "mnasnet_b1": "workloads",
+    "tiny_cnn": "workloads",
+}
+
+__all__ = ["__version__", "serve"] + sorted(_PUBLIC)
+
+
+def __getattr__(name):
+    if name in _PUBLIC:
+        import importlib
+        mod = importlib.import_module(f".{_PUBLIC[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))
+
+
+def serve(params, cfg, config=None, *, warm=None, accel=None):
+    """One-call production front door (DESIGN §15): build the full
+    serving stack — engine + async scheduler — from one frozen
+    :class:`ServingConfig`.
+
+    ``params``/``cfg`` are the checkpointed mapper; ``config`` defaults
+    to ``ServingConfig()``.  With ``warm`` (a list of workloads,
+    optionally ``accel``) the engine is warmed up first, so steady-state
+    traffic over those shapes never recompiles and the drift monitor
+    knows the in-distribution conditions.  Returns the
+    :class:`AsyncMapperScheduler`; its ``.engine`` is the
+    :class:`MapperEngine`.
+
+    >>> sched = repro.serve(params, cfg, warm=[vgg16(), tiny_cnn()])
+    >>> fut = sched.submit(repro.MapRequest(vgg16(), 64, 20 * 2**20,
+    ...                                     repro.ACCEL_ZOO["edge"]))
+    >>> sched.drain(); fut.result().strategy
+    """
+    from . import serving
+    engine = serving.MapperEngine.from_config(params, cfg, config)
+    if warm:
+        engine.warmup(list(warm), accel)
+    return serving.AsyncMapperScheduler(engine, config=engine.serving_config)

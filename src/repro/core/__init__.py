@@ -46,7 +46,8 @@ from .infer import (InferResult, dnnfuser_infer, s2s_infer,
 # imported first (serving pulls core submodules mid-initialization).
 _SERVING_API = ("MapperEngine", "MapRequest", "MapResponse", "StrategyCache",
                 "AsyncMapperScheduler", "MapFuture", "AdmissionError",
-                "ReplicaGroup")
+                "ReplicaGroup", "ServingConfig", "DriftConfig",
+                "DriftMonitor", "DriftReport", "RefreshWorker")
 
 
 def __getattr__(name):
@@ -80,6 +81,8 @@ __all__ = [
     "MapperBackend", "backend_for", "register_backend",
     "MapperEngine", "MapRequest", "MapResponse", "StrategyCache",
     "AsyncMapperScheduler", "MapFuture", "AdmissionError", "ReplicaGroup",
+    "ServingConfig", "DriftConfig", "DriftMonitor", "DriftReport",
+    "RefreshWorker",
     "TrajectoryDataset",
     "collect_teacher_data", "merge_datasets", "generate_teacher_corpus",
     "window_dataset", "returns_to_go", "TrainConfig", "train_model",

@@ -10,18 +10,33 @@ device replicas (``replicas.ReplicaGroup``).
 ``scheduler.AsyncMapperScheduler`` is the async front door: continuous
 batching over a live request stream with admission control and
 deadline-bounded flushes.
+
+Since §15 the stack is CLOSED-LOOP: one frozen ``config.ServingConfig``
+is the deployment record (engine + cache + replicas + scheduler + drift
+knobs), ``drift.DriftMonitor`` watches the served condition stream
+through a bounded replay buffer, and ``refresh.RefreshWorker`` turns
+drift reports into a G-Sampled teacher corpus, an off-path fine-tune,
+and a quality-gated zero-recompile hot checkpoint swap
+(``MapperEngine.swap_params``).
 """
 from .bucketing import (batch_bucket, budget_bucket, coalesce,
                         default_nmax_buckets, nmax_bucket, pow2_buckets,
                         pow2_chunks)
 from .cache import CACHE_FORMAT, StrategyCache
+from .config import DriftConfig, ServingConfig
+from .drift import (DriftMonitor, DriftReport, ReplayBuffer, ReplayRecord,
+                    region_key_predicate)
 from .engine import MapperEngine, MapRequest, MapResponse
+from .refresh import RefreshWorker, probe_score
 from .replicas import ReplicaGroup
 from .scheduler import AdmissionError, AsyncMapperScheduler, MapFuture
 
 __all__ = ["MapperEngine", "MapRequest", "MapResponse", "StrategyCache",
            "CACHE_FORMAT", "AsyncMapperScheduler", "MapFuture",
            "AdmissionError", "ReplicaGroup",
+           "ServingConfig", "DriftConfig",
+           "DriftMonitor", "DriftReport", "ReplayBuffer", "ReplayRecord",
+           "region_key_predicate", "RefreshWorker", "probe_score",
            "batch_bucket", "budget_bucket", "coalesce",
            "default_nmax_buckets", "nmax_bucket", "pow2_buckets",
            "pow2_chunks"]

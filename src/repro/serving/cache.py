@@ -130,6 +130,19 @@ class StrategyCache:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    def invalidate(self, predicate) -> int:
+        """Drop every entry (LRU and shared layer) whose key satisfies
+        ``predicate`` — the §15 scoped-invalidation hook: a hot checkpoint
+        swap invalidates only the drifted region's strategies, so
+        non-drifted keys keep answering bit-identically from cache.
+        Returns the number of DISTINCT keys removed."""
+        doomed = {k for k in self._d if predicate(k)}
+        doomed |= {k for k in self._shared if predicate(k)}
+        for k in doomed:
+            self._d.pop(k, None)
+            self._shared.pop(k, None)
+        return len(doomed)
+
     def clear(self) -> None:
         self._d.clear()
         self._shared.clear()

@@ -1,0 +1,125 @@
+"""ServingConfig: the one construction surface for the serving stack
+(DESIGN.md §15).
+
+Before §15 the serving stack was configured by kwargs scattered across
+two constructors — ``MapperEngine(cache_path=..., checkpoint_id=...,
+approx_budget_sharing=..., replicas=...)`` and
+``AsyncMapperScheduler(flush_ms=..., max_queue=...)`` — which made a
+deployment's configuration impossible to name, persist, or diff.
+:class:`ServingConfig` is the frozen record of EVERYTHING a serving
+deployment is: engine batching/bucketing, strategy-cache identity and
+persistence, replica topology, scheduler admission/flush policy, and the
+closed-loop drift knobs (:class:`DriftConfig`).  Canonical construction
+is ``MapperEngine.from_config(params, cfg, config)`` or the top-level
+``repro.serve(params, cfg, config)`` factory.
+
+The scattered kwargs keep working — each constructor shims them into a
+``ServingConfig`` field-for-field, so old-kwarg construction is
+BIT-IDENTICAL to config construction (tested) — but emits a
+:class:`DeprecationWarning` ONCE per kwarg per process
+(``tests/test_drift.py::test_deprecated_kwargs_warn_once_and_match_config``).
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, field, fields
+
+__all__ = ["DriftConfig", "ServingConfig"]
+
+MB = float(2 ** 20)
+
+
+@dataclass(frozen=True)
+class DriftConfig:
+    """Closed-loop drift knobs (DESIGN §15).
+
+    The engine always keeps the bounded replay buffer and evaluates the
+    monitor every ``window`` observed requests; a :class:`DriftReport`
+    fires when any trigger threshold is crossed.  ``known_accels`` /
+    ``known_workloads`` seed the monitor's in-distribution sets (names);
+    ``warmup()`` and accepted swaps extend them.  With BOTH sets empty the
+    monitor self-calibrates: the first full window's conditions become
+    the known sets (a deployment that never declares its training mix
+    still gets drift detection against its own early traffic)."""
+    replay_capacity: int = 4096    # bounded telemetry/replay buffer depth
+    window: int = 256              # requests per drift-evaluation window
+    unseen_accel_rate: float = 0.2     # trigger: unseen-accel fraction
+    unseen_workload_rate: float = 0.2  # trigger: unseen-network fraction
+    hit_rate_drop: float = 0.3     # trigger: absolute hit-rate decay vs baseline
+    violation_rate: float = 0.5    # trigger: budget-violation fraction
+    max_region: int = 4            # accels/workloads reported per region
+
+
+@dataclass(frozen=True)
+class ServingConfig:
+    """One frozen record of a serving deployment (DESIGN §15).
+
+    Engine fields mirror the pre-§15 ``MapperEngine`` kwargs; scheduler
+    fields the ``AsyncMapperScheduler`` ones; ``drift`` the closed-loop
+    monitor.  ``replicas`` is a replica count or a prebuilt
+    ``ReplicaGroup``; ``None`` serves single-device."""
+    # -- engine (DESIGN §12) --
+    repair: bool = True
+    nmax_buckets: tuple | None = None
+    max_coalesce: int = 16
+    # -- strategy cache (DESIGN §12, §14) --
+    strategy_capacity: int = 4096
+    budget_quantum: float = MB
+    approx_budget_sharing: bool = False
+    cache_path: object = None
+    checkpoint_id: str | None = None
+    # -- replicas (DESIGN §14) --
+    replicas: object = None
+    # -- scheduler (DESIGN §14) --
+    max_queue: int = 1024
+    flush_ms: float = 8.0
+    max_wave: int | None = None
+    # -- closed loop (DESIGN §15) --
+    drift: DriftConfig = field(default_factory=DriftConfig)
+    known_accels: tuple[str, ...] = ()
+    known_workloads: tuple[str, ...] = ()
+
+
+_ENGINE_FIELDS = ("repair", "nmax_buckets", "max_coalesce",
+                  "strategy_capacity", "budget_quantum",
+                  "approx_budget_sharing", "cache_path", "checkpoint_id",
+                  "replicas", "drift", "known_accels", "known_workloads")
+_SCHEDULER_FIELDS = ("max_queue", "flush_ms", "max_wave")
+
+# DeprecationWarning fires once per kwarg per process — a serving loop
+# constructing engines in a loop must not drown the log.
+_WARNED: set[str] = set()
+
+
+def _reset_deprecation_warnings() -> None:
+    """Test hook: make the once-per-process warnings fire again."""
+    _WARNED.clear()
+
+
+def _warn_deprecated(owner: str, name: str) -> None:
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"{owner}(..., {name}=...) is deprecated; pass "
+        f"ServingConfig({name}=...) via {owner}.from_config / the config= "
+        f"keyword (or repro.serve) instead — the kwarg keeps working and "
+        f"is bit-identical, but will eventually be removed",
+        DeprecationWarning, stacklevel=4)
+
+
+def config_from_kwargs(owner: str, allowed: tuple[str, ...],
+                       kwargs: dict) -> ServingConfig:
+    """Shim pre-§15 scattered kwargs into a :class:`ServingConfig`.
+
+    Field-for-field: the resulting config is exactly the one the caller
+    would have written by hand, so both construction paths are
+    bit-identical.  Unknown kwargs raise ``TypeError`` (same contract as
+    a real signature); each deprecated kwarg warns once per process."""
+    valid = {f.name for f in fields(ServingConfig)}
+    for name in kwargs:
+        if name not in valid or name not in allowed:
+            raise TypeError(f"{owner}() got an unexpected keyword argument "
+                            f"{name!r}")
+        _warn_deprecated(owner, name)
+    return ServingConfig(**kwargs)

@@ -53,6 +53,8 @@ from .bucketing import (MB, batch_bucket, budget_bucket, coalesce,
                         default_nmax_buckets, nmax_bucket, pow2_buckets,
                         pow2_chunks)
 from .cache import StrategyCache
+from .config import ServingConfig, _ENGINE_FIELDS, config_from_kwargs
+from .drift import DriftMonitor, ReplayRecord
 from .replicas import ReplicaGroup
 
 __all__ = ["MapRequest", "MapResponse", "MapperEngine"]
@@ -124,43 +126,54 @@ class MapperEngine:
     """One checkpointed mapper serving heterogeneous traffic, recompile-free
     in steady state.
 
-    Parameters: ``params``/``cfg`` — the checkpointed model (any registered
-    ``MapperBackend`` config; ``cfg.max_steps`` caps the largest usable
-    ``nmax`` bucket); ``nmax_buckets`` — the workload-length buckets
-    (default ``bucketing.default_nmax_buckets``); ``max_coalesce`` — the
-    widest device call the engine will form (wider ticks chunk);
-    ``strategy_capacity`` — LRU size; ``budget_quantum`` +
-    ``approx_budget_sharing`` — the strategy-cache budget identity (exact
-    f32 by default; quantized sharing opt-in); ``cache_path`` — persistent
-    strategy-cache file, read-through loaded at init; ``checkpoint_id`` —
-    cache identity override (defaults to a params fingerprint);
-    ``replicas`` — a ``ReplicaGroup`` or replica count for data-parallel
-    multi-device serving; ``repair`` — the inference-time budget guard.
+    Canonical construction (DESIGN §15) takes a frozen
+    ``config.ServingConfig`` — the one record of a deployment —
+    via :meth:`from_config` / the ``config=`` keyword / the top-level
+    ``repro.serve`` factory.  The pre-§15 scattered kwargs
+    (``cache_path``, ``checkpoint_id``, ``approx_budget_sharing``, ...)
+    keep working bit-identically through a deprecation shim that warns
+    once per kwarg per process.
+
+    Config fields: ``nmax_buckets`` — the workload-length buckets
+    (default ``bucketing.default_nmax_buckets``; ``cfg.max_steps`` caps
+    the largest usable bucket); ``max_coalesce`` — the widest device call
+    the engine will form (wider ticks chunk); ``strategy_capacity`` — LRU
+    size; ``budget_quantum`` + ``approx_budget_sharing`` — the
+    strategy-cache budget identity (exact f32 by default; quantized
+    sharing opt-in); ``cache_path`` — persistent strategy-cache file,
+    read-through loaded at init; ``checkpoint_id`` — cache identity
+    override (defaults to a params fingerprint); ``replicas`` — a
+    ``ReplicaGroup`` or replica count for data-parallel multi-device
+    serving; ``repair`` — the inference-time budget guard; ``drift`` /
+    ``known_accels`` / ``known_workloads`` — the §15 closed-loop monitor.
     """
 
-    def __init__(self, params, cfg, *, repair: bool = True,
-                 nmax_buckets: tuple[int, ...] | None = None,
-                 max_coalesce: int = 16,
-                 strategy_capacity: int = 4096,
-                 budget_quantum: float = MB,
-                 approx_budget_sharing: bool = False,
-                 cache_path=None,
-                 checkpoint_id: str | None = None,
-                 replicas: ReplicaGroup | int | None = None):
+    def __init__(self, params, cfg, *, config: ServingConfig | None = None,
+                 **legacy):
+        if config is None:
+            config = config_from_kwargs("MapperEngine", _ENGINE_FIELDS,
+                                        legacy)
+        elif legacy:
+            raise TypeError(
+                "pass either config= or the legacy engine kwargs, not "
+                "both: got config= plus " + ", ".join(sorted(legacy)))
+        nmax_buckets = config.nmax_buckets
         if nmax_buckets is None:
             nmax_buckets = default_nmax_buckets(cfg.max_steps)
         if max(nmax_buckets) > cfg.max_steps:
             raise ValueError(
                 f"nmax bucket {max(nmax_buckets)} exceeds the model's "
                 f"max_steps={cfg.max_steps} trajectory capacity")
+        self.serving_config = config
         self.params = params
         self.cfg = cfg
         self.backend = backend_for(cfg)          # fail early on bad cfg
-        self.repair = repair
+        self.repair = config.repair
         self.nmax_buckets = tuple(sorted(nmax_buckets))
-        self.max_coalesce = batch_bucket(max_coalesce)
-        self.budget_quantum = float(budget_quantum)
-        self.approx_budget_sharing = bool(approx_budget_sharing)
+        self.max_coalesce = batch_bucket(config.max_coalesce)
+        self.budget_quantum = float(config.budget_quantum)
+        self.approx_budget_sharing = bool(config.approx_budget_sharing)
+        replicas = config.replicas
         if isinstance(replicas, int):
             replicas = ReplicaGroup(replicas)
         self.replicas = replicas
@@ -169,16 +182,19 @@ class MapperEngine:
                              f"{replicas.n}, got {self.max_coalesce}")
         self._params_dev = (replicas.replicate_params(params)
                             if replicas is not None else params)
-        self.checkpoint_id = checkpoint_id or _fingerprint(params, cfg)
-        self.strategies = StrategyCache(strategy_capacity, context={
+        self.checkpoint_id = config.checkpoint_id or _fingerprint(params, cfg)
+        self.strategies = StrategyCache(config.strategy_capacity, context={
             "checkpoint": self.checkpoint_id,
             "budget_sharing": ("approx" if self.approx_budget_sharing
                                else "exact"),
             "budget_quantum": self.budget_quantum,
         })
-        self.cache_path = cache_path
-        if cache_path is not None:
-            self.strategies.load(cache_path)
+        self.cache_path = config.cache_path
+        if self.cache_path is not None:
+            self.strategies.load(self.cache_path)
+        self.monitor = DriftMonitor(config.drift,
+                                    known_accels=config.known_accels,
+                                    known_workloads=config.known_workloads)
         self.scheduler = None                    # backref set by the scheduler
         self._packed: dict = {}                  # (name, bpe, nmax) -> np dict
         self._hw_rows: dict = {}                 # accel -> (np [10], np [F])
@@ -189,7 +205,18 @@ class MapperEngine:
         self.device_calls = 0
         self.rows_padded = 0
         self.tick_dedup = 0
+        self.swaps_accepted = 0
+        self.swaps_rejected = 0
+        self.cache_invalidated = 0
         self.coalesce_hist: dict[int, int] = {}  # true chunk width -> count
+
+    @classmethod
+    def from_config(cls, params, cfg, config: ServingConfig | None = None):
+        """Canonical §15 construction: one frozen :class:`ServingConfig`
+        describes the whole deployment (engine + cache + replicas +
+        drift; the scheduler fields are consumed by
+        ``AsyncMapperScheduler`` / ``repro.serve``)."""
+        return cls(params, cfg, config=config or ServingConfig())
 
     # -- request planning ----------------------------------------------------
 
@@ -259,6 +286,8 @@ class MapperEngine:
         for nb, group in groups.items():
             self._serve_bucket(nb, group, out)
         self.requests_served += len(requests)
+        for req, resp in zip(requests, out):
+            self._observe(req, resp)
         return out
 
     def serve_one(self, request: MapRequest) -> MapResponse:
@@ -279,7 +308,19 @@ class MapperEngine:
         if hit is None:                          # racy eviction between checks
             return None
         self.requests_served += 1
-        return self._hit_response(request, hit)
+        resp = self._hit_response(request, hit)
+        self._observe(request, resp)
+        return resp
+
+    def _observe(self, req: MapRequest, resp: MapResponse) -> None:
+        """Feed the §15 replay/telemetry stream: one record per served
+        request — the condition plus its realized outcome.  O(1) host
+        bookkeeping; ``warmup`` traffic bypasses (it goes straight to
+        ``_serve_bucket`` and is synthetic, not served demand)."""
+        self.monitor.observe(ReplayRecord(
+            req.workload, int(req.batch), float(req.budget_bytes),
+            req.accel, bool(resp.valid), bool(resp.cached),
+            float(resp.speedup)))
 
     def _hit_response(self, req: MapRequest, entry: tuple) -> MapResponse:
         strat, lat, peak, speed = entry
@@ -371,6 +412,59 @@ class MapperEngine:
                              "engine with cache_path=")
         return self.strategies.load(path, strict=strict)
 
+    # -- hot swap (DESIGN §15) -----------------------------------------------
+
+    def swap_params(self, new_params, *, invalidate=None) -> int:
+        """Atomically swap the serving checkpoint with ZERO recompiles.
+
+        ``new_params`` must match the live tree leaf-for-leaf in
+        structure, shape and dtype — then every warmed jitted program's
+        signature is unchanged and the jit cache is reused as-is (the
+        §15 swap tests cross-check the jax-level cache size).  The swap
+        is a host-side pointer flip between ticks: in-flight device calls
+        already hold the old tree; the next ``serve`` uses the new one.
+
+        ``invalidate`` is an optional key predicate (see
+        ``drift.region_key_predicate``) scoping which strategy-cache
+        entries the new checkpoint obsoletes.  Keys OUTSIDE the scope are
+        deliberately KEPT: their cached strategies were solved by the old
+        params and keep answering bit-identically — the §15 non-drifted
+        bit-exactness contract.  The cache's checkpoint context is
+        re-fingerprinted, so persisted files carry the new identity.
+        Returns the number of cache entries invalidated."""
+        import jax
+        old_flat, old_def = jax.tree_util.tree_flatten(self.params)
+        new_flat, new_def = jax.tree_util.tree_flatten(new_params)
+        if old_def != new_def:
+            raise ValueError("swap_params needs the live tree structure; "
+                             f"got {new_def} vs live {old_def}")
+        for o, n in zip(old_flat, new_flat):
+            so, sn = np.shape(o), np.shape(n)
+            do = getattr(o, "dtype", np.asarray(o).dtype)
+            dn = getattr(n, "dtype", np.asarray(n).dtype)
+            if so != sn or str(do) != str(dn):
+                raise ValueError(
+                    f"swap_params leaf mismatch: {sn}/{dn} vs live "
+                    f"{so}/{do} — a swap must not change any jit "
+                    f"signature (use checkpoint.upgrade_pytree + a new "
+                    f"engine for architecture changes)")
+        self.params = new_params
+        self._params_dev = (self.replicas.replicate_params(new_params)
+                            if self.replicas is not None else new_params)
+        self.checkpoint_id = _fingerprint(new_params, self.cfg)
+        self.strategies.context["checkpoint"] = self.checkpoint_id
+        n = self.strategies.invalidate(invalidate) if invalidate else 0
+        self.swaps_accepted += 1
+        self.cache_invalidated += n
+        return n
+
+    def mark_known(self, *, accels=(), workloads=()) -> None:
+        """Declare conditions in-distribution for the drift monitor —
+        called with the drifted region after an accepted swap, so the
+        monitor stops re-firing on traffic the refreshed checkpoint now
+        covers."""
+        self.monitor.mark_known(accels=accels, workloads=workloads)
+
     # -- warmup & stats ------------------------------------------------------
 
     def warmup(self, workloads: list, accel: AccelConfig | None = None,
@@ -412,6 +506,9 @@ class MapperEngine:
                 self._serve_bucket(nb, [(self._strategy_key(r), r, [(j, r)])
                                         for j, r in enumerate(reqs)], sink)
         self._warmed_cap = max(self._warmed_cap or 0, cap)
+        # warmed conditions are declared in-distribution: the operator
+        # warms what the deployment was built for (DESIGN §15)
+        self.mark_known(accels=[accel], workloads=workloads)
         return self.compile_count - before
 
     def stats(self) -> dict:
@@ -444,6 +541,12 @@ class MapperEngine:
             },
             "replicas": (None if self.replicas is None
                          else self.replicas.stats()),
+            "drift": {
+                **self.monitor.stats(),
+                "swaps_accepted": self.swaps_accepted,
+                "swaps_rejected": self.swaps_rejected,
+                "cache_invalidated": self.cache_invalidated,
+            },
         }
         if self.scheduler is not None:
             s["scheduler"] = self.scheduler.stats()

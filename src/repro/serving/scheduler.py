@@ -37,6 +37,7 @@ from collections import OrderedDict
 
 from .engine import MapperEngine, MapRequest, MapResponse
 from .bucketing import nmax_bucket
+from .config import ServingConfig, _SCHEDULER_FIELDS, config_from_kwargs
 
 __all__ = ["AdmissionError", "MapFuture", "AsyncMapperScheduler"]
 
@@ -83,24 +84,38 @@ class MapFuture:
 class AsyncMapperScheduler:
     """Continuous-batching request scheduler over one :class:`MapperEngine`.
 
-    ``max_queue`` bounds admitted-but-unsolved requests; ``flush_ms``
-    bounds how long a lone request waits for tick-mates (the p99 knob);
-    ``max_wave`` caps unique conditions per formed tick (default: the
-    engine's warmed chunk cap, so a full wave is exactly one warmed
-    device call).  ``clock`` is injectable for simulated-time tests and
-    benchmarks."""
+    Canonical construction (DESIGN §15) reads ``max_queue`` (bounds
+    admitted-but-unsolved requests), ``flush_ms`` (how long a lone
+    request waits for tick-mates — the p99 knob) and ``max_wave`` (caps
+    unique conditions per formed tick; default: the engine's warmed
+    chunk cap, so a full wave is exactly one warmed device call) from a
+    frozen ``config.ServingConfig`` — by default the engine's own, so
+    ``AsyncMapperScheduler(engine)`` honors the deployment record the
+    engine was built from.  The pre-§15 scattered kwargs keep working
+    bit-identically through a once-per-process deprecation shim.
+    ``clock`` is injectable for simulated-time tests and benchmarks."""
 
-    def __init__(self, engine: MapperEngine, *, max_queue: int = 1024,
-                 flush_ms: float = 8.0, max_wave: int | None = None,
-                 clock=time.perf_counter):
-        if max_queue < 1:
-            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
-        if flush_ms < 0:
-            raise ValueError(f"flush_ms must be >= 0, got {flush_ms}")
+    def __init__(self, engine: MapperEngine, *,
+                 config: ServingConfig | None = None,
+                 clock=time.perf_counter, **legacy):
+        if config is None and legacy:
+            config = config_from_kwargs("AsyncMapperScheduler",
+                                        _SCHEDULER_FIELDS, legacy)
+        elif legacy:
+            raise TypeError(
+                "pass either config= or the legacy scheduler kwargs, not "
+                "both: got config= plus " + ", ".join(sorted(legacy)))
+        if config is None:       # inherit the engine's deployment record
+            config = getattr(engine, "serving_config", None) or ServingConfig()
+        if config.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got "
+                             f"{config.max_queue}")
+        if config.flush_ms < 0:
+            raise ValueError(f"flush_ms must be >= 0, got {config.flush_ms}")
         self.engine = engine
-        self.max_queue = int(max_queue)
-        self.flush_s = float(flush_ms) / 1e3
-        self.max_wave = max_wave
+        self.max_queue = int(config.max_queue)
+        self.flush_s = float(config.flush_ms) / 1e3
+        self.max_wave = config.max_wave
         self.clock = clock
         self._lanes: OrderedDict = OrderedDict()   # nmax bucket -> [MapFuture]
         self._server_free = 0.0                    # simulated-time server clock

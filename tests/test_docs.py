@@ -85,3 +85,33 @@ def test_readme_bench_baselines_exist():
     assert baselines, "README must cite the committed BENCH_*.json numbers"
     for b in baselines:
         assert (ROOT / b).exists(), f"README cites {b} which is not committed"
+
+
+def test_readme_public_symbols_import_from_repro():
+    """S2 (DESIGN §15): the README's quickstarts are written against the
+    supported ``repro`` public surface — every symbol a README code block
+    imports from ``repro``/``repro.core``/``repro.serving`` must be in
+    ``repro.__all__`` and actually resolve, and user-facing code blocks
+    must not deep-import serving internals."""
+    import repro
+    text = README_PATH.read_text()
+    blocks = re.findall(r"```python\n(.*?)```", text, re.S)
+    assert blocks, "README must keep runnable python quickstarts"
+    code = "\n".join(blocks)
+    assert "repro.serving.engine" not in code and \
+        "repro.serving.scheduler" not in code, \
+        "README quickstarts must not deep-import serving internals"
+    imported = set()
+    for m in re.finditer(
+            r"^from\s+repro(?:\.\w+)?\s+import\s+(\([^)]*\)|[^\n]+)",
+            code, re.M):
+        names = m.group(1).strip("()").replace("\n", " ")
+        imported.update(s.strip() for s in names.split(",") if s.strip())
+    assert imported, "README quickstarts must import from repro"
+    for name in sorted(imported):
+        assert name in repro.__all__, \
+            f"README imports {name} which is not in repro.__all__"
+        assert getattr(repro, name) is not None    # lazy re-export resolves
+    # the full advertised surface resolves, not just what README shows
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None, name

@@ -1,0 +1,391 @@
+"""The §15 closed loop: ServingConfig, drift detection, hot swap, refresh.
+
+Pins the four §15 contracts:
+
+ - **one construction surface**: ``ServingConfig`` construction is
+   bit-identical to the pre-§15 scattered kwargs, which keep working
+   through a once-per-process ``DeprecationWarning`` shim;
+ - **drift detection**: the bounded replay buffer and the window monitor
+   — fires on unseen accels/networks, hit-rate decay and budget
+   violations; stays quiet on stable traffic; self-calibrates when no
+   training mix was declared;
+ - **hot swap**: ``swap_params`` is zero-recompile (engine counter AND
+   the jax jit cache), bit-exact for non-drifted keys (their cached
+   strategies survive the scoped invalidation), and atomic between ticks
+   under the async scheduler — resolved futures keep old-params answers,
+   queued requests solve on the new params;
+ - **the refresh pipeline**: drift report -> G-Sampled corpus ->
+   fine-tune -> ``upgrade_pytree`` restore -> quality gate -> swap; the
+   gate REJECTS a candidate that probes worse than the live params.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, upgrade_pytree
+from repro.core import (ACCEL_ZOO, DTConfig, GSamplerConfig, TrainConfig,
+                        dnnfuser_infer_fused, dt_init, dt_loss,
+                        generate_teacher_corpus, train_model, FusionEnv)
+from repro.core import infer as infer_mod
+from repro.serving import (AsyncMapperScheduler, DriftConfig, DriftMonitor,
+                           DriftReport, MapperEngine, MapRequest,
+                           RefreshWorker, ReplayBuffer, ReplayRecord,
+                           ServingConfig, StrategyCache,
+                           region_key_predicate)
+from repro.serving.config import _reset_deprecation_warnings
+from repro.serving.engine import _accel_key
+from repro.serving.refresh import probe_score
+from repro.workloads import resnet18, tiny_cnn, vgg16
+
+MB = 2 ** 20
+CFG = DTConfig(max_steps=20)
+PARAMS = dt_init(jax.random.PRNGKey(2), CFG)
+PARAMS2 = dt_init(jax.random.PRNGKey(9), CFG)
+EDGE, MOBILE, DC = (ACCEL_ZOO["edge"], ACCEL_ZOO["mobile"],
+                    ACCEL_ZOO["datacenter"])
+
+
+def _rec(wl, accel, *, budget_mb=8.0, valid=True, cached=False,
+         speedup=1.5, batch=32):
+    return ReplayRecord(wl, batch, budget_mb * MB, accel, valid, cached,
+                        speedup)
+
+
+# --- ServingConfig + deprecation shims (S1) ---------------------------------
+
+def test_deprecated_kwargs_warn_once_and_match_config():
+    """Old-kwarg construction == ServingConfig construction, field for
+    field and response for response; the warning fires once per kwarg per
+    process."""
+    _reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning, match="max_coalesce"):
+        legacy = MapperEngine(PARAMS, CFG, max_coalesce=8,
+                              approx_budget_sharing=True)
+    via_cfg = MapperEngine.from_config(
+        PARAMS, CFG, ServingConfig(max_coalesce=8,
+                                   approx_budget_sharing=True))
+    assert legacy.serving_config == via_cfg.serving_config
+    # the shim built the exact same frozen record -> identical behavior
+    req = MapRequest(vgg16(), 64, 20 * MB, EDGE)
+    a, b = legacy.serve_one(req), via_cfg.serve_one(req)
+    assert np.array_equal(a.strategy, b.strategy)
+    assert (a.latency, a.valid, a.cached) == (b.latency, b.valid, b.cached)
+    # once per process: the same kwarg again is silent
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        MapperEngine(PARAMS, CFG, max_coalesce=8)
+    assert not [r for r in rec if issubclass(r.category, DeprecationWarning)]
+
+
+def test_config_construction_rejects_bad_mixes():
+    with pytest.raises(TypeError, match="bogus"):
+        MapperEngine(PARAMS, CFG, bogus=1)
+    with pytest.raises(TypeError, match="flush_ms"):
+        MapperEngine(PARAMS, CFG, flush_ms=2.0)   # a scheduler-only field
+    with pytest.raises(TypeError, match="not both"):
+        MapperEngine(PARAMS, CFG, config=ServingConfig(), max_coalesce=8)
+    eng = MapperEngine.from_config(PARAMS, CFG)
+    with pytest.raises(TypeError, match="not both"):
+        AsyncMapperScheduler(eng, config=ServingConfig(), flush_ms=2.0)
+
+
+def test_scheduler_reads_config_and_inherits_engines():
+    """The scheduler consumes the SAME deployment record: explicitly, via
+    its own deprecated kwargs, or inherited from the engine."""
+    _reset_deprecation_warnings()
+    eng = MapperEngine.from_config(PARAMS, CFG, ServingConfig(flush_ms=3.0,
+                                                              max_queue=7))
+    inherited = AsyncMapperScheduler(eng)
+    assert inherited.flush_s == 0.003 and inherited.max_queue == 7
+    with pytest.warns(DeprecationWarning, match="flush_ms"):
+        legacy = AsyncMapperScheduler(eng, flush_ms=5.0)
+    explicit = AsyncMapperScheduler(eng, config=ServingConfig(flush_ms=5.0))
+    assert legacy.flush_s == explicit.flush_s == 0.005
+
+
+def test_repro_serve_factory():
+    """repro.serve: the one-call front door builds the warmed engine +
+    scheduler from one config."""
+    import repro
+    sched = repro.serve(PARAMS, CFG,
+                        ServingConfig(max_coalesce=4, flush_ms=0.0),
+                        warm=[tiny_cnn()], accel=EDGE)
+    assert isinstance(sched, AsyncMapperScheduler)
+    eng = sched.engine
+    assert eng.compile_count > 0                  # warmed
+    assert "tiny_cnn" in eng.monitor.known_workloads
+    before = eng.compile_count
+    fut = sched.submit(MapRequest(tiny_cnn(), 32, 5 * MB, EDGE), now=0.0)
+    sched.drain(0.0)
+    assert fut.result().workload == "tiny_cnn"
+    assert eng.compile_count == before            # steady state
+
+
+# --- replay + drift monitor --------------------------------------------------
+
+def test_replay_buffer_bounded():
+    buf = ReplayBuffer(capacity=4)
+    for i in range(6):
+        buf.append(_rec(tiny_cnn(), EDGE, budget_mb=float(i)))
+    assert len(buf) == 4 and buf.total == 6
+    kept = [r.budget_bytes / MB for r in buf]
+    assert kept == [2.0, 3.0, 4.0, 5.0]           # oldest dropped first
+    assert [r.budget_bytes / MB for r in buf.recent(2)] == [4.0, 5.0]
+
+
+def test_monitor_quiet_on_stable_traffic_and_fires_on_unseen():
+    mon = DriftMonitor(DriftConfig(window=4), known_accels=("edge",),
+                       known_workloads=("tiny_cnn",))
+    for _ in range(8):                            # two clean windows
+        assert mon.observe(_rec(tiny_cnn(), EDGE, cached=True)) is None
+    assert mon.windows_evaluated == 2 and mon.reports_fired == 0
+    # a window dominated by an unseen accel fires, with the region named
+    for _ in range(3):
+        assert mon.observe(_rec(tiny_cnn(), DC, cached=False)) is None
+    rep = mon.observe(_rec(vgg16(), DC, cached=False, budget_mb=40.0))
+    assert isinstance(rep, DriftReport) and rep.drifted
+    assert "unseen_accel" in rep.triggers and "unseen_workload" in rep.triggers
+    assert [a.name for a in rep.accels] == ["datacenter"]
+    assert {w.name for w in rep.workloads} == {"tiny_cnn", "vgg16"}
+    assert 40.0 in rep.budgets_mb
+    assert mon.pending and mon.pop_reports() == [rep] and not mon.pending
+
+
+def test_monitor_hit_rate_decay_and_violations():
+    mon = DriftMonitor(DriftConfig(window=4, hit_rate_drop=0.3,
+                                   violation_rate=0.5),
+                       known_accels=("edge",), known_workloads=("tiny_cnn",))
+    for _ in range(4):                            # baseline: all hits
+        mon.observe(_rec(tiny_cnn(), EDGE, cached=True))
+    assert mon.baseline_hit_rate == 1.0
+    for _ in range(3):
+        mon.observe(_rec(tiny_cnn(), EDGE, cached=False))
+    rep = mon.observe(_rec(tiny_cnn(), EDGE, cached=False))
+    assert rep is not None and rep.triggers == ("hit_rate_decay",)
+    for _ in range(3):
+        mon.observe(_rec(tiny_cnn(), EDGE, cached=True, valid=False))
+    rep = mon.observe(_rec(tiny_cnn(), EDGE, cached=True, valid=False))
+    assert rep is not None and "budget_violations" in rep.triggers
+
+
+def test_monitor_self_calibrates_without_declared_mix():
+    mon = DriftMonitor(DriftConfig(window=4))     # no known sets
+    for _ in range(4):
+        assert mon.observe(_rec(vgg16(), MOBILE)) is None
+    assert mon.known_accels == {"mobile"}         # adopted, didn't fire
+    assert mon.known_workloads == {"vgg16"}
+    for _ in range(4):
+        rep = mon.observe(_rec(vgg16(), DC))
+    assert rep is not None and "unseen_accel" in rep.triggers
+
+
+def test_engine_feeds_monitor_and_warmup_bypasses():
+    eng = MapperEngine.from_config(
+        PARAMS, CFG, ServingConfig(drift=DriftConfig(window=4,
+                                                     replay_capacity=8)))
+    eng.warmup([tiny_cnn()], EDGE, max_tick=2)
+    assert len(eng.monitor.replay) == 0           # warmup is not demand
+    assert eng.monitor.known_accels == {"edge"}
+    eng.serve([MapRequest(tiny_cnn(), 32, 5 * MB, EDGE)])
+    eng.serve_one(MapRequest(tiny_cnn(), 32, 5 * MB, EDGE))
+    assert len(eng.monitor.replay) == 2
+    assert [r.cached for r in eng.monitor.replay] == [False, True]
+
+
+# --- scoped cache invalidation ----------------------------------------------
+
+def test_cache_invalidate_and_region_predicate():
+    c = StrategyCache(capacity=8)
+    k_edge = ("vgg16", 64, 1.0, _accel_key(EDGE))
+    k_dc = ("vgg16", 64, 1.0, _accel_key(DC))
+    k_net = ("resnet18", 32, 2.0, _accel_key(EDGE))
+    for k in (k_edge, k_dc, k_net):
+        c.put(k, "v")
+    pred = region_key_predicate([resnet18()], [DC], _accel_key)
+    assert pred(k_dc) and pred(k_net) and not pred(k_edge)
+    assert c.invalidate(pred) == 2
+    assert k_edge in c and k_dc not in c and k_net not in c
+    # shared-layer entries are invalidated too
+    c._shared[k_dc] = "stale"
+    assert c.invalidate(pred) == 1 and k_dc not in c
+
+
+# --- hot swap (the tentpole contract) ---------------------------------------
+
+def test_hot_swap_zero_recompile_and_bit_exact_non_drifted():
+    """Across a swap: zero new programs (engine counter AND the jax-level
+    jit cache), non-drifted keys keep answering bit-identically from
+    cache, invalidated keys re-solve on the NEW params."""
+    eng = MapperEngine.from_config(PARAMS, CFG, ServingConfig(max_coalesce=4))
+    eng.warmup([vgg16(), tiny_cnn()], EDGE, max_tick=2)
+    keep = MapRequest(vgg16(), 64, 20 * MB, EDGE)
+    drop = MapRequest(tiny_cnn(), 32, 5 * MB, EDGE)
+    before_keep, before_drop = eng.serve([keep])[0], eng.serve([drop])[0]
+    compiles = eng.compile_count
+    jit_cache = getattr(infer_mod._fused_batch, "_cache_size", None)
+    jit_before = jit_cache() if jit_cache else None
+    old_id = eng.checkpoint_id
+
+    # warmup's synthetic tiny_cnn probes are in the cache too: all of the
+    # region's keys go, the vgg16 ones all stay
+    pred = region_key_predicate([tiny_cnn()], [], _accel_key)
+    invalidated = eng.swap_params(PARAMS2, invalidate=pred)
+    assert invalidated >= 1
+    assert eng.swaps_accepted == 1 and eng.cache_invalidated == invalidated
+    assert all(k[0] != "tiny_cnn" for k in eng.strategies.snapshot())
+    assert eng.checkpoint_id != old_id
+    assert eng.strategies.context["checkpoint"] == eng.checkpoint_id
+
+    after_keep = eng.serve([keep])[0]
+    after_drop = eng.serve([drop])[0]
+    assert eng.compile_count == compiles, "swap must not recompile"
+    if jit_cache is not None:
+        assert jit_cache() == jit_before, \
+            "engine counter says 0 but jax compiled new programs"
+    # non-drifted key: cached, bit-exact with the pre-swap answer
+    assert after_keep.cached
+    assert np.array_equal(after_keep.strategy, before_keep.strategy)
+    assert after_keep.latency == before_keep.latency
+    # drifted key: re-solved fresh, identical to the new params' rollout
+    assert not after_drop.cached
+    env = FusionEnv(tiny_cnn(), EDGE, batch=32, budget_bytes=5 * MB, nmax=8)
+    fresh = dnnfuser_infer_fused(PARAMS2, CFG, env)
+    assert np.array_equal(after_drop.strategy,
+                          fresh.strategy[: tiny_cnn().n + 1])
+
+
+def test_swap_rejects_architecture_changes():
+    eng = MapperEngine.from_config(PARAMS, CFG)
+    with pytest.raises(ValueError, match="structure"):
+        eng.swap_params({"not": np.zeros(3)})
+    bigger = dt_init(jax.random.PRNGKey(1), DTConfig(max_steps=64))
+    with pytest.raises(ValueError, match="signature"):
+        eng.swap_params(bigger)
+    assert eng.swaps_accepted == 0 and eng.params is PARAMS
+
+
+def test_swap_under_load_parity():
+    """S3: through the async front door, already-resolved futures keep
+    their old-params answers; requests queued across the swap solve on
+    the NEW params in their next tick."""
+    eng = MapperEngine.from_config(
+        PARAMS, CFG, ServingConfig(max_coalesce=4, flush_ms=1e6))
+    eng.warmup([vgg16(), tiny_cnn()], EDGE, max_tick=4)
+    sched = AsyncMapperScheduler(eng)
+    keep = MapRequest(vgg16(), 64, 20 * MB, EDGE)
+    drop = MapRequest(tiny_cnn(), 32, 5 * MB, EDGE)
+    f_old = sched.submit(keep, now=0.0)
+    sched.drain(0.0)                              # tick 1: old params
+    assert f_old.done
+    # queued BEFORE the swap, but its tick forms AFTER: new params solve it
+    f_inflight = sched.submit(drop, now=1.0)
+    assert not f_inflight.done
+    eng.swap_params(PARAMS2,
+                    invalidate=region_key_predicate([tiny_cnn()], [],
+                                                    _accel_key))
+    f_hit = sched.submit(keep, now=2.0)           # survives: resolves at submit
+    assert f_hit.done and f_hit.result().cached
+    assert np.array_equal(f_hit.result().strategy, f_old.result().strategy)
+    sched.drain(2.0)                              # tick 2: new params
+    env = FusionEnv(tiny_cnn(), EDGE, batch=32, budget_bytes=5 * MB, nmax=8)
+    fresh = dnnfuser_infer_fused(PARAMS2, CFG, env)
+    assert np.array_equal(f_inflight.result().strategy,
+                          fresh.strategy[: tiny_cnn().n + 1])
+    assert eng.compile_count > 0 and eng.swaps_accepted == 1
+
+
+def test_upgrade_pytree_function_preservation_on_swap(tmp_path):
+    """S3: the swap candidate restored through ``upgrade_pytree`` (the
+    documented checkpoint path) is leaf-exact with what was trained, and
+    the engine serves exactly that function after the swap."""
+    Checkpointer(tmp_path).save(1, {"params": PARAMS2, "opt": {"t": 0}})
+    cand, missing = upgrade_pytree(Checkpointer(tmp_path).path(), PARAMS,
+                                   prefix="params")
+    assert missing == []                          # same arch: nothing zero-filled
+    for a, b in zip(jax.tree.leaves(cand), jax.tree.leaves(PARAMS2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    eng = MapperEngine.from_config(PARAMS, CFG)
+    eng.swap_params(cand)
+    resp = eng.serve_one(MapRequest(vgg16(), 64, 20 * MB, EDGE))
+    env = FusionEnv(vgg16(), EDGE, batch=64, budget_bytes=20 * MB, nmax=20)
+    fresh = dnnfuser_infer_fused(PARAMS2, CFG, env)
+    assert np.array_equal(resp.strategy, fresh.strategy[: vgg16().n + 1])
+
+
+# --- the refresh pipeline ----------------------------------------------------
+
+@pytest.fixture(scope="module")
+def live_params():
+    """A mapper briefly imitation-trained on tiny_cnn@edge (4-8 MB), so
+    the probe gate has a meaningful live score to defend."""
+    ds = generate_teacher_corpus(
+        [tiny_cnn()], [EDGE], batch=64, budgets_mb=[4, 8], max_steps=20,
+        top_k=4, ga_cfg=GSamplerConfig(population=16, generations=8))
+    p, _ = train_model(lambda p, b: dt_loss(p, CFG, b),
+                       dt_init(jax.random.PRNGKey(0), CFG), ds,
+                       TrainConfig(steps=60, batch_size=16))
+    return p
+
+
+def test_refresh_closed_loop_accepts_and_swaps(live_params, tmp_path):
+    """Drifted traffic -> report -> corpus -> fine-tune -> gate -> swap:
+    the full loop, on a datacenter-shift stream."""
+    eng = MapperEngine.from_config(
+        live_params, CFG,
+        ServingConfig(max_coalesce=8,
+                      drift=DriftConfig(window=8, replay_capacity=64)))
+    eng.warmup([tiny_cnn()], EDGE, max_tick=4)
+    for i in range(8):                            # in-distribution window
+        eng.serve([MapRequest(tiny_cnn(), 32, (4 + i % 4) * MB, EDGE)])
+    for i in range(8):                            # drifted window
+        eng.serve([MapRequest(tiny_cnn(), 64, (40 + i) * MB, DC)])
+    assert eng.monitor.reports_fired == 1
+    worker = RefreshWorker(
+        eng, train=TrainConfig(steps=40, batch_size=16, lr=1e-4, warmup=5),
+        ga=GSamplerConfig(population=16, generations=8), batch=64,
+        top_k=4, max_probe=4, ckpt_dir=tmp_path)
+    res = worker.poll()
+    assert res is not None and res["accepted"]
+    assert res["candidate_score"] >= res["live_score"]
+    assert eng.swaps_accepted == 1 and eng.params is not live_params
+    assert "datacenter" in eng.monitor.known_accels   # stops re-firing
+    assert worker.poll() is None                  # reports were drained
+    s = eng.stats()["drift"]
+    assert s["swaps_accepted"] == 1 and s["reports_fired"] == 1
+
+
+def test_refresh_gate_rejects_bad_candidate(live_params, tmp_path,
+                                            monkeypatch):
+    """The quality gate: a candidate that probes worse than the live
+    params is REJECTED — the serving checkpoint and the strategy cache
+    stay untouched.  The probe scorer is stubbed to force the worse-
+    candidate branch deterministically (its real ordering is pinned by
+    ``test_probe_score_orders_params``)."""
+    import repro.serving.refresh as refresh_mod
+    eng = MapperEngine.from_config(live_params, CFG)
+    eng.serve_one(MapRequest(tiny_cnn(), 64, 6 * MB, EDGE))
+    entries = len(eng.strategies)
+    monkeypatch.setattr(
+        refresh_mod, "probe_score",
+        lambda params, cfg, conds, repair=True:
+            1.0 if params is eng.params else 0.5)
+    worker = RefreshWorker(
+        eng, train=TrainConfig(steps=5, batch_size=16, lr=1e-4, warmup=1),
+        ga=GSamplerConfig(population=16, generations=8), batch=64,
+        top_k=4, max_probe=4, ckpt_dir=tmp_path)
+    res = worker.refresh([tiny_cnn()], [EDGE], [4.0, 8.0])
+    assert not res["accepted"]
+    assert eng.params is live_params              # swap never happened
+    assert eng.swaps_rejected == 1 and eng.swaps_accepted == 0
+    assert len(eng.strategies) == entries         # cache untouched
+
+
+def test_probe_score_orders_params(live_params):
+    """probe_score: trained params must beat random init on the trained
+    region (the quantity the gate compares)."""
+    conds = [(tiny_cnn(), 64, 6 * MB, EDGE), (tiny_cnn(), 64, 7 * MB, EDGE)]
+    assert probe_score(live_params, CFG, conds) >= \
+        probe_score(PARAMS, CFG, conds)
+    assert probe_score(live_params, CFG, []) == 0.0

@@ -312,7 +312,7 @@ def test_engine_stats_schema():
     for key in ("requests_served", "device_calls", "compile_count",
                 "compiled_shapes", "chunk_cap", "rows_padded", "tick_dedup",
                 "coalesce_width_hist", "strategy_hit_rate", "strategy_cache",
-                "replicas", "scheduler"):
+                "replicas", "scheduler", "drift"):
         assert key in s, key
     assert s["coalesce_width_hist"] == {1: 1}
     for key in ("entries", "capacity", "shared_hits", "loads", "saves",
@@ -323,6 +323,14 @@ def test_engine_stats_schema():
         assert key in s["scheduler"], key
     assert s["scheduler"]["submitted"] == 1
     assert s["replicas"] is None                 # unreplicated engine
+    # §15 closed-loop counters: replay/telemetry, drift windows, swaps
+    for key in ("replay_depth", "replay_capacity", "replay_total",
+                "windows_evaluated", "reports_fired", "pending_reports",
+                "swaps_accepted", "swaps_rejected", "cache_invalidated",
+                "last_report"):
+        assert key in s["drift"], key
+    assert s["drift"]["replay_depth"] == 1       # the one served request
+    assert s["drift"]["swaps_accepted"] == 0
 
 
 # --- backend protocol -------------------------------------------------------
