@@ -13,6 +13,7 @@ Suites (``--only`` takes a comma list of the keys below; default = all):
  - ``lm``      LM-workload mapping (beyond paper)
  - ``kernel``  Pallas fusion_eval kernel vs XLA cost model
  - ``drift``   closed-loop drift recovery: refresh + hot swap (DESIGN §15)
+ - ``optgap``  gap-to-optimal vs the exact DP oracle (DESIGN §16)
 
 THE ``--quick`` CONTRACT: every suite's ``run(quick=True)`` must (i) keep
 the full protocol shape — same pipeline stages, same metrics, same JSON/CSV
@@ -51,19 +52,19 @@ def main() -> None:
                          "workloads/search/training budgets")
     ap.add_argument("--only", default="",
                     help="comma list: table1,table2,table3,fig4,speed,hw,"
-                         "lm,kernel,drift")
+                         "lm,kernel,drift,optgap")
     args = ap.parse_args()
 
     from . import (bench_drift, fig4_solutions, fusion_eval_kernel,
                    lm_mapping, speed_oneshot, table1_methods,
                    table2_generalization, table3_transfer,
-                   table_hw_generalization)
+                   table_hw_generalization, table_optimality_gap)
     suites = {
         "table1": table1_methods, "table2": table2_generalization,
         "table3": table3_transfer, "fig4": fig4_solutions,
         "speed": speed_oneshot, "hw": table_hw_generalization,
         "lm": lm_mapping, "kernel": fusion_eval_kernel,
-        "drift": bench_drift,
+        "drift": bench_drift, "optgap": table_optimality_gap,
     }
     only = [s for s in args.only.split(",") if s]
     rows, failures = [], []

@@ -1,0 +1,229 @@
+"""Gap-to-optimal benchmark (DESIGN §16; beyond-paper).
+
+Every other table reports quality RELATIVE to the stochastic G-Sampler;
+this one anchors the whole stack to the exact DP oracle
+(``core.optimal``): for each (network x accel x budget) cell it measures
+the certified optimum latency, the G-Sampler latency, and the one-shot
+DT mapper latency, and reports each as a gap-to-optimal ratio (>= 1.0
+by construction — a ratio below 1 - 1e-5 means an evaluator disagreed
+with the oracle and is a hard RuntimeError, never a data point).
+
+Protocol
+ - oracle: ``optimal_mapping`` per cell (exact f64 DP + one-call f32
+   certification against ``evaluate_population``);
+ - teacher: fresh per-cell ``gsampler_search`` (the same budgets the
+   other tables give it);
+ - student: the shared hw-conditioned mapper from
+   ``table_hw_generalization`` (same ``artifacts/bench`` cache tag), all
+   cells of a workload served in ONE ``dnnfuser_infer_batch`` call.
+
+Output: ``BENCH_optgap.json`` rows {opt_latency, gs_gap, dt_gap, ...}
+plus summary {gs_never_below_opt, mean_dt_gap, mean/max_gs_gap}.
+``--check BASELINE`` gates regressions: per-cell G-Sampler gap and the
+mean DT gap must stay within ``--tol`` x the committed baseline, modes
+must match, zero comparisons refuse, and ``gs_never_below_opt`` is
+gated hard (mirrors ``bench_infer.check_regression``).
+
+The grid is the TRACTABLE slice of the zoo (DESIGN §16): quick =
+tiny_cnn; full adds vgg16 (exact at front ~7e3, minutes/cell).  Deep
+residual nets exceed practical front caps and are excluded by design.
+
+    PYTHONPATH=src python benchmarks/table_optimality_gap.py
+        [--quick] [--out BENCH_optgap.json] [--check BASELINE] [--tol R]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (ACCEL_ZOO, FusionEnv, GSamplerConfig,
+                        dnnfuser_infer_batch, gsampler_search,
+                        optimal_mapping)
+from repro.workloads import tiny_cnn, vgg16
+
+try:                                   # as a module (benchmarks.run) ...
+    from .table_hw_generalization import _train_mapper
+except ImportError:                    # ... or as a script
+    from table_hw_generalization import _train_mapper
+
+MB = float(2 ** 20)
+ACCELS = ["edge", "nano", "datacenter"]
+_SLACK = 1e-5       # f32 evaluator vs f64 oracle rounding allowance
+
+
+def _setup(quick: bool) -> dict:
+    if quick:
+        return dict(workloads=[tiny_cnn()], budgets=[2.0, 6.0],
+                    max_steps=16, front_cap=8192,
+                    ga=GSamplerConfig(population=16, generations=10, seed=0))
+    return dict(workloads=[tiny_cnn(), vgg16()], budgets=[16.0, 48.0],
+                max_steps=20, front_cap=32768, ga=GSamplerConfig(seed=0))
+
+
+def run(quick: bool = False, out: str = "BENCH_optgap.json") -> list:
+    su = _setup(quick)
+    # the student is table_hw_generalization's cached checkpoint: same
+    # artifact tag, same training grid (DESIGN §11), zero extra training
+    art, cfg = _train_mapper(_hw_args(quick), quick)
+    params = art["params"]
+
+    rows, csv_rows = [], []
+    for wl in su["workloads"]:
+        conds = [(ACCEL_ZOO[a], b) for a in ACCELS for b in su["budgets"]]
+        envs = [FusionEnv(wl, acc, batch=64, budget_bytes=b * MB,
+                          nmax=su["max_steps"]) for acc, b in conds]
+
+        t0 = time.perf_counter()
+        opts = [optimal_mapping(env, front_cap=su["front_cap"])
+                for env in envs]
+        opt_wall = time.perf_counter() - t0
+
+        batches = np.full(len(conds), 64.0, np.float32)
+        budgets = np.asarray([b * MB for _, b in conds], np.float32)
+        hw_rows = [acc for acc, _ in conds]
+        served = dnnfuser_infer_batch(params, cfg, envs[0], batches,
+                                      budgets, hw_rows)        # warm jit
+        served = dnnfuser_infer_batch(params, cfg, envs[0], batches,
+                                      budgets, hw_rows)
+
+        for i, ((acc, b), env, res) in enumerate(zip(conds, envs, opts)):
+            if not res.valid:
+                raise RuntimeError(
+                    f"oracle found no feasible mapping for {wl.name} on "
+                    f"{acc.name} @{b}MB — shrink the grid, don't report "
+                    "gaps against an infeasible cell")
+            gs = gsampler_search(env, su["ga"], top_k=4)
+            gs_gap = float(gs.latency) / res.latency if gs.valid else 0.0
+            dt_valid = bool(served["valid"][i])
+            dt_gap = (float(served["latency"][i]) / res.latency
+                      if dt_valid else 0.0)
+            for tag, gap in (("G-Sampler", gs_gap), ("DT", dt_gap)):
+                if gap and gap < 1.0 - _SLACK:
+                    raise RuntimeError(
+                        f"{tag} reported {gap:.8f}x the certified optimum "
+                        f"on {wl.name}/{acc.name}@{b}MB — an evaluator "
+                        "disagrees with the oracle")
+            rows.append(dict(
+                workload=wl.name, accel=acc.name, budget_mb=b,
+                opt_latency=res.latency, opt_front=res.n_states,
+                opt_evals=res.n_evals, opt_wall_s=res.wall_s,
+                gs_valid=bool(gs.valid), gs_gap=gs_gap,
+                dt_valid=dt_valid, dt_gap=dt_gap))
+            print(f"  {wl.name:9s} {acc.name:10s} @{b:5.1f}MB: "
+                  f"opt {res.latency:.3e}s  GS gap "
+                  f"{gs_gap:5.3f}x  DT gap {dt_gap:5.3f}x "
+                  f"(front {res.n_states}, {res.wall_s:.2f}s)")
+
+        dt_gaps = [r["dt_gap"] for r in rows
+                   if r["workload"] == wl.name and r["dt_gap"] > 0]
+        csv_rows.append((
+            f"optimality_gap_{wl.name}", opt_wall * 1e6 / len(conds),
+            f"mean_dt_gap={float(np.mean(dt_gaps)) if dt_gaps else 0:.3f}"))
+
+    gs_gaps = [r["gs_gap"] for r in rows if r["gs_gap"] > 0]
+    dt_gaps = [r["dt_gap"] for r in rows if r["dt_gap"] > 0]
+    report = {
+        "bench": "optimality_gap",
+        "device": jax.devices()[0].platform,
+        "quick": quick,
+        "accels": ACCELS,
+        "gs_never_below_opt": all(g >= 1.0 - _SLACK for g in gs_gaps),
+        "gs_valid_fraction": float(np.mean([r["gs_valid"] for r in rows])),
+        "dt_valid_fraction": float(np.mean([r["dt_valid"] for r in rows])),
+        "mean_gs_gap": float(np.mean(gs_gaps)) if gs_gaps else 0.0,
+        "max_gs_gap": float(np.max(gs_gaps)) if gs_gaps else 0.0,
+        "mean_dt_gap": float(np.mean(dt_gaps)) if dt_gaps else 0.0,
+        "results": rows,
+    }
+    path = pathlib.Path(out)
+    path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {path}  (mean gap-to-optimal: G-Sampler "
+          f"{report['mean_gs_gap']:.3f}x, DT {report['mean_dt_gap']:.3f}x)")
+    return csv_rows
+
+
+def _hw_args(quick: bool) -> dict:
+    """table_hw_generalization's _setup, imported lazily so the student's
+    training grid stays defined in exactly one place."""
+    try:
+        from .table_hw_generalization import _setup as hw_setup
+    except ImportError:
+        from table_hw_generalization import _setup as hw_setup
+    return hw_setup(quick)
+
+
+def check_regression(report: dict, baseline_path: str, tol: float) -> list:
+    """Gate vs the committed baseline; returns human-readable failures.
+
+    Hard gates: mode match, >=1 compared cell, ``gs_never_below_opt``.
+    Ratio gates (machine-independent, but jax-version drift happens):
+    per-cell gs_gap and the mean dt_gap within ``tol`` x baseline."""
+    base = json.loads(pathlib.Path(baseline_path).read_text())
+    if base.get("quick") != report.get("quick"):
+        return [f"baseline {baseline_path} was written with "
+                f"quick={base.get('quick')} but this run used "
+                f"quick={report.get('quick')}; regenerate the baseline in "
+                f"the same mode"]
+    failures = []
+    if not report.get("gs_never_below_opt", False):
+        failures.append("gs_never_below_opt is False — the search stack "
+                        "beat the 'exact' oracle; the oracle or an "
+                        "evaluator is wrong")
+    key = lambda r: (r["workload"], r["accel"], r["budget_mb"])
+    by_cell = {key(r): r for r in base.get("results", [])}
+    compared = 0
+    for row in report["results"]:
+        ref = by_cell.get(key(row))
+        if ref is None or ref.get("gs_gap", 0) <= 0:
+            continue
+        compared += 1
+        if row["gs_gap"] > ref["gs_gap"] * tol + 1e-3:
+            failures.append(
+                f"{key(row)}: gs_gap {row['gs_gap']:.3f} > {tol:.2f}x "
+                f"baseline {ref['gs_gap']:.3f}")
+    if base.get("mean_dt_gap", 0) > 0 and \
+            report["mean_dt_gap"] > base["mean_dt_gap"] * tol + 1e-3:
+        failures.append(
+            f"mean_dt_gap {report['mean_dt_gap']:.3f} > {tol:.2f}x "
+            f"baseline {base['mean_dt_gap']:.3f}")
+    if compared == 0:
+        failures.append(
+            f"no comparable cells between this run and {baseline_path} — "
+            "regenerate the baseline")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized: tiny_cnn only, small GA/mapper")
+    ap.add_argument("--out", default="BENCH_optgap.json")
+    ap.add_argument("--check", metavar="BASELINE",
+                    help="fail (exit 1) if gaps regress more than --tol x "
+                         "this baseline JSON or the optimum is beaten")
+    ap.add_argument("--tol", type=float, default=1.25,
+                    help="allowed gap ratio vs the baseline (default 1.25)")
+    args = ap.parse_args()
+    if args.check and pathlib.Path(args.out).resolve() == \
+            pathlib.Path(args.check).resolve():
+        args.out = "artifacts/bench/BENCH_optgap_check.json"
+        pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    run(quick=args.quick, out=args.out)
+    if args.check:
+        report = json.loads(pathlib.Path(args.out).read_text())
+        failures = check_regression(report, args.check, args.tol)
+        if failures:
+            print("OPTIMALITY-GAP REGRESSION vs", args.check)
+            for f in failures:
+                print("  ", f)
+            raise SystemExit(1)
+        print(f"optimality gate OK (tol {args.tol}x vs {args.check})")
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,9 @@ from .train import (TrainConfig, train_model, make_train_step, fine_tune,
 from .infer import (InferResult, dnnfuser_infer, s2s_infer,
                     dnnfuser_infer_fused, s2s_infer_fused,
                     dnnfuser_infer_batch)
+from .optimal import (OptimalResult, optimal_search, optimal_mapping,
+                      optimal_grid, brute_force_optimal,
+                      enumerate_strategies, scaled_wl_np)
 
 # The serving engine (DESIGN §12) layers ON TOP of core; its API is
 # re-exported here so front doors import one namespace.  The re-export is
@@ -89,4 +92,6 @@ __all__ = [
     "make_train_step", "fine_tune", "restore_params", "InferResult",
     "dnnfuser_infer", "s2s_infer",
     "dnnfuser_infer_fused", "s2s_infer_fused", "dnnfuser_infer_batch",
+    "OptimalResult", "optimal_search", "optimal_mapping", "optimal_grid",
+    "brute_force_optimal", "enumerate_strategies", "scaled_wl_np",
 ]

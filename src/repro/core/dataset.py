@@ -229,6 +229,8 @@ def generate_teacher_corpus(workloads: list, hw, *,
                             ga_cfg: GSamplerConfig | None = None,
                             seed: int = 0, augment_jitter: int = 2,
                             evaluator: str | None = None,
+                            teacher: str = "gsampler",
+                            front_cap: int = 4096,
                             ) -> TrajectoryDataset:
     """Device-grid teacher pipeline: the scalable twin of
     :func:`collect_teacher_data`.
@@ -243,7 +245,20 @@ def generate_teacher_corpus(workloads: list, hw, *,
     mapper trains on.  Deterministic: a fixed ``seed`` reproduces the
     corpus bit-for-bit — on EITHER fitness backend (``evaluator`` = "xla"
     | "pallas" | None, forwarded to the grid GA): the backends are
-    bit-identical (DESIGN §13), so the corpus does not depend on it."""
+    bit-identical (DESIGN §13), so the corpus does not depend on it.
+
+    ``teacher`` selects the label source (DESIGN §16): "gsampler" (default)
+    runs the fused grid GA; "optimal" replaces the stochastic elites with
+    the single provably optimal strategy per condition from the exact DP
+    oracle (:func:`repro.core.optimal.optimal_search`; ``front_cap`` is
+    forwarded — the oracle raises rather than approximate when a condition
+    exceeds it, so keep "optimal" to small-to-mid chains).  Everything
+    downstream — jitter augmentation, decoration, filtering, the
+    :class:`TrajectoryDataset` schema — is byte-identical between the two
+    teachers; only the elite strategies differ."""
+    if teacher not in ("gsampler", "optimal"):
+        raise ValueError(f"unknown teacher {teacher!r}; "
+                         "expected 'gsampler' or 'optimal'")
     accels = list(hw) if isinstance(hw, (list, tuple)) else [hw]
     if any(not isinstance(a, AccelConfig) for a in accels):
         raise TypeError("generate_teacher_corpus needs AccelConfig presets "
@@ -257,14 +272,26 @@ def generate_teacher_corpus(workloads: list, hw, *,
     ns = np.asarray([w.n for w in wl_list], np.int64)
     cfg = ga_cfg or GSamplerConfig(seed=seed)
 
-    # pack the grid ONCE: the GA search and the decoration share it
-    wls = cm.stack_workloads(
-        [cm.pack_workload(w, a, max_steps) for w, a, _ in conds])
-    res = gsampler_search_grid(wl_list, hw_list, batches, budgets,
-                               nmax=max_steps, cfg=cfg, top_k=top_k,
-                               packed=wls, evaluator=evaluator)
+    # pack the grid ONCE: the teacher search and the decoration share it
+    packed = [cm.pack_workload(w, a, max_steps) for w, a, _ in conds]
+    wls = cm.stack_workloads(packed)
+    if teacher == "optimal":
+        from .optimal import optimal_search
+        elites = np.stack([
+            optimal_search({k: np.asarray(v) for k, v in p.items()},
+                           batch, float(bud), a,
+                           front_cap=front_cap).strategy
+            for p, (_, a, _), bud in zip(packed, conds, budgets)
+        ])[:, None, :]                                    # [C, 1, P]
+        base_lat = np.asarray(
+            cm.baseline_grid(wls, jnp.asarray(batches), hw_list).latency)
+    else:
+        res = gsampler_search_grid(wl_list, hw_list, batches, budgets,
+                                   nmax=max_steps, cfg=cfg, top_k=top_k,
+                                   packed=wls, evaluator=evaluator)
+        elites, base_lat = res.strategies, res.baseline_latency
     rng = np.random.default_rng(seed)
-    cand = _augment_candidates(rng, res.strategies, ns, batch, top_k,
+    cand = _augment_candidates(rng, elites, ns, batch, top_k,
                                augment_jitter)
 
     st, rtg, ac, mk, fin = _decorate_grid(
@@ -272,7 +299,7 @@ def generate_teacher_corpus(workloads: list, hw, *,
         hw_list)
     st, rtg, ac, mk = (np.asarray(x) for x in (st, rtg, ac, mk))
     valid = np.asarray(fin.valid)
-    speedup = res.baseline_latency[:, None] / np.maximum(
+    speedup = base_lat[:, None] / np.maximum(
         np.asarray(fin.latency), 1e-12)
     feats = np.stack([np.asarray(accel_features(a), np.float32)
                       for a in hw_list])                       # [C, F]

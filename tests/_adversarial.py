@@ -1,0 +1,109 @@
+"""Shared adversarial workload set for the optimality-oracle tests.
+
+Each case is a (name, workload, batch, budget_bytes, pack_accel,
+serve_accel) tuple chosen to sit on an edge the evaluators historically
+get wrong (DESIGN §16): degenerate single-layer chains, budgets exactly
+at the feasibility boundary, pack/serve BPE mismatch, mixed-magnitude
+layer sizes, and depthwise utilization caps.  Not collected by pytest
+(no ``test_`` prefix); imported by test_optimal / test_kernels /
+test_search via the tests-dir sys.path entry.
+"""
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core import ref_model
+from repro.core.accel import ACCEL_ZOO, PAPER_ACCEL
+from repro.workloads.layer import Layer, Workload
+
+MB = 2.0 ** 20
+NMAX = 8
+
+
+def _wl(name, layers, input_elems):
+    return Workload(name=name, layers=tuple(layers),
+                    input_elems=float(input_elems),
+                    input_shape6=(4, 4, 4, 4, 1, 1))
+
+
+def single_layer():
+    """n=1: the only fusion decision is the trailing position's tiling."""
+    return _wl("adv_single", [
+        Layer.op("conv", macs=2.0e6, out_elems=4096.0, w_elems=1024.0,
+                 shape6=(8, 8, 8, 8, 1, 1)),
+    ], input_elems=4096.0)
+
+
+def mixed_magnitude():
+    """Layer sizes spanning 4 orders of magnitude: rounding in f32
+    accumulations shows up here first."""
+    return _wl("adv_mixed", [
+        Layer.op("big", macs=5.0e8, out_elems=2.0e6, w_elems=256.0,
+                 shape6=(64, 64, 32, 32, 1, 1)),
+        Layer.op("tiny", macs=3.0e4, out_elems=64.0, w_elems=1.0e5,
+                 shape6=(2, 2, 2, 2, 1, 1)),
+        Layer.op("mid", macs=1.0e6, out_elems=9000.0, w_elems=4096.0,
+                 shape6=(16, 16, 8, 8, 1, 1)),
+    ], input_elems=1.0e6)
+
+
+def depthwise_capped():
+    """Depthwise layer (util_cap=0.08) between two convs: the utilization
+    clamp must survive every evaluator port."""
+    return _wl("adv_dw", [
+        Layer.conv("c0", k=32, c=16, y=14, x=14, r=3, s=3),
+        Layer.depthwise("dw", c=32, y=14, x=14, r=3, s=3),
+        Layer.conv("c1", k=64, c=32, y=7, x=7, r=1, s=1),
+    ], input_elems=16.0 * 14 * 14)
+
+
+def skip_chain():
+    """Residual skips, including a skip to the network input (src=0) and a
+    skip that crosses a likely group boundary."""
+    return _wl("adv_skip", [
+        Layer.conv("c0", k=16, c=8, y=8, x=8, r=3, s=3),
+        Layer.conv("c1", k=16, c=16, y=8, x=8, r=3, s=3, skip_src=0),
+        Layer.conv("c2", k=16, c=16, y=8, x=8, r=3, s=3),
+        Layer.conv("c3", k=16, c=16, y=8, x=8, r=3, s=3, skip_src=1),
+    ], input_elems=8.0 * 8 * 8)
+
+
+def _boundary_budget(wl, batch, hw, frac=0.6):
+    """A budget EXACTLY equal to some strategy's f64 peak: feasibility at
+    this budget flips on the comparison's tie-handling (peak <= budget)."""
+    from repro.core import optimal as op
+    wl_np = {k: np.asarray(v)
+             for k, v in cm.pack_workload(wl, hw, NMAX).items()}
+    # peak of the all-sync (no-fusion) strategy is always achievable
+    s = np.full(NMAX, cm.SYNC, np.int32)
+    s[0] = batch
+    ref = ref_model.evaluate_ref(op.scaled_wl_np(wl_np, hw), s, batch,
+                                 1e30, hw)
+    return float(ref["peak_mem"])
+
+
+def cases():
+    """The adversarial (name, wl, batch, budget_bytes, pack_hw, serve_hw)
+    grid.  pack_hw != serve_hw rows exercise the BPE-rescale path."""
+    edge, dc = ACCEL_ZOO["edge"], ACCEL_ZOO["datacenter"]
+    out = [
+        ("single_tight", single_layer(), 8, 0.05 * MB, edge, edge),
+        ("single_loose", single_layer(), 8, 64 * MB, edge, edge),
+        ("mixed_mag", mixed_magnitude(), 16, 24 * MB, edge, edge),
+        ("mixed_mag_bpe", mixed_magnitude(), 16, 24 * MB, PAPER_ACCEL, dc),
+        ("depthwise", depthwise_capped(), 8, 2 * MB, edge, edge),
+        ("skips", skip_chain(), 8, 1 * MB, edge, edge),
+        ("skips_bpe", skip_chain(), 8, 1 * MB, PAPER_ACCEL, dc),
+    ]
+    # budget exactly AT the all-sync peak (feasible by <=), and one ulp
+    # below it (the all-sync fallback must report invalid or find another)
+    wl = depthwise_capped()
+    at = _boundary_budget(wl, 8, edge)
+    out.append(("boundary_at", wl, 8, at, edge, edge))
+    out.append(("boundary_below", wl, 8, np.nextafter(at, 0.0), edge, edge))
+    return out
+
+
+def packed(wl, pack_hw):
+    """Packed numpy workload dict at NMAX for ``pack_hw``'s datatype."""
+    return {k: np.asarray(v)
+            for k, v in cm.pack_workload(wl, pack_hw, NMAX).items()}

@@ -162,3 +162,50 @@ def test_dt_apply_time_offsets():
                     jnp.full((B,), cfg.max_steps - 2, jnp.int32))
     assert np.isnan(np.asarray(over)).any(), \
         "out-of-table time offsets must poison the output"
+
+
+# ---------------------------------------------------------------------------
+# teacher="optimal" (DESIGN §16): provably-optimal labels, identical schema
+# ---------------------------------------------------------------------------
+
+
+def _gen_optimal(seed):
+    return generate_teacher_corpus(
+        [tiny_cnn()], PAPER_ACCEL, batch=8, budgets_mb=[2, 6],
+        max_steps=12, top_k=4, seed=seed, augment_jitter=1,
+        teacher="optimal")
+
+
+def test_optimal_teacher_corpus_schema_and_determinism():
+    """Same TrajectoryDataset schema as the GA teacher, bit-identical
+    across reruns of the same seed."""
+    a, b = _gen_optimal(3), _gen_optimal(3)
+    ga = _gen(0)
+    for k in ("rtg", "states", "actions", "mask", "t0", "hw"):
+        np.testing.assert_array_equal(getattr(a, k), getattr(b, k),
+                                      err_msg=k)
+        assert getattr(a, k).dtype == getattr(ga, k).dtype, k
+        assert getattr(a, k).shape[1:] == getattr(ga, k).shape[1:], k
+    assert a.meta == b.meta and len(a) > 0
+
+
+def test_optimal_teacher_labels_are_the_certified_optimum():
+    """The highest-speedup trajectory per condition decodes back to the
+    oracle's exact optimum latency."""
+    from repro.core import optimal as op
+    ds = _gen_optimal(0)
+    for budget in (2.0, 6.0):
+        env = FusionEnv(tiny_cnn(), PAPER_ACCEL, batch=8,
+                        budget_bytes=budget * MB, nmax=12)
+        res = op.optimal_mapping(env, certify=False)
+        assert res.valid
+        best = max((m[2] for m in ds.meta if m[1] == budget), default=0.0)
+        want = env.baseline_latency / res.latency
+        assert best == pytest.approx(want, rel=1e-4), (budget, best, want)
+
+
+def test_optimal_teacher_rejects_unknown_name():
+    with pytest.raises(ValueError, match="teacher"):
+        generate_teacher_corpus([tiny_cnn()], PAPER_ACCEL, batch=8,
+                                budgets_mb=[2], max_steps=12,
+                                teacher="dp")

@@ -115,3 +115,27 @@ def test_readme_public_symbols_import_from_repro():
     # the full advertised surface resolves, not just what README shows
     for name in repro.__all__:
         assert getattr(repro, name) is not None, name
+
+
+# Unconditional skip/xfail markers that are ALLOWED to exist, with their
+# tracked reasons.  §16 removed the last two (the hypothesis-gated
+# property tests now run a seeded fallback); anything new must be added
+# here deliberately or the guard below fails.
+TRACKED_SKIP_DEBT: dict[str, str] = {}
+
+_SKIP_MARK_RE = re.compile(
+    r"@pytest\.mark\.(?:skip|xfail)\(([^)]*)\)\s*\n\s*def\s+(\w+)")
+
+
+def test_no_untracked_skip_debt():
+    """Silent skip-debt cannot accumulate: every unconditional
+    @pytest.mark.skip/xfail decorator in tests/ must carry a reason that
+    is tracked in TRACKED_SKIP_DEBT (conditional runtime pytest.skip()
+    calls — e.g. environment probes — are exempt by construction)."""
+    found = {}
+    for p in sorted((ROOT / "tests").glob("test_*.py")):
+        for args, fn in _SKIP_MARK_RE.findall(p.read_text()):
+            found[f"{p.name}::{fn}"] = args.strip()
+    assert set(found) == set(TRACKED_SKIP_DEBT), (
+        "skip/xfail markers drifted from TRACKED_SKIP_DEBT: "
+        f"found={found!r} tracked={TRACKED_SKIP_DEBT!r}")

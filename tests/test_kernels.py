@@ -309,3 +309,75 @@ def test_autotune_block_on_interpret_backend_returns_legacy_default():
     assert bp == fusion_eval._block_size(_FE_POP.shape[0], 128)
     key = (64, fusion_eval._block_size(_FE_POP.shape[0], 256))
     assert fusion_eval.backend_stats()["autotuned_bp"][key] == bp
+
+
+# ---------------------------------------------------------------------------
+# optimality oracle (DESIGN §16): every production evaluator — XLA
+# evaluate_population, the Pallas kernel (interpret AND the compiled->
+# interpret fallback entry), and the prefix-scan serving evaluator — is
+# pinned against the exact f64 brute-force optimum on the shared
+# adversarial workload set.
+# ---------------------------------------------------------------------------
+
+import _adversarial as adv
+from repro.core import optimal as op
+
+
+def _oracle_rows(wl_np, batch, nmax):
+    """bf-optimal strategy + all-sync + a strided slice of the full space."""
+    n = int(wl_np["n"])
+    pop = op.enumerate_strategies(n, batch, nmax)
+    idx = np.unique(np.linspace(0, len(pop) - 1, 14).astype(int))
+    return pop[idx]
+
+
+@pytest.mark.parametrize("case", adv.cases(), ids=lambda c: c[0])
+def test_evaluators_agree_with_f64_oracle_adversarial(case):
+    """On adversarial chains all four evaluator ports agree with the f64
+    loop oracle within kernel tolerance, and their best valid row equals
+    the certified brute-force optimum."""
+    name, wl, batch, budget, pack_hw, serve_hw = case
+    wl_np = adv.packed(wl, pack_hw)
+    bf = op.brute_force_optimal(wl_np, batch, budget, serve_hw)
+    pop = np.concatenate([bf.strategy[None], _oracle_rows(wl_np, batch,
+                                                          adv.NMAX)])
+    wl_serve = op.scaled_wl_np(wl_np, serve_hw)
+
+    outs = {
+        "xla": cm.evaluate_population(wl_np, jnp.asarray(pop), float(batch),
+                                      float(budget), serve_hw),
+        "pallas": ops.fusion_eval_population(pop, wl_np, batch=float(batch),
+                                             budget_bytes=float(budget),
+                                             hw=serve_hw, interpret=True),
+        "pallas_auto": ops.fusion_eval_population(
+            pop, wl_np, batch=float(batch), budget_bytes=float(budget),
+            hw=serve_hw),                    # compiled-or-fallback resolve
+    }
+    scans = [cm.prefix_scan(wl_np, jnp.asarray(s), float(batch),
+                            float(budget), serve_hw)[1] for s in pop]
+    outs["prefix_scan"] = cm.CostOut(*(np.stack([np.asarray(getattr(f, k))
+                                                 for f in scans])
+                                       for k in cm.CostOut._fields))
+
+    boundary = name.startswith("boundary")
+    for port, out in outs.items():
+        lat = np.asarray(out.latency, np.float64)
+        pk = np.asarray(out.peak_mem, np.float64)
+        va = np.asarray(out.valid, bool)
+        best = np.inf
+        for i, s in enumerate(pop):
+            want = ref_model.evaluate_ref(wl_serve, s, batch, budget,
+                                          serve_hw)
+            assert abs(lat[i] - want["latency"]) <= \
+                1e-5 * max(abs(want["latency"]), 1e-30), (port, name, i)
+            assert abs(pk[i] - want["peak_mem"]) <= \
+                1e-5 * max(abs(want["peak_mem"]), 1.0), (port, name, i)
+            at_edge = abs(want["peak_mem"] - budget) <= 1e-4 * max(budget,
+                                                                   1.0)
+            if not (boundary and at_edge):
+                assert bool(va[i]) == want["valid"], (port, name, i)
+            if va[i] and want["valid"]:
+                best = min(best, lat[i])
+        if bf.valid and not boundary:
+            assert abs(best - bf.latency) <= 1e-5 * abs(bf.latency), \
+                (port, name, best, bf.latency)

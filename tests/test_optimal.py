@@ -1,0 +1,209 @@
+"""Optimality certification (DESIGN §16): the exact DP oracle pinned
+bit-for-bit against exhaustive brute-force enumeration, plus the f32
+certification contract.
+
+The property tests run under hypothesis when the 'test' extra is
+installed and fall back to a fixed seeded-numpy sweep otherwise, so
+the oracle is exercised in BOTH environments (CI installs hypothesis;
+the bare install must not silently skip its only ground-truth check).
+"""
+import numpy as np
+import pytest
+
+import _adversarial as adv
+from repro.core import cost_model as cm
+from repro.core import optimal as op
+from repro.core import ref_model
+from repro.core.accel import ACCEL_ZOO, PAPER_ACCEL
+from repro.core.env import FusionEnv
+from repro.workloads.layer import Layer, Workload
+from repro.workloads import tiny_cnn
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+MB = 2.0 ** 20
+NMAX = 8
+ACCELS = sorted(ACCEL_ZOO)
+
+
+# ---------------------------------------------------------------------------
+# random small chains
+# ---------------------------------------------------------------------------
+
+
+def _chain_from_spec(n, layer_specs):
+    layers = []
+    for i, (macs, out_e, w_e, skip) in enumerate(layer_specs[:n]):
+        src = skip if (skip >= 0 and skip < i + 1) else -1
+        layers.append(Layer.op(f"l{i}", macs=float(macs),
+                               out_elems=float(out_e), w_elems=float(w_e),
+                               shape6=(4, 4, 4, 4, 1, 1), skip_src=src))
+    return Workload(name=f"rand{n}", layers=layers, input_elems=64.0,
+                    input_shape6=(4, 4, 4, 4, 1, 1))
+
+
+def _check_dp_vs_brute(wl, batch, budget, hw):
+    """The core pin: DP optimum == brute-force optimum, bit-exact."""
+    wl_np = {k: np.asarray(v)
+             for k, v in cm.pack_workload(wl, hw, NMAX).items()}
+    dp = op.optimal_search(wl_np, batch, budget, hw)
+    bf = op.brute_force_optimal(wl_np, batch, budget, hw)
+    assert dp.valid == bf.valid, (dp, bf)
+    if dp.valid:
+        assert dp.latency == bf.latency, \
+            f"DP {dp.latency!r} != brute {bf.latency!r}"
+    # argmin validity: the DP's own strategy re-evaluates to its cost
+    ref = ref_model.evaluate_ref(op.scaled_wl_np(wl_np, hw), dp.strategy,
+                                 batch, budget, hw)
+    assert ref["latency"] == dp.latency and ref["valid"] == dp.valid
+    assert ref["peak_mem"] == dp.peak_mem
+    return dp, bf
+
+
+def _run_random_case(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 6))
+    specs = [(10.0 ** rng.uniform(2, 7), 10.0 ** rng.uniform(1, 4),
+              10.0 ** rng.uniform(1, 4), int(rng.integers(-2, i + 1)))
+             for i in range(n)]
+    wl = _chain_from_spec(n, specs)
+    batch = int(rng.integers(2, 5))
+    hw = ACCEL_ZOO[ACCELS[int(rng.integers(0, len(ACCELS)))]]
+    budget = float(10.0 ** rng.uniform(-2, 2)) * MB
+    _check_dp_vs_brute(wl, batch, budget, hw)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(min_value=0, max_value=10 ** 9))
+    def test_dp_matches_brute_force_random_chains(seed):
+        """Random chains (n<=5, skips, random accel/budget): the DP's
+        optimum latency/validity/peak must equal exhaustive enumeration."""
+        _run_random_case(seed)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(25))
+    def test_dp_matches_brute_force_random_chains(seed):
+        """Seeded fallback of the hypothesis sweep (no 'test' extra)."""
+        _run_random_case(seed)
+
+
+def test_dp_budget_boundary_bit_flip():
+    """Budget EXACTLY at the optimum's peak stays feasible (<=); one ulp
+    below must change the argmin or flip to invalid — on both oracles."""
+    wl = adv.depthwise_capped()
+    hw = ACCEL_ZOO["edge"]
+    wl_np = adv.packed(wl, hw)
+    loose = op.brute_force_optimal(wl_np, 8, 1e30, hw)
+    at = float(loose.peak_mem)
+    dp_at, bf_at = _check_dp_vs_brute(wl, 8, at, hw)
+    assert dp_at.valid and dp_at.latency == loose.latency
+    below = np.nextafter(at, 0.0)
+    dp_lo, bf_lo = _check_dp_vs_brute(wl, 8, below, hw)
+    assert (not dp_lo.valid) or dp_lo.peak_mem <= below
+
+
+@pytest.mark.parametrize("case", adv.cases(), ids=lambda c: c[0])
+def test_dp_matches_brute_force_adversarial(case):
+    """The shared adversarial set (single-layer, boundary budgets, BPE
+    mismatch, mixed magnitudes, depthwise caps): DP == brute force."""
+    name, wl, batch, budget, pack_hw, serve_hw = case
+    wl_np = adv.packed(wl, pack_hw)
+    dp = op.optimal_search(wl_np, batch, budget, serve_hw)
+    bf = op.brute_force_optimal(wl_np, batch, budget, serve_hw)
+    assert dp.valid == bf.valid, name
+    if dp.valid:
+        assert dp.latency == bf.latency, name
+
+
+def test_position0_value_is_cost_irrelevant():
+    """Position 0 is the network input: its strategy slot must not affect
+    any evaluator (the oracle pins it to ``batch`` by convention)."""
+    wl = adv.mixed_magnitude()
+    hw = ACCEL_ZOO["edge"]
+    wl_np = adv.packed(wl, hw)
+    dp = op.optimal_search(wl_np, 16, 24 * MB, hw)
+    s2 = dp.strategy.copy()
+    s2[0] = 1
+    ref = ref_model.evaluate_ref(op.scaled_wl_np(wl_np, hw), s2, 16,
+                                 24 * MB, hw)
+    assert ref["latency"] == dp.latency
+
+
+# ---------------------------------------------------------------------------
+# certification against the production f32 stack
+# ---------------------------------------------------------------------------
+
+
+def test_optimal_mapping_certified_against_f32():
+    """The certify path: DT-serving's evaluator (f32 XLA) agrees with the
+    f64 DP winner within float tolerance, and the certified CostOut is
+    attached."""
+    env = FusionEnv(tiny_cnn(), ACCEL_ZOO["edge"], batch=8,
+                    budget_bytes=4 * MB, nmax=16)
+    res = op.optimal_mapping(env)
+    assert res.valid and res.certified is not None
+    assert np.isclose(float(res.certified.latency), res.latency,
+                      rtol=1e-4)
+    assert bool(res.certified.valid)
+
+
+def test_optimal_grid_matches_per_condition_search():
+    """optimal_grid == per-condition optimal_search, plus one-call f32
+    certification across a heterogeneous grid."""
+    wls = [tiny_cnn(), adv.mixed_magnitude()]
+    hws = [ACCEL_ZOO["edge"], ACCEL_ZOO["datacenter"]]
+    grid = op.optimal_grid(wls, hws, [8, 16], [4 * MB, 24 * MB], nmax=16)
+    assert len(grid) == 2
+    for r, w, a, b, g in zip(grid, wls, hws, [8, 16], [4 * MB, 24 * MB]):
+        wl_np = {k: np.asarray(v)
+                 for k, v in cm.pack_workload(w, a, 16).items()}
+        solo = op.optimal_search(wl_np, b, g, a)
+        assert r.latency == solo.latency and r.valid == solo.valid
+        assert r.certified is not None
+
+
+def test_optimal_teacher_never_above_gsampler():
+    """Sanity direction of the whole exercise: the certified optimum is a
+    lower bound on what the stochastic teacher can find."""
+    from repro.core import GSamplerConfig, gsampler_search
+    env = FusionEnv(tiny_cnn(), ACCEL_ZOO["edge"], batch=8,
+                    budget_bytes=4 * MB, nmax=16)
+    res = op.optimal_mapping(env)
+    gs = gsampler_search(env, GSamplerConfig(generations=8, population=64,
+                                             seed=0))
+    assert gs.valid
+    assert res.latency <= float(gs.latency) * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# enumeration contract
+# ---------------------------------------------------------------------------
+
+
+def test_enumerate_strategies_counts_and_limit():
+    pop = op.enumerate_strategies(2, 3, NMAX)
+    assert pop.shape == ((3 + 1) ** 2, NMAX)
+    assert np.all(pop[:, 0] == 3)
+    assert np.all(pop[:, 3:] == cm.SYNC)
+    uniq = {row.tobytes() for row in pop}
+    assert len(uniq) == len(pop)
+    with pytest.raises(ValueError):
+        op.enumerate_strategies(8, 64, NMAX, limit=1000)
+
+
+def test_front_cap_raises_rather_than_approximates():
+    """An exploding Pareto front must be a hard error, never a silently
+    truncated 'optimum'."""
+    wl = tiny_cnn()
+    hw = ACCEL_ZOO["edge"]
+    wl_np = {k: np.asarray(v)
+             for k, v in cm.pack_workload(wl, hw, 16).items()}
+    with pytest.raises(RuntimeError, match="front"):
+        op.optimal_search(wl_np, 64, 16 * MB, hw, front_cap=1)

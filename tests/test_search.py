@@ -110,3 +110,46 @@ def test_teacher_corpus_backend_equivalence():
                                       err_msg=field)
     assert ds["xla"].meta == ds["pallas"].meta
     assert len(ds["xla"]) > 0
+
+
+# ---------------------------------------------------------------------------
+# optimality lower bound (DESIGN §16): the certified exact optimum bounds
+# the entire search stack from below — a G-Sampler "improvement" past it
+# would mean the evaluator and the search disagree about the map-space.
+# ---------------------------------------------------------------------------
+
+import _adversarial as adv
+from repro.core import optimal as op
+from repro.core.accel import ACCEL_ZOO
+
+
+@pytest.mark.parametrize(
+    "case", [c for c in adv.cases() if c[4] is c[5]], ids=lambda c: c[0])
+def test_gsampler_never_below_certified_optimum(case):
+    name, wl, batch, budget, pack_hw, serve_hw = case
+    env = FusionEnv(wl, serve_hw, batch=batch, budget_bytes=budget,
+                    nmax=adv.NMAX)
+    opt = op.optimal_mapping(env, certify=False)
+    res = gsampler_search(env, GSamplerConfig(generations=10,
+                                              population=128, seed=0))
+    if not opt.valid:
+        assert not res.valid, (name, "GA found a mapping the oracle proved "
+                               "infeasible")
+        return
+    if res.valid:
+        # f32 search latency vs f64 optimum: float tolerance only
+        assert float(res.latency) >= opt.latency * (1 - 1e-4), \
+            (name, float(res.latency), opt.latency)
+
+
+def test_gsampler_reaches_optimum_on_tiny_chain():
+    """On a 3-layer chain a budgeted GA should actually FIND the optimum —
+    the bound above is tight, not vacuous."""
+    wl = adv.mixed_magnitude()
+    env = FusionEnv(wl, ACCEL_ZOO["edge"], batch=16,
+                    budget_bytes=24 * adv.MB, nmax=adv.NMAX)
+    opt = op.optimal_mapping(env, certify=False)
+    res = gsampler_search(env, GSamplerConfig(generations=30,
+                                              population=256, seed=0))
+    assert res.valid and opt.valid
+    assert float(res.latency) <= opt.latency * (1 + 1e-4)
