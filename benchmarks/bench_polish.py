@@ -1,0 +1,283 @@
+"""Propose-then-polish benchmark (DESIGN §17; beyond-paper).
+
+Measures the three §17 claims on a (network x accel x budget) grid and
+gates them in CI:
+
+ 1. **Quality**: the one-shot DT proposal + gradient polish matches or
+    beats a cold fused G-Sampler search — ``quality_ratio_mean`` =
+    mean(gs_latency / polished_latency) over cells where both are valid
+    must be >= 1.00;
+ 2. **Latency**: the fused polish call costs <= 25% of the cold
+    G-Sampler grid search's wall clock (both post-compile — the compile
+    is a once-per-shape cost the §14 serving path amortizes);
+ 3. **Warm starts**: the warm-started DE portfolio (seeded from the
+    polished proposals) reaches the cold DE run's final cost in <= 1/3
+    of the exact cost evaluations, per the searchers' own convergence
+    histories (``eval_ratio_mean`` >= 3.0).
+
+Protocol
+ - student: the shared hw-conditioned mapper from
+   ``table_hw_generalization`` (same ``artifacts/bench`` cache tag);
+ - propose: all cells in ONE ``dnnfuser_infer_batch`` call;
+ - polish: all cells in ONE ``polish_grid`` call (deterministic);
+ - cold search: ONE fused ``gsampler_search_grid`` over the same cells;
+ - portfolio: ``de_search_grid`` warm (init = polished proposals) vs
+   cold, same population/generations/seed; per cell, evaluations-to-
+   reach the target ``max(warm_final, cold_final)`` are read off the
+   best-so-far histories (evals(g) = population * (g + 2): the init
+   population plus g+1 evolved generations).
+
+Output: ``BENCH_polish.json`` rows + summary; ``--check BASELINE``
+enforces the three absolute gates above plus a ``--tol`` ratio gate on
+``quality_ratio_mean`` vs the committed baseline (mode must match,
+zero comparisons refuse) — the same contract as
+``bench_infer.check_regression``.
+
+    PYTHONPATH=src python benchmarks/bench_polish.py
+        [--quick] [--out BENCH_polish.json] [--check BASELINE] [--tol R]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (ACCEL_ZOO, GSamplerConfig, PolishConfig,
+                        PortfolioConfig, dnnfuser_infer_batch,
+                        de_search_grid, gsampler_search_grid, polish_grid)
+from repro.core import cost_model as cm
+from repro.workloads import resnet18, tiny_cnn, vgg16
+
+try:                                   # as a module (benchmarks.run) ...
+    from .table_hw_generalization import _train_mapper
+    from .table_optimality_gap import _hw_args
+except ImportError:                    # ... or as a script
+    from table_hw_generalization import _train_mapper
+    from table_optimality_gap import _hw_args
+
+MB = float(2 ** 20)
+
+# the three gates (absolute — the §17 acceptance numbers, not ratios
+# against a baseline)
+GATE_QUALITY = 1.00        # mean gs_latency / polished_latency
+GATE_WALL_FRACTION = 0.25  # polish wall / cold G-Sampler wall
+GATE_EVAL_RATIO = 3.0      # cold evals-to-target / warm evals-to-target
+
+
+def _setup(quick: bool) -> dict:
+    if quick:
+        return dict(workloads=[tiny_cnn()],
+                    accels=["edge", "nano", "mobile", "laptop"],
+                    budgets=[2.0, 4.0, 6.0],
+                    ga=GSamplerConfig(population=24, generations=20,
+                                      seed=0),
+                    de=PortfolioConfig(population=16, generations=24,
+                                       seed=0))
+    return dict(workloads=[vgg16(), resnet18()],
+                accels=["edge", "nano", "mobile", "laptop", "datacenter"],
+                budgets=[16.0, 32.0, 48.0],
+                ga=GSamplerConfig(seed=0),
+                de=PortfolioConfig(population=24, generations=40, seed=0))
+
+
+def _evals_to(history: np.ndarray, c: int, target: float,
+              pop: int) -> int:
+    """Exact cost evaluations until cell ``c``'s best-so-far curve first
+    reaches ``target``: the init population plus g+1 evolved generations
+    of ``pop`` evaluations each."""
+    hit = history[:, c] <= target
+    g = int(np.argmax(hit)) if hit.any() else history.shape[0] - 1
+    return pop * (g + 2)
+
+
+def run(quick: bool = False, out: str = "BENCH_polish.json") -> list:
+    su = _setup(quick)
+    hw_su = _hw_args(quick)
+    nmax = hw_su["max_steps"]
+    su["workloads"] = [w for w in su["workloads"] if w.n + 1 <= nmax]
+    art, cfg = _train_mapper(hw_su, quick)
+    params = art["params"]
+
+    conds = [(w, ACCEL_ZOO[a], b) for w in su["workloads"]
+             for a in su["accels"] for b in su["budgets"]]
+    wl_list = [w for w, _, _ in conds]
+    hw_list = [a for _, a, _ in conds]
+    batches = np.full(len(conds), 64.0, np.float32)
+    budgets = np.asarray([b * MB for _, _, b in conds], np.float32)
+    packed = cm.stack_workloads(
+        [cm.pack_workload(w, a, nmax) for w, a, _ in conds])
+
+    # -- propose (one fused call; warm the jit, then time) -------------------
+    def propose():
+        return dnnfuser_infer_batch(params, cfg, packed, batches, budgets,
+                                    hw_list)
+    propose()
+    t0 = time.perf_counter()
+    served = propose()
+    propose_wall = time.perf_counter() - t0
+    proposals = np.asarray(served["strategy"], np.int32)
+
+    # -- polish (one fused call; warm, then time) ----------------------------
+    pcfg = PolishConfig()
+    polish_grid(packed, proposals, batches, budgets, hw_list, cfg=pcfg)
+    t0 = time.perf_counter()
+    pol = polish_grid(packed, proposals, batches, budgets, hw_list,
+                      cfg=pcfg)
+    polish_wall = time.perf_counter() - t0
+
+    # -- cold G-Sampler (one fused grid; warm, then time) --------------------
+    def cold_gs():
+        return gsampler_search_grid(wl_list, hw_list, batches, budgets,
+                                    nmax=nmax, cfg=su["ga"], top_k=1,
+                                    packed=packed)
+    cold_gs()
+    t0 = time.perf_counter()
+    gs = cold_gs()
+    gs_wall = time.perf_counter() - t0
+    gs_lat = gs.latency[:, 0]
+    gs_valid = gs.valid[:, 0]
+
+    # -- portfolio: warm (polished seeds) vs cold ----------------------------
+    de = su["de"]
+    warm = de_search_grid(None, hw_list, batches, budgets, nmax=nmax,
+                          cfg=de, init_strategies=pol["strategy"],
+                          packed=packed)
+    cold = de_search_grid(None, hw_list, batches, budgets, nmax=nmax,
+                          cfg=de, packed=packed)
+
+    rows, ratios, eratios = [], [], []
+    for c, (w, acc, b) in enumerate(conds):
+        both = bool(pol["valid"][c]) and bool(gs_valid[c])
+        q = float(gs_lat[c] / pol["latency"][c]) if both else 0.0
+        if q:
+            ratios.append(q)
+        target = max(warm.latency[c], cold.latency[c]) * (1 + 1e-6)
+        ew = _evals_to(warm.history, c, target, de.population)
+        ec = _evals_to(cold.history, c, target, de.population)
+        er = ec / ew
+        eratios.append(er)
+        rows.append(dict(
+            workload=w.name, accel=acc.name, budget_mb=b,
+            oneshot_latency=float(served["latency"][c]),
+            oneshot_valid=bool(served["valid"][c]),
+            polished_latency=float(pol["latency"][c]),
+            polished_valid=bool(pol["valid"][c]),
+            polish_improved=bool(pol["improved"][c]),
+            gs_latency=float(gs_lat[c]), gs_valid=bool(gs_valid[c]),
+            quality_ratio=q,
+            warm_evals_to_target=ew, cold_evals_to_target=ec,
+            eval_ratio=float(er)))
+        print(f"  {w.name:9s} {acc.name:10s} @{b:5.1f}MB: "
+              f"polished {pol['latency'][c]:.3e}s vs GS "
+              f"{gs_lat[c]:.3e}s ({q:5.3f}x)  warm/cold evals "
+              f"{ew}/{ec} ({er:.1f}x)")
+
+    report = {
+        "bench": "polish",
+        "device": jax.devices()[0].platform,
+        "quick": quick,
+        "cells": len(conds),
+        "quality_ratio_mean": float(np.mean(ratios)) if ratios else 0.0,
+        "quality_ratio_min": float(np.min(ratios)) if ratios else 0.0,
+        "quality_cells": len(ratios),
+        "polish_improved_fraction": float(np.mean(pol["improved"])),
+        "polished_valid_fraction": float(np.mean(pol["valid"])),
+        "propose_wall_s": propose_wall,
+        "polish_wall_s": polish_wall,
+        "gs_wall_s": gs_wall,
+        "wall_fraction": polish_wall / gs_wall,
+        "eval_ratio_mean": float(np.mean(eratios)),
+        "eval_ratio_min": float(np.min(eratios)),
+        "warm_final_latency_mean": float(np.mean(warm.latency)),
+        "cold_final_latency_mean": float(np.mean(cold.latency)),
+        "results": rows,
+    }
+    path = pathlib.Path(out)
+    path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {path}  (quality {report['quality_ratio_mean']:.3f}x, "
+          f"polish wall {report['wall_fraction']:.3f}x GS, "
+          f"warm evals advantage {report['eval_ratio_mean']:.1f}x)")
+    return [("polish_pipeline", (propose_wall + polish_wall) * 1e6
+             / len(conds),
+             f"quality={report['quality_ratio_mean']:.3f}x"),
+            ("polish_vs_gsampler_wall", polish_wall * 1e6 / len(conds),
+             f"fraction={report['wall_fraction']:.3f}"),
+            ("portfolio_warm_advantage", 0.0,
+             f"eval_ratio={report['eval_ratio_mean']:.1f}x")]
+
+
+def check_regression(report: dict, baseline_path: str, tol: float) -> list:
+    """Gate the §17 claims; returns human-readable failures.
+
+    Hard absolute gates: ``quality_ratio_mean`` >= 1.00,
+    ``wall_fraction`` <= 0.25, ``eval_ratio_mean`` >= 3.0.  Baseline
+    gates: mode match, >=1 compared cell, and ``quality_ratio_mean``
+    within ``tol`` of the committed baseline's."""
+    base = json.loads(pathlib.Path(baseline_path).read_text())
+    if base.get("quick") != report.get("quick"):
+        return [f"baseline {baseline_path} was written with "
+                f"quick={base.get('quick')} but this run used "
+                f"quick={report.get('quick')}; regenerate the baseline in "
+                f"the same mode"]
+    failures = []
+    if report.get("quality_cells", 0) == 0:
+        failures.append("no cells where both polish and G-Sampler were "
+                        "valid — nothing compared; shrink the budgets")
+    if report["quality_ratio_mean"] < GATE_QUALITY:
+        failures.append(
+            f"quality_ratio_mean {report['quality_ratio_mean']:.4f} < "
+            f"{GATE_QUALITY:.2f}: one-shot+polish no longer matches the "
+            "cold G-Sampler")
+    if report["wall_fraction"] > GATE_WALL_FRACTION:
+        failures.append(
+            f"wall_fraction {report['wall_fraction']:.3f} > "
+            f"{GATE_WALL_FRACTION:.2f}: polish costs more than 25% of the "
+            "cold search")
+    if report["eval_ratio_mean"] < GATE_EVAL_RATIO:
+        failures.append(
+            f"eval_ratio_mean {report['eval_ratio_mean']:.2f} < "
+            f"{GATE_EVAL_RATIO:.1f}: warm starts lost their evaluation "
+            "advantage")
+    if base.get("quality_ratio_mean", 0) > 0 and \
+            report["quality_ratio_mean"] < \
+            base["quality_ratio_mean"] / tol - 1e-3:
+        failures.append(
+            f"quality_ratio_mean {report['quality_ratio_mean']:.3f} < "
+            f"baseline {base['quality_ratio_mean']:.3f} / {tol:.2f}")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized: tiny_cnn only, small GA/mapper")
+    ap.add_argument("--out", default="BENCH_polish.json")
+    ap.add_argument("--check", metavar="BASELINE",
+                    help="fail (exit 1) if any §17 gate fails or quality "
+                         "regresses more than --tol vs this baseline")
+    ap.add_argument("--tol", type=float, default=1.10,
+                    help="allowed quality ratio drop vs the baseline "
+                         "(default 1.10)")
+    args = ap.parse_args()
+    if args.check and pathlib.Path(args.out).resolve() == \
+            pathlib.Path(args.check).resolve():
+        args.out = "artifacts/bench/BENCH_polish_check.json"
+        pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    run(quick=args.quick, out=args.out)
+    if args.check:
+        report = json.loads(pathlib.Path(args.out).read_text())
+        failures = check_regression(report, args.check, args.tol)
+        if failures:
+            print("POLISH REGRESSION vs", args.check)
+            for f in failures:
+                print("  ", f)
+            raise SystemExit(1)
+        print(f"polish gate OK (tol {args.tol} vs {args.check})")
+
+
+if __name__ == "__main__":
+    main()

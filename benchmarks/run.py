@@ -14,6 +14,7 @@ Suites (``--only`` takes a comma list of the keys below; default = all):
  - ``kernel``  Pallas fusion_eval kernel vs XLA cost model
  - ``drift``   closed-loop drift recovery: refresh + hot swap (DESIGN §15)
  - ``optgap``  gap-to-optimal vs the exact DP oracle (DESIGN §16)
+ - ``polish``  propose-then-polish quality/latency/eval gates (DESIGN §17)
 
 THE ``--quick`` CONTRACT: every suite's ``run(quick=True)`` must (i) keep
 the full protocol shape — same pipeline stages, same metrics, same JSON/CSV
@@ -52,12 +53,12 @@ def main() -> None:
                          "workloads/search/training budgets")
     ap.add_argument("--only", default="",
                     help="comma list: table1,table2,table3,fig4,speed,hw,"
-                         "lm,kernel,drift,optgap")
+                         "lm,kernel,drift,optgap,polish")
     args = ap.parse_args()
 
-    from . import (bench_drift, fig4_solutions, fusion_eval_kernel,
-                   lm_mapping, speed_oneshot, table1_methods,
-                   table2_generalization, table3_transfer,
+    from . import (bench_drift, bench_polish, fig4_solutions,
+                   fusion_eval_kernel, lm_mapping, speed_oneshot,
+                   table1_methods, table2_generalization, table3_transfer,
                    table_hw_generalization, table_optimality_gap)
     suites = {
         "table1": table1_methods, "table2": table2_generalization,
@@ -65,6 +66,7 @@ def main() -> None:
         "speed": speed_oneshot, "hw": table_hw_generalization,
         "lm": lm_mapping, "kernel": fusion_eval_kernel,
         "drift": bench_drift, "optgap": table_optimality_gap,
+        "polish": bench_polish,
     }
     only = [s for s in args.only.split(",") if s]
     rows, failures = [], []

@@ -42,6 +42,10 @@ from .infer import (InferResult, dnnfuser_infer, s2s_infer,
 from .optimal import (OptimalResult, optimal_search, optimal_mapping,
                       optimal_grid, brute_force_optimal,
                       enumerate_strategies, scaled_wl_np)
+from .polish import (PolishConfig, PolishResult, polish_strategy,
+                     polish_grid)
+from .portfolio import (PortfolioConfig, PortfolioResult, de_search_grid,
+                        cmaes_search_grid)
 
 # The serving engine (DESIGN §12) layers ON TOP of core; its API is
 # re-exported here so front doors import one namespace.  The re-export is
@@ -94,4 +98,7 @@ __all__ = [
     "dnnfuser_infer_fused", "s2s_infer_fused", "dnnfuser_infer_batch",
     "OptimalResult", "optimal_search", "optimal_mapping", "optimal_grid",
     "brute_force_optimal", "enumerate_strategies", "scaled_wl_np",
+    "PolishConfig", "PolishResult", "polish_strategy", "polish_grid",
+    "PortfolioConfig", "PortfolioResult", "de_search_grid",
+    "cmaes_search_grid",
 ]

@@ -231,6 +231,7 @@ def generate_teacher_corpus(workloads: list, hw, *,
                             evaluator: str | None = None,
                             teacher: str = "gsampler",
                             front_cap: int = 4096,
+                            extra_elites: dict | None = None,
                             ) -> TrajectoryDataset:
     """Device-grid teacher pipeline: the scalable twin of
     :func:`collect_teacher_data`.
@@ -255,7 +256,16 @@ def generate_teacher_corpus(workloads: list, hw, *,
     exceeds it, so keep "optimal" to small-to-mid chains).  Everything
     downstream — jitter augmentation, decoration, filtering, the
     :class:`TrajectoryDataset` schema — is byte-identical between the two
-    teachers; only the elite strategies differ."""
+    teachers; only the elite strategies differ.
+
+    ``extra_elites`` injects serving-time refinement wins into the elite
+    pool (the §17 flywheel): a dict keyed ``(workload_name, accel_name,
+    budget_mb)`` — budget in MB, matched after ``round(..., 6)`` — whose
+    values are lists of strategy arrays (any length ≤ ``max_steps``;
+    trailing steps pad to SYNC).  Extras ride the same augmentation /
+    decoration / validity-filter path as teacher elites; conditions
+    without extras are padded with copies of their own first elite,
+    which the exact-duplicate dedup drops again."""
     if teacher not in ("gsampler", "optimal"):
         raise ValueError(f"unknown teacher {teacher!r}; "
                          "expected 'gsampler' or 'optimal'")
@@ -290,6 +300,22 @@ def generate_teacher_corpus(workloads: list, hw, *,
                                    nmax=max_steps, cfg=cfg, top_k=top_k,
                                    packed=wls, evaluator=evaluator)
         elites, base_lat = res.strategies, res.baseline_latency
+    if extra_elites:
+        per_cond = [extra_elites.get(
+            (w.name, a.name, round(float(b), 6)), ())
+            for w, a, b in conds]
+        kx = max((len(lst) for lst in per_cond), default=0)
+        if kx:
+            extra = np.repeat(elites[:, :1], kx, axis=1).copy()  # [C,kx,P]
+            for c, lst in enumerate(per_cond):
+                for k, s in enumerate(lst[:kx]):
+                    s = np.asarray(s, np.int32).ravel()
+                    if s.shape[0] > max_steps:
+                        continue            # oversized win: skip, keep filler
+                    row = np.full(max_steps, cm.SYNC, np.int32)
+                    row[: s.shape[0]] = s
+                    extra[c, k] = row
+            elites = np.concatenate([elites, extra], axis=1)
     rng = np.random.default_rng(seed)
     cand = _augment_candidates(rng, elites, ns, batch, top_k,
                                augment_jitter)

@@ -1,0 +1,405 @@
+"""Gradient polish of integer fusion strategies (DESIGN.md §17).
+
+The whole cost model is a traced JAX program, so a proposed strategy can
+be REFINED by descent instead of re-searched: relax the integer
+micro-batches to a continuous tile space (the sync structure — which
+positions flush — stays FIXED), descend a smooth twin of the cost under a
+ramped budget penalty, then re-round snapshots of the trajectory and keep
+the best exactly-scored valid candidate.
+
+Relaxation contract:
+
+ - ``mb_i = 1 + (B - 1) * sigmoid(z_i)`` maps unconstrained ``z`` into the
+   legal tile range ``[1, B]`` (no clipping kinks inside the descent);
+ - the smooth evaluator mirrors ``cost_model._evaluate_full`` EXCEPT that
+   micro-batch waves are continuous (``B / mbe`` instead of
+   ``ceil(B / mbe)``) — the one integer cliff in the model, and a lower
+   bound of the integer cost that is tight at divisors of ``B``;
+ - the descent loss is ``latency / latency_0 + lam_t * relu(peak/budget
+   - 1)^2`` with ``lam_t`` ramped geometrically from ``lam0`` to ``lam1``
+   over the steps, so early steps chase latency across the budget surface
+   and late steps are pushed back inside it.  Snapshots along the ramp
+   capture both regimes.
+
+Rounding contract (the never-worsens guarantee): every snapshot is
+re-rounded three ways (round-to-nearest, floor — it can restore validity
+that rounding up broke — and ceil — the smooth twin undercuts the real
+``ceil(B/mbe)`` just below wave boundaries, where the integer winner is
+the tile ABOVE the continuous optimum), each candidate is doubled with a
+tail-flush variant (SYNC at position ``n`` — the one topology move the
+exact scorer tries for free), the ORIGINAL is prepended, and
+all candidates are exactly re-scored through
+``cost_model.evaluate_grid`` (``evaluator`` = "xla" | "pallas", both
+backends bit-identical) — so the returned strategy is never worse than
+the input: the best valid candidate by exact latency wins, ties keep the
+original.  If NO candidate is valid, a deterministic constraint repair
+(shrink the worst group's largest stage, else split it — the G-Sampler
+operator without its coin flip) runs on the lowest-peak candidate; if
+even that fails the original comes back untouched.
+
+Everything here is strictly OPT-IN: the bit-exact one-shot serving path
+never calls it unless ``ServingConfig(polish=True)``.  The polisher is
+deterministic — no RNG anywhere — and per-condition ops are vmapped with
+no cross-lane coupling, so a request's polished answer cannot depend on
+which tick it arrived in (the §14 determinism contract).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import cost_model as cm
+from .accel import as_hw, stack_hw
+
+__all__ = ["PolishConfig", "PolishResult", "polish_strategy", "polish_grid"]
+
+
+@dataclass(frozen=True)
+class PolishConfig:
+    """Descent/rounding knobs (hashable: it is a static jit argument)."""
+    steps: int = 48          # Adam steps along the penalty ramp
+    snapshots: int = 6       # re-rounded trajectory points (3 cands each)
+    lr: float = 0.16         # Adam step size in z (logit-tile) space;
+    # sized so steps*lr covers the logit range mid-tile -> saturation
+    # (a proposal at B/2 can reach B within one descent)
+    lam0: float = 0.1        # penalty weight at step 0
+    lam1: float = 300.0      # penalty weight at the last step
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    zclip: float = 12.0      # |z| bound (sigmoid saturation guard)
+    repair_tries: int = 8    # deterministic-repair rounds for invalid cells
+
+
+@dataclass
+class PolishResult:
+    """One polished condition: the accepted strategy with its exact cost
+    and the pre-polish numbers it is guaranteed not to be worse than."""
+    strategy: np.ndarray
+    latency: float
+    peak_mem: float
+    valid: bool
+    improved: bool
+    pre_latency: float
+    pre_peak: float
+    pre_valid: bool
+    wall_s: float
+
+
+# ---------------------------------------------------------------------------
+# The smooth relaxed evaluator.
+# ---------------------------------------------------------------------------
+
+
+def _relaxed_cost(wl: dict, sync: jax.Array, mb: jax.Array, batch,
+                  budget_bytes, hw) -> cm.CostOut:
+    """Smooth twin of ``cost_model._evaluate_full`` over a FIXED sync
+    structure: ``sync`` [P] bool is given (not derived from a strategy
+    vector) and ``mb`` [P] is continuous in ``[1, B]``.  Identical math
+    except ``waves = B / mbe`` (no ceil), so the latency/peak surface is
+    differentiable in ``mb`` everywhere off the roofline/clip kinks."""
+    hw = as_hw(hw)
+    A, W = cm._scaled_AW(wl, hw)
+    F, OE, UC = wl["F"], wl["OE"], wl["UC"]
+    mask, skip, n = wl["mask"], wl["SKIP"], wl["n"]
+    P = A.shape[0]
+    pos = jnp.arange(P)
+    B = jnp.asarray(batch, jnp.float32)
+
+    sync = sync & mask
+    mb = jnp.clip(mb, 1.0, B)
+    prev_mb = jnp.roll(mb, 1).at[0].set(1.0)
+    prev_sync = jnp.roll(sync, 1).at[0].set(False)
+    mbe = jnp.where(sync, jnp.where(prev_sync, 1.0, prev_mb), mb)
+    stage_mb = jnp.where(sync, 1.0, mb)
+    fmask = mask.astype(jnp.float32)
+
+    gid = (jnp.cumsum(sync.astype(jnp.int32)) - sync.astype(jnp.int32))
+    head = mask & (jnp.roll(sync, 1).at[0].set(False) | (pos == 1))
+    tail = mask & (sync | (pos == n))
+    glen = jax.ops.segment_sum(fmask, gid, num_segments=P,
+                               indices_are_sorted=True)
+    fused = (glen[gid] > 1.0) & mask
+    mbe = jnp.where(fused, mbe, B)
+
+    A_prev = jnp.roll(A, 1).at[0].set(0.0)
+    has_skip = (skip >= 0) & mask
+    src = jnp.clip(skip, 0, P - 1)
+    same_group = has_skip & (gid[src] == gid)
+    skip_hold = jnp.where(same_group, mbe * A[src], 0.0)
+    skip_traffic = jnp.where(has_skip & ~same_group, 2.0 * B * A[src], 0.0)
+
+    m_fused = (stage_mb * A + head.astype(jnp.float32) * mbe * A_prev
+               + skip_hold)
+    mem_i = jnp.where(fused, m_fused, jnp.minimum(m_fused,
+                                                  hw.stream_buf_bytes))
+    M_g = jax.ops.segment_sum(mem_i * fmask, gid, num_segments=P,
+                              indices_are_sorted=True)
+
+    waves = B / mbe                       # continuous: the relaxation
+    t_i = (head.astype(jnp.float32) * B * A_prev
+           + tail.astype(jnp.float32) * B * A + W * waves + skip_traffic)
+    T_g = jax.ops.segment_sum(t_i * fmask, gid, num_segments=P,
+                              indices_are_sorted=True)
+
+    util = jnp.clip(mbe * OE / (hw.npe * hw.pe_lanes), cm._UTIL_MIN, UC)
+    comp = B * F / hw.peak_macs / util
+    C_g = jax.ops.segment_sum(comp * fmask, gid, num_segments=P,
+                              indices_are_sorted=True)
+    o_i = B * (A_prev + A) + W * waves
+    O_g = jax.ops.segment_sum(o_i * fmask, gid, num_segments=P,
+                              indices_are_sorted=True)
+    wave_g = jax.ops.segment_sum(waves * fmask, gid, num_segments=P,
+                                 indices_are_sorted=True)
+
+    return cm.finalize_groups(C_g, T_g, O_g, M_g, wave_g, glen,
+                              budget_bytes, hw)
+
+
+def _mb_of(z: jax.Array, B) -> jax.Array:
+    return 1.0 + (B - 1.0) * jax.nn.sigmoid(z)
+
+
+def _z_of(strategy: jax.Array, B) -> jax.Array:
+    """Logit-space init: ``mb_of(z_of(s)) ~= clip(s, 1, B)``.  SYNC
+    positions land at the low saturation (their tile is unused — a sync
+    rides its producer's micro-batch)."""
+    mb0 = jnp.clip(strategy.astype(jnp.float32), 1.0, B)
+    frac = jnp.clip((mb0 - 1.0) / jnp.maximum(B - 1.0, 1e-6),
+                    1e-4, 1.0 - 1e-4)
+    return jnp.log(frac) - jnp.log1p(-frac)
+
+
+def _snap_indices(cfg: PolishConfig) -> tuple[int, ...]:
+    """Static snapshot steps: ``snapshots`` points spread over the ramp,
+    always including the final step (skipping step ~0: that is the
+    original, which is prepended as its own candidate)."""
+    k = max(1, min(cfg.snapshots, cfg.steps))
+    return tuple(sorted({int(i) for i in
+                         np.linspace(0, cfg.steps - 1, k + 1)[1:]}))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _descent_grid_jit(wls, strategies, batches, budgets, hw,
+                      cfg: PolishConfig):
+    """Vmapped Adam descent: [C] conditions -> tile snapshots [C, K, P].
+
+    Deterministic (no RNG) and per-condition independent — a lane's
+    snapshots do not depend on its neighbours or its index."""
+    lams = jnp.exp(jnp.linspace(jnp.log(cfg.lam0), jnp.log(cfg.lam1),
+                                cfg.steps))
+    snap = jnp.asarray(_snap_indices(cfg))
+
+    def one(wl, s, b, m, h):
+        B = jnp.asarray(b, jnp.float32)
+        sync = (s < 0) & wl["mask"]
+        z0 = _z_of(s, B)
+        lat0 = jnp.maximum(
+            _relaxed_cost(wl, sync, _mb_of(z0, B), B, m, h).latency, 1e-30)
+
+        def loss(z, lam):
+            out = _relaxed_cost(wl, sync, _mb_of(z, B), B, m, h)
+            over = jnp.maximum(out.peak_mem / m - 1.0, 0.0)
+            return out.latency / lat0 + lam * over * over
+
+        def step(carry, lam):
+            z, mu, nu, t = carry
+            g = jax.grad(loss)(z, lam)
+            t = t + 1.0
+            mu = cfg.beta1 * mu + (1.0 - cfg.beta1) * g
+            nu = cfg.beta2 * nu + (1.0 - cfg.beta2) * g * g
+            mh = mu / (1.0 - cfg.beta1 ** t)
+            nh = nu / (1.0 - cfg.beta2 ** t)
+            z = jnp.clip(z - cfg.lr * mh / (jnp.sqrt(nh) + cfg.eps),
+                         -cfg.zclip, cfg.zclip)
+            return (z, mu, nu, t), _mb_of(z, B)
+
+        init = (z0, jnp.zeros_like(z0), jnp.zeros_like(z0),
+                jnp.float32(0.0))
+        _, mbs = jax.lax.scan(step, init, lams)
+        return mbs[snap]                                     # [K, P]
+
+    return jax.vmap(one)(wls, strategies, batches, budgets, hw)
+
+
+# ---------------------------------------------------------------------------
+# Re-rounding, exact scoring, deterministic repair.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("tries", "evaluator"))
+def _repair_det_jit(wls, s, batches, budgets, hw, tries: int,
+                    evaluator: str = "xla"):
+    """Deterministic twin of ``gsampler._repair_grid``: while a strategy
+    is over budget, SHRINK the worst group's largest staged micro-batch,
+    or SPLIT the group when no stage can shrink — no coin flip, so the
+    result is a pure function of the input (lane-order invariant)."""
+    C, K, P = s.shape
+    pos = jnp.arange(P)
+    mask = wls["mask"]
+
+    def cond_fn(carry):
+        _, i, pending = carry
+        return (i < tries) & pending
+
+    def round_fn(carry):
+        s, i, _ = carry
+        out, gid, M_g = cm.evaluate_grid_stats(wls, s, batches, budgets,
+                                               hw, evaluator=evaluator)
+        invalid = ~out.valid                                  # [C, K]
+        worst = jnp.argmax(M_g, axis=-1)
+        members = (gid == worst[..., None]) & mask[:, None, :]
+        start = jnp.argmax(members, axis=-1)
+        end = P - 1 - jnp.argmax(members[..., ::-1], axis=-1)
+        mid = (start + end) // 2
+        multi = end > start
+        seg_mb = jnp.where(members & (s > 1), s, 0)
+        jmax = jnp.argmax(seg_mb, axis=-1)
+        has_mb = jnp.max(seg_mb, axis=-1) > 1
+        onehot_mid = pos[None, None, :] == mid[..., None]
+        onehot_j = pos[None, None, :] == jmax[..., None]
+        shrink_s = jnp.where(onehot_j, jnp.maximum(1, s // 2), s)
+        split_s = jnp.where(multi[..., None] & onehot_mid, cm.SYNC, s)
+        new = jnp.where(has_mb[..., None], shrink_s, split_s)
+        apply = invalid & members.any(-1)
+        s = jnp.where(apply[..., None], new, s)
+        return s, i + 1, invalid.any()
+
+    s, _, _ = jax.lax.while_loop(cond_fn, round_fn,
+                                 (s, jnp.int32(0), jnp.bool_(True)))
+    return s
+
+
+def _round_candidates(strategies: np.ndarray, mbs: np.ndarray,
+                      batches: np.ndarray, ns: np.ndarray,
+                      mask: np.ndarray) -> np.ndarray:
+    """[original | round | floor | ceil](snapshots)] x [as-is |
+    tail-flush] -> [C, 2(1+3K), P].
+
+    Sync positions and padding keep SYNC; tiles clip to [1, B].  All
+    three integer neighbours matter: the smooth ``B/mbe`` twin undercuts
+    the real ``ceil(B/mbe)`` just below wave boundaries, so the
+    continuous optimum often sits at e.g. 63.4 where 64 (ceil) is the
+    true winner, 63 (round/floor) pays a whole extra wave, and floor can
+    restore validity that rounding up broke."""
+    C, K, P = mbs.shape
+    pos = np.arange(P)
+    validp = pos[None, :] <= ns[:, None]
+    sync = (strategies < 0) & mask
+    B = batches.astype(np.float64)[:, None, None]
+    tiles = np.concatenate([np.rint(mbs), np.floor(mbs), np.ceil(mbs)],
+                           axis=1)
+    tiles = np.clip(tiles, 1.0, B).astype(np.int32)
+    cand = np.where(sync[:, None, :], cm.SYNC, tiles)
+    cand = np.where(validp[:, None, :], cand, cm.SYNC)
+    cand = np.concatenate([strategies[:, None, :], cand],
+                          axis=1).astype(np.int32)
+    # tail-flush variants: the one sync-topology move the exact scorer
+    # gets to try for free — flushing the LAST layer (SYNC at position n)
+    # shrinks the final group's working set, which at tight budgets lets
+    # the interior tiles stay saturated instead of shrinking everywhere.
+    # The descent's tiles are reused; position 0 can never sync (rows
+    # with n == 0 just duplicate, and duplicates re-score harmlessly).
+    tail = (pos[None, :] == ns[:, None]) & (ns > 0)[:, None]
+    flush = np.where(tail[:, None, :], cm.SYNC, cand)
+    return np.concatenate([cand, flush], axis=1)
+
+
+def polish_grid(wls: dict, strategies, batches, budgets_bytes, hw, *,
+                cfg: PolishConfig = PolishConfig(),
+                evaluator: str | None = None) -> dict:
+    """Polish [C] proposed strategies in one fused pipeline.
+
+    ``wls`` is a ``stack_workloads`` dict [C, ...]; ``strategies``
+    [C, P] int32 (SYNC = -1); ``hw`` anything ``accel.stack_hw`` accepts.
+    Returns a dict of numpy arrays: the accepted ``strategy`` [C, P] plus
+    its exact ``latency`` / ``peak_mem`` / ``valid`` and the pre-polish
+    ``pre_latency`` / ``pre_peak`` / ``pre_valid``; ``improved`` [C] marks
+    cells where polish strictly beat the proposal (lower exact latency,
+    or validity restored).  Per cell the result is NEVER worse than the
+    input (see the module docstring's rounding contract)."""
+    strategies = np.asarray(strategies, np.int32)
+    C, P = strategies.shape
+    batches = np.asarray(batches, np.float32)
+    budgets = np.asarray(budgets_bytes, np.float32)
+    hwv = stack_hw(hw, C)
+    wls_j = {k: jnp.asarray(v) for k, v in wls.items()}
+    mask = np.asarray(wls["mask"]).astype(bool)
+    ns = np.asarray(wls["n"], np.int64)
+    ev = cm._resolve_evaluator(evaluator)
+
+    mbs = np.asarray(_descent_grid_jit(
+        wls_j, jnp.asarray(strategies), jnp.asarray(batches),
+        jnp.asarray(budgets), hwv, cfg))                      # [C, K, P]
+    cands = _round_candidates(strategies, mbs, batches, ns, mask)
+    out = cm.evaluate_grid(wls_j, jnp.asarray(cands),
+                           jnp.asarray(batches), jnp.asarray(budgets),
+                           hwv, evaluator=ev)
+    lat = np.asarray(out.latency)
+    peak = np.asarray(out.peak_mem)
+    val = np.asarray(out.valid)
+
+    rows = np.arange(C)
+    score = np.where(val, lat, np.inf)
+    pick = np.argmin(score, axis=1)        # ties -> lowest index: original
+    has_valid = val.any(axis=1)
+
+    final = cands[rows, pick]
+    f_lat, f_peak, f_val = lat[rows, pick], peak[rows, pick], val[rows, pick]
+
+    if not has_valid.all():
+        # no rounding was valid anywhere in these cells: deterministic
+        # repair of the lowest-peak candidate, then exact re-score
+        alt = np.argmin(peak, axis=1)
+        seed = cands[rows, np.where(has_valid, pick, alt)][:, None, :]
+        rep = np.asarray(_repair_det_jit(
+            wls_j, jnp.asarray(seed), jnp.asarray(batches),
+            jnp.asarray(budgets), hwv, cfg.repair_tries, ev))[:, 0]
+        rout = cm.evaluate_grid(wls_j, jnp.asarray(rep[:, None, :]),
+                                jnp.asarray(batches), jnp.asarray(budgets),
+                                hwv, evaluator=ev)
+        r_lat = np.asarray(rout.latency)[:, 0]
+        r_peak = np.asarray(rout.peak_mem)[:, 0]
+        r_val = np.asarray(rout.valid)[:, 0]
+        use = ~has_valid & r_val
+        final = np.where(use[:, None], rep, final)
+        f_lat = np.where(use, r_lat, f_lat)
+        f_peak = np.where(use, r_peak, f_peak)
+        f_val = np.where(use, r_val, f_val)
+        # still invalid: hand the original back untouched
+        keep = ~has_valid & ~r_val
+        final = np.where(keep[:, None], strategies, final)
+        f_lat = np.where(keep, lat[:, 0], f_lat)
+        f_peak = np.where(keep, peak[:, 0], f_peak)
+        f_val = np.where(keep, val[:, 0], f_val)
+
+    o_lat, o_peak, o_val = lat[:, 0], peak[:, 0], val[:, 0]
+    improved = (f_val & ~o_val) | (f_val & o_val & (f_lat < o_lat))
+    return dict(strategy=final.astype(np.int32), latency=f_lat,
+                peak_mem=f_peak, valid=f_val, improved=improved,
+                pre_latency=o_lat, pre_peak=o_peak, pre_valid=o_val)
+
+
+def polish_strategy(env, strategy, *, cfg: PolishConfig = PolishConfig(),
+                    evaluator: str | None = None) -> PolishResult:
+    """Polish one strategy against a ``FusionEnv`` condition (the
+    single-condition front door; :func:`polish_grid` is the fused form
+    the engine and benchmarks use)."""
+    t0 = time.perf_counter()
+    wls = cm.stack_workloads([env.wl])
+    res = polish_grid(wls, np.asarray(strategy, np.int32)[None, :],
+                      [float(env.batch)], [float(env.budget_bytes)],
+                      [env.hw], cfg=cfg, evaluator=evaluator)
+    return PolishResult(
+        strategy=res["strategy"][0], latency=float(res["latency"][0]),
+        peak_mem=float(res["peak_mem"][0]), valid=bool(res["valid"][0]),
+        improved=bool(res["improved"][0]),
+        pre_latency=float(res["pre_latency"][0]),
+        pre_peak=float(res["pre_peak"][0]),
+        pre_valid=bool(res["pre_valid"][0]),
+        wall_s=time.perf_counter() - t0)

@@ -62,6 +62,15 @@ class ServingConfig:
     repair: bool = True
     nmax_buckets: tuple | None = None
     max_coalesce: int = 16
+    # -- propose-then-polish escalation (DESIGN §17) --
+    # polish: gradient-refine every strategy-cache MISS before it is
+    # cached/answered (opt-in; never worsens a response).  escalate: route
+    # responses that are STILL budget-violating after the one-shot (and
+    # polish, when enabled) rollout through the warm-started search
+    # portfolio.  Both default off: the default serving path stays
+    # bit-identical to pre-§17 serving.
+    polish: bool = False
+    escalate: bool = False
     # -- strategy cache (DESIGN §12, §14) --
     strategy_capacity: int = 4096
     budget_quantum: float = MB
@@ -83,8 +92,15 @@ class ServingConfig:
 _ENGINE_FIELDS = ("repair", "nmax_buckets", "max_coalesce",
                   "strategy_capacity", "budget_quantum",
                   "approx_budget_sharing", "cache_path", "checkpoint_id",
-                  "replicas", "drift", "known_accels", "known_workloads")
+                  "replicas", "drift", "known_accels", "known_workloads",
+                  "polish", "escalate")
 _SCHEDULER_FIELDS = ("max_queue", "flush_ms", "max_wave")
+
+# Post-§15 fields accepted as direct kwargs WITHOUT a deprecation warning:
+# they were born after ServingConfig, so the kwarg form is a supported
+# convenience (``MapperEngine(params, cfg, polish=True)``), not a legacy
+# construction surface being phased out.
+_CURRENT_KWARGS = frozenset({"polish", "escalate"})
 
 # DeprecationWarning fires once per kwarg per process — a serving loop
 # constructing engines in a loop must not drown the log.
@@ -121,5 +137,6 @@ def config_from_kwargs(owner: str, allowed: tuple[str, ...],
         if name not in valid or name not in allowed:
             raise TypeError(f"{owner}() got an unexpected keyword argument "
                             f"{name!r}")
-        _warn_deprecated(owner, name)
+        if name not in _CURRENT_KWARGS:
+            _warn_deprecated(owner, name)
     return ServingConfig(**kwargs)

@@ -49,6 +49,9 @@ from ..core.accel import AccelConfig, HwVec, accel_features, hw_array
 from ..core.backend import backend_for
 from ..core import infer as _infer
 from ..core import cost_model as cm
+from ..core import polish as _polish
+from ..core import portfolio as _portfolio
+from ..core.gsampler import _fitness
 from .bucketing import (MB, batch_bucket, budget_bucket, coalesce,
                         default_nmax_buckets, nmax_bucket, pow2_buckets,
                         pow2_chunks)
@@ -169,6 +172,11 @@ class MapperEngine:
         self.cfg = cfg
         self.backend = backend_for(cfg)          # fail early on bad cfg
         self.repair = config.repair
+        self.polish = bool(config.polish)
+        self.escalate = bool(config.escalate)
+        self._polish_cfg = _polish.PolishConfig()
+        self._portfolio_cfg = _portfolio.PortfolioConfig(
+            population=16, generations=12)
         self.nmax_buckets = tuple(sorted(nmax_buckets))
         self.max_coalesce = batch_bucket(config.max_coalesce)
         self.budget_quantum = float(config.budget_quantum)
@@ -209,6 +217,12 @@ class MapperEngine:
         self.swaps_rejected = 0
         self.cache_invalidated = 0
         self.coalesce_hist: dict[int, int] = {}  # true chunk width -> count
+        # -- §17 propose-then-polish accounting --
+        self.escalations = 0                     # lanes sent to the portfolio
+        self.polish_invocations = 0              # lanes gradient-polished
+        self.polish_improved = 0                 # lanes polish strictly won
+        self.wins: list[dict] = []               # flywheel: improved lanes
+        self._wins_cap = 512
 
     @classmethod
     def from_config(cls, params, cfg, config: ServingConfig | None = None):
@@ -372,6 +386,10 @@ class MapperEngine:
         res = {k: np.asarray(v) for k, v in res.items()}
         self.device_calls += 1
         self.coalesce_hist[C] = self.coalesce_hist.get(C, 0) + 1
+        if self.polish or self.escalate:
+            self._refine_chunk(res, group, wl,
+                               np.asarray(batches, np.float32),
+                               np.asarray(budgets, np.float32), hwv)
         for lane, (key, req, idxs) in enumerate(group):
             strat = np.asarray(res["strategy"][lane][: req.workload.n + 1])
             peak = float(res["peak_mem"][lane])
@@ -390,6 +408,110 @@ class MapperEngine:
                          else _fits(peak, req_i.budget_bytes))
                 out[i] = MapResponse(req_i.workload.name, *entry,
                                      valid=valid, cached=k > 0)
+
+    # -- propose-then-polish escalation (DESIGN §17) -------------------------
+
+    def _refine_chunk(self, res: dict, group: list, wl: dict,
+                      batches: np.ndarray, budgets: np.ndarray,
+                      hwv: HwVec) -> None:
+        """Refine one fused chunk's one-shot proposals in place.
+
+        Stage 1 (``polish=True``): gradient-polish EVERY lane of the
+        chunk in one :func:`repro.core.polish.polish_grid` call — the
+        polisher is RNG-free and per-lane independent, so refined
+        responses keep the §14 tick-composition invariance of the
+        one-shot path.  Stage 2 (``escalate=True``): lanes STILL
+        budget-violating are routed through a short warm-started DE
+        portfolio run seeded from the (polished) proposal; constant
+        salts keep the escalation stream independent of which lanes of
+        which tick escalate.  Both stages only ever replace a lane when
+        the replacement scores strictly better under the teacher's
+        fitness (valid beats invalid; then latency; then budget
+        overshoot), so refinement never worsens a response."""
+        C = len(group)
+        base = res["speedup"] * np.maximum(res["latency"], 1e-30)
+        improved = np.zeros(len(res["strategy"]), bool)
+        if self.polish:
+            p = _polish.polish_grid(wl, res["strategy"], batches, budgets,
+                                    hwv, cfg=self._polish_cfg)
+            self.polish_invocations += C
+            self.polish_improved += int(np.count_nonzero(p["improved"][:C]))
+            improved |= p["improved"]
+            res["strategy"] = np.asarray(p["strategy"])
+            res["latency"] = np.asarray(p["latency"], res["latency"].dtype)
+            res["peak_mem"] = np.asarray(p["peak_mem"],
+                                         res["peak_mem"].dtype)
+            res["valid"] = np.asarray(p["valid"])
+            res["speedup"] = base / np.maximum(res["latency"], 1e-30)
+        if self.escalate:
+            idx = np.nonzero(~np.asarray(res["valid"][:C], bool))[0]
+            if idx.size:
+                self.escalations += int(idx.size)
+                kb = batch_bucket(int(idx.size))
+                take = np.concatenate(
+                    [idx, np.full(kb - idx.size, idx[0], idx.dtype)])
+                sub_wl = {k: v[take] for k, v in wl.items()}
+                sub_hw = HwVec(*(np.asarray(f)[take] for f in hwv))
+                r = _portfolio.de_search_grid(
+                    None, sub_hw, batches[take], budgets[take],
+                    cfg=self._portfolio_cfg,
+                    init_strategies=res["strategy"][take],
+                    salts=np.zeros(kb, np.uint32), packed=sub_wl)
+                for j, lane in enumerate(idx):
+                    cur = float(_fitness(float(res["latency"][lane]),
+                                         float(res["peak_mem"][lane]),
+                                         float(budgets[lane])))
+                    esc = float(_fitness(float(r.latency[j]),
+                                         float(r.peak_mem[j]),
+                                         float(budgets[lane])))
+                    if esc > cur:
+                        res["strategy"][lane] = r.strategies[j]
+                        res["latency"][lane] = r.latency[j]
+                        res["peak_mem"][lane] = r.peak_mem[j]
+                        res["valid"][lane] = bool(r.valid[j])
+                        res["speedup"][lane] = base[lane] / max(
+                            float(r.latency[j]), 1e-30)
+                        improved[lane] = True
+        # flywheel: refined wins become teacher elites at the next refresh
+        for lane in range(C):
+            if not (improved[lane] and bool(res["valid"][lane])):
+                continue
+            _, req, _ = group[lane]
+            self.wins.append({
+                "workload": req.workload,
+                "accel": req.accel,
+                "batch": int(req.batch),
+                "budget_bytes": float(req.budget_bytes),
+                "strategy": np.asarray(
+                    res["strategy"][lane][: req.workload.n + 1],
+                    np.int32).copy(),
+                "latency": float(res["latency"][lane]),
+                "speedup": float(res["speedup"][lane]),
+            })
+        if len(self.wins) > self._wins_cap:
+            del self.wins[: len(self.wins) - self._wins_cap]
+
+    def harvest_wins(self, *, workloads=None, accels=None,
+                     drain: bool = True) -> list[dict]:
+        """Collect (and by default drain) logged refinement wins.
+
+        ``workloads``/``accels`` filter by name (objects or strings);
+        ``None`` matches everything.  :meth:`RefreshWorker.refresh`
+        harvests the drifted region's wins and feeds them to
+        ``generate_teacher_corpus(extra_elites=...)`` so the next
+        fine-tune distills what polish/search found (DESIGN §17)."""
+        wset = (None if workloads is None
+                else {getattr(w, "name", w) for w in workloads})
+        aset = (None if accels is None
+                else {getattr(a, "name", a) for a in accels})
+        kept, got = [], []
+        for w in self.wins:
+            match = ((wset is None or w["workload"].name in wset)
+                     and (aset is None or w["accel"].name in aset))
+            (got if match else kept).append(w)
+        if drain:
+            self.wins = kept
+        return got
 
     # -- persistence (DESIGN §14) --------------------------------------------
 
@@ -526,6 +648,9 @@ class MapperEngine:
             "chunk_cap": self.chunk_cap,
             "rows_padded": self.rows_padded,
             "tick_dedup": self.tick_dedup,
+            "escalations": self.escalations,
+            "polish_invocations": self.polish_invocations,
+            "polish_improved": self.polish_improved,
             "coalesce_width_hist": dict(sorted(self.coalesce_hist.items())),
             "packed_workloads": len(self._packed),
             "strategy_hits": self.strategies.hits,

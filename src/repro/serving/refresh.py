@@ -156,10 +156,12 @@ class RefreshWorker:
         accels = sorted(accels, key=lambda a: a.name)
         budgets_mb = sorted(budgets_mb)
         self.refreshes += 1
+        extra = self._harvest_extra(workloads, accels, budgets_mb)
         corpus = generate_teacher_corpus(
             workloads, accels, batch=self.batch, budgets_mb=list(budgets_mb),
             max_steps=engine.cfg.max_steps, top_k=self.top_k,
-            ga_cfg=self.ga, seed=self.seed + self.refreshes)
+            ga_cfg=self.ga, seed=self.seed + self.refreshes,
+            extra_elites=extra or None)
         ckpt_dir = self.ckpt_dir or tempfile.mkdtemp(prefix="repro_refresh_")
         loss = self.loss_fn or _loss_for(engine.cfg)
         _, log = fine_tune(loss, engine.params, corpus, self.train,
@@ -207,11 +209,34 @@ class RefreshWorker:
             "probe_conds": len(conds), "corpus_size": len(corpus),
             "fine_tune_loss": log["final_loss"],
             "cache_invalidated": invalidated,
+            "extra_elites": sum(len(v) for v in extra.values()),
             "region": {"workloads": [w.name for w in workloads],
                        "accels": [a.name for a in accels],
                        "budgets_mb": list(budgets_mb)},
         }
         return self.last_result
+
+    def _harvest_extra(self, workloads, accels, budgets_mb) -> dict:
+        """Drain the engine's region-matched refinement wins into the
+        ``generate_teacher_corpus(extra_elites=...)`` shape (DESIGN §17):
+        ``(workload_name, accel_name, budget_mb)`` -> list of strategies.
+        Wins at budgets outside the refresh grid stay in the engine's log
+        (a later refresh over their region can still use them)."""
+        grid = {round(float(b), 6) for b in budgets_mb}
+        wins = self.engine.harvest_wins(workloads=workloads, accels=accels,
+                                        drain=False)
+        extra: dict = {}
+        taken = []
+        for w in wins:
+            bmb = round(w["budget_bytes"] / MB, 6)
+            if bmb not in grid:
+                continue
+            key = (w["workload"].name, w["accel"].name, bmb)
+            extra.setdefault(key, []).append(w["strategy"])
+            taken.append(w)
+        for w in taken:                      # drain only what we consumed
+            self.engine.wins.remove(w)
+        return extra
 
     def _probe_conds(self, workloads, accels, budgets_mb) -> list:
         """Held-out probe grid: drifted (workload x accel) pairs at

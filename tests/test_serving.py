@@ -312,8 +312,12 @@ def test_engine_stats_schema():
     for key in ("requests_served", "device_calls", "compile_count",
                 "compiled_shapes", "chunk_cap", "rows_padded", "tick_dedup",
                 "coalesce_width_hist", "strategy_hit_rate", "strategy_cache",
-                "replicas", "scheduler", "drift"):
+                "replicas", "scheduler", "drift",
+                "escalations", "polish_invocations", "polish_improved"):
         assert key in s, key
+    # §17 refinement is off by default: counters exist but never move
+    assert (s["escalations"], s["polish_invocations"],
+            s["polish_improved"]) == (0, 0, 0)
     assert s["coalesce_width_hist"] == {1: 1}
     for key in ("entries", "capacity", "shared_hits", "loads", "saves",
                 "stale_skipped"):
