@@ -1,0 +1,37 @@
+"""Contract linter: AST static analysis for the repo's own invariants.
+
+DESIGN §18.  The repo's reproduction claims rest on contracts that used to
+live only in prose — §14 bit-exact determinism, the §11/§13 "hardware is
+traced data" rule (the PR 5 silent-wrong-BPE bug class), seeded-RNG
+discipline everywhere corpora are generated.  This package turns each one
+into a machine-checked rule that fails CI at the diff, not at the
+benchmark::
+
+    python -m repro.analysis --check --baseline ANALYSIS_baseline.json
+
+Public surface: :func:`run_analysis` (one call: rule registry + file walk
++ suppressions), the :data:`RULES` registry, and the finding/baseline
+primitives.  Pure stdlib — importing it never pulls jax/numpy, so the CI
+analysis job is dependency-free.
+"""
+from __future__ import annotations
+
+import pathlib
+
+from .findings import (Finding, Severity, apply_baseline, baseline_index,
+                       load_baseline, parse_suppressions, write_baseline)
+from .framework import (AnalysisResult, Analyzer, FileContext, Rule, RULES,
+                        default_files, iter_jit_sites, register)
+from . import rules as _rules  # registers every rule family  # noqa: F401
+
+__all__ = ["Finding", "Severity", "Rule", "RULES", "Analyzer",
+           "AnalysisResult", "FileContext", "run_analysis", "default_files",
+           "iter_jit_sites", "register", "load_baseline", "baseline_index",
+           "apply_baseline", "write_baseline", "parse_suppressions"]
+
+
+def run_analysis(root: str | pathlib.Path, files=None,
+                 rules: dict | None = None) -> AnalysisResult:
+    """Run every registered rule (or ``rules``) over ``files`` under
+    ``root`` (default: ``src/**``, ``benchmarks/*``, ``examples/*``)."""
+    return Analyzer(rules).run(root, files)

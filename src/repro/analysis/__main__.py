@@ -1,0 +1,109 @@
+"""CLI for the contract linter (DESIGN §18).
+
+Usage::
+
+    python -m repro.analysis                       # report all findings
+    python -m repro.analysis --check \\
+        --baseline ANALYSIS_baseline.json          # CI gate (exit 1 on new)
+    python -m repro.analysis --write-baseline ANALYSIS_baseline.json
+    python -m repro.analysis --json out.json path/to/file.py
+    python -m repro.analysis --list-rules
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from . import (RULES, apply_baseline, load_baseline, run_analysis,
+               write_baseline)
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST contract linter for the repo's determinism, "
+                    "traced-condition and recompile contracts (DESIGN §18)")
+    ap.add_argument("paths", nargs="*",
+                    help="files to analyze, relative to --root (default: "
+                         "src/**/*.py benchmarks/*.py examples/*.py)")
+    ap.add_argument("--root", default=".",
+                    help="repository root (default: cwd)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when any unbaselined finding (or stale "
+                         "baseline entry) remains")
+    ap.add_argument("--baseline", metavar="FILE",
+                    help="subtract grandfathered findings recorded in FILE")
+    ap.add_argument("--write-baseline", metavar="FILE",
+                    help="write current findings to FILE (preserving "
+                         "existing justifications by fingerprint) and exit")
+    ap.add_argument("--json", metavar="FILE", dest="json_out",
+                    help="also dump findings as JSON to FILE")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule registry and exit")
+    ap.add_argument("--quiet", action="store_true",
+                    help="only print the summary line")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = _build_parser().parse_args(argv)
+    if args.list_rules:
+        for rid in sorted(RULES):
+            r = RULES[rid]
+            print(f"{rid}  [{r.severity:7s}] {r.description}")
+        return 0
+
+    root = pathlib.Path(args.root).resolve()
+    if not (root / "src" / "repro").is_dir():
+        print(f"error: {root} does not look like the repo root "
+              "(no src/repro); pass --root", file=sys.stderr)
+        return 2
+
+    result = run_analysis(root, files=args.paths or None)
+    findings = result.findings
+
+    if args.write_baseline:
+        p = pathlib.Path(args.write_baseline)
+        old = load_baseline(p) if p.is_file() else []
+        entries = write_baseline(p, findings, old)
+        print(f"wrote {len(entries)} baseline entries to {p}")
+        return 0
+
+    stale = []
+    if args.baseline:
+        entries = load_baseline(args.baseline)
+        findings, stale = apply_baseline(findings, entries)
+
+    if args.json_out:
+        payload = {
+            "root": str(root),
+            "files": result.files,
+            "findings": [f.to_json() for f in findings],
+            "suppressed": [f.to_json() for f in result.suppressed],
+            "stale_baseline_entries": stale,
+        }
+        out = pathlib.Path(args.json_out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(payload, indent=1) + "\n")
+
+    if not args.quiet:
+        for f in findings:
+            print(f.format())
+        for e in stale:
+            print(f"{e['path']}: stale baseline entry for {e['rule']} "
+                  f"({e['fingerprint'][:60]!r}); prune it")
+    n_err = sum(f.severity == "error" for f in findings)
+    n_warn = len(findings) - n_err
+    print(f"{len(result.files)} files, {len(findings)} finding(s) "
+          f"({n_err} error, {n_warn} warning), "
+          f"{len(result.suppressed)} suppressed, "
+          f"{len(stale)} stale baseline entr(y/ies)")
+    if args.check and (findings or stale):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

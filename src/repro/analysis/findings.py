@@ -1,0 +1,152 @@
+"""Finding, suppression, and baseline primitives for the contract linter.
+
+DESIGN §18: a finding is identified across revisions by its *fingerprint*
+``(rule, path, stripped source line)`` rather than a line number, so the
+committed ``ANALYSIS_baseline.json`` survives unrelated edits above the
+flagged line.  Suppressions are in-source::
+
+    expr_that_violates()  # repro: noqa[RNG001] -- one-line justification
+
+The justification text is mandatory (a bare noqa does not suppress and is
+itself reported as ANA002); a noqa that suppresses nothing is reported as
+ANA001 so dead suppressions cannot accumulate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import re
+
+
+class Severity:
+    ERROR = "error"
+    WARNING = "warning"
+    INFO = "info"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str          # e.g. "RNG001"
+    path: str          # repo-relative posix path
+    line: int          # 1-based
+    col: int           # 0-based
+    message: str
+    severity: str = Severity.ERROR
+    source: str = ""   # stripped text of the flagged line (fingerprint basis)
+
+    @property
+    def fingerprint(self) -> tuple[str, str, str]:
+        return (self.rule, self.path, self.source)
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col + 1}: "
+                f"{self.rule} [{self.severity}] {self.message}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+NOQA_RE = re.compile(
+    r"#\s*repro:\s*noqa\[([A-Za-z0-9_\s,]+)\]\s*(?:--\s*(\S.*))?")
+RULE_ID_RE = re.compile(r"^[A-Z]{2,5}\d{3}$")
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int                  # 1-based line the noqa comment sits on
+    rules: frozenset           # rule ids it names
+    justification: str         # mandatory; "" means invalid
+    used: set = dataclasses.field(default_factory=set)
+
+
+def parse_suppressions(source: str) -> dict[int, Suppression]:
+    """Map 1-based line number -> Suppression for every noqa comment.
+
+    Tokenizes so only real ``#`` comments count — a noqa *example* inside a
+    docstring or string literal is not a suppression.  Falls back to a
+    line scan when the file does not tokenize (the AST rules are skipped
+    for such files anyway).
+    """
+    import io
+    import tokenize
+
+    comments: list[tuple[int, str]] = []
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                comments.append((tok.start[0], tok.string))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        comments = list(enumerate(source.splitlines(), start=1))
+    out: dict[int, Suppression] = {}
+    for i, text in comments:
+        m = NOQA_RE.search(text)
+        if not m:
+            continue
+        rules = frozenset(r.strip() for r in m.group(1).split(",") if r.strip())
+        out[i] = Suppression(i, rules, (m.group(2) or "").strip())
+    return out
+
+
+# ---------------------------------------------------------------- baseline
+
+BASELINE_VERSION = 1
+
+
+def load_baseline(path: str | pathlib.Path) -> list[dict]:
+    """Read a baseline file; every entry must carry a justification."""
+    payload = json.loads(pathlib.Path(path).read_text())
+    if payload.get("version") != BASELINE_VERSION:
+        raise ValueError(f"unsupported baseline version in {path}: "
+                         f"{payload.get('version')!r}")
+    entries = payload.get("entries", [])
+    for e in entries:
+        for k in ("rule", "path", "fingerprint", "justification"):
+            if not str(e.get(k, "")).strip():
+                raise ValueError(
+                    f"baseline entry {e!r} is missing a non-empty {k!r} "
+                    "(justifications are mandatory, DESIGN §18)")
+    return entries
+
+
+def baseline_index(entries: list[dict]) -> set[tuple[str, str, str]]:
+    return {(e["rule"], e["path"], e["fingerprint"]) for e in entries}
+
+
+def apply_baseline(findings: list[Finding], entries: list[dict]
+                   ) -> tuple[list[Finding], list[dict]]:
+    """Split findings into (new, ...) and report stale baseline entries.
+
+    Returns ``(new_findings, stale_entries)``: a finding is absorbed when
+    its fingerprint matches a baseline entry; an entry matching no current
+    finding is *stale* and must be pruned (keeps the baseline honest).
+    """
+    idx = baseline_index(entries)
+    new = [f for f in findings if f.fingerprint not in idx]
+    live = {f.fingerprint for f in findings}
+    stale = [e for e in entries
+             if (e["rule"], e["path"], e["fingerprint"]) not in live]
+    return new, stale
+
+
+def write_baseline(path: str | pathlib.Path, findings: list[Finding],
+                   old_entries: list[dict] | None = None) -> list[dict]:
+    """Write current findings as the new baseline, preserving existing
+    justifications by fingerprint; new entries get a placeholder that a
+    human must replace before review."""
+    just = {(e["rule"], e["path"], e["fingerprint"]): e["justification"]
+            for e in (old_entries or [])}
+    entries = []
+    seen = set()
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule)):
+        if f.fingerprint in seen:
+            continue
+        seen.add(f.fingerprint)
+        entries.append({
+            "rule": f.rule, "path": f.path, "fingerprint": f.source,
+            "justification": just.get(
+                f.fingerprint, "GRANDFATHERED: justify before extending"),
+        })
+    payload = {"version": BASELINE_VERSION, "entries": entries}
+    pathlib.Path(path).write_text(json.dumps(payload, indent=1) + "\n")
+    return entries

@@ -1,0 +1,322 @@
+"""Rule framework for the contract linter (DESIGN §18).
+
+A :class:`Rule` is a named, severity-tagged check over either one parsed
+file (:meth:`Rule.check_file`) or the repository as a whole
+(:meth:`Rule.check_repo`, for cross-file contracts like the DESIGN.md
+§-numbering).  Rules self-register into :data:`RULES` via
+:func:`register`; the :class:`Analyzer` walks the analyzed file set once,
+parses each file once, dispatches every registered rule, applies in-source
+``# repro: noqa[ID] -- why`` suppressions, and emits the ANA meta-findings
+(bare or dead suppressions) itself so the suppression mechanism is
+self-policing.
+
+The module also hosts the shared ``jax.jit`` site model
+(:func:`iter_jit_sites`) used by the JIT and SYNC rule families: a *jit
+site* is any ``jax.jit``/``pjit`` call or ``functools.partial(jax.jit,
+...)`` decorator, with its resolved ``static_argnames``/``static_argnums``
+and, when syntactically visible, the function or lambda whose body is
+traced.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Iterable, Iterator
+
+from .findings import (Finding, RULE_ID_RE, Severity, Suppression,
+                       parse_suppressions)
+
+RULES: dict[str, "Rule"] = {}
+
+
+def register(rule_cls):
+    """Class decorator: instantiate the rule and add it to the registry."""
+    rule = rule_cls()
+    if not RULE_ID_RE.match(rule.id):
+        raise ValueError(f"bad rule id {rule.id!r}")
+    if rule.id in RULES:
+        raise ValueError(f"duplicate rule id {rule.id!r}")
+    RULES[rule.id] = rule
+    return rule_cls
+
+
+@dataclasses.dataclass
+class FileContext:
+    """One analyzed file: source, parsed tree, and suppression table."""
+    root: pathlib.Path
+    path: pathlib.Path             # absolute
+    rel: str                       # repo-relative posix path
+    source: str
+    lines: list[str]
+    tree: ast.AST | None           # None when the file failed to parse
+    suppressions: dict[int, Suppression]
+
+    @classmethod
+    def load(cls, root: pathlib.Path, path: pathlib.Path) -> "FileContext":
+        source = path.read_text()
+        try:
+            tree = ast.parse(source, filename=str(path))
+        except SyntaxError:
+            tree = None
+        return cls(root, path, path.relative_to(root).as_posix(), source,
+                   source.splitlines(), tree, parse_suppressions(source))
+
+    def line_text(self, line: int) -> str:
+        return self.lines[line - 1].strip() if 1 <= line <= len(self.lines) \
+            else ""
+
+
+class Rule:
+    """Base rule.  Subclasses set ``id``/``severity``/``description`` and
+    ``contract`` (the DESIGN contract the rule mechanizes), then override
+    one of the two check hooks."""
+    id = "XXX000"
+    severity = Severity.ERROR
+    description = ""
+    contract = ""
+
+    def applies_to(self, rel: str) -> bool:
+        return rel.endswith(".py")
+
+    def check_file(self, ctx: FileContext) -> Iterable[Finding]:
+        return ()
+
+    def check_repo(self, root: pathlib.Path,
+                   ctxs: list[FileContext]) -> Iterable[Finding]:
+        return ()
+
+    # ------------------------------------------------------------ helpers
+    def finding(self, ctx: FileContext, node_or_line, message: str,
+                col: int | None = None) -> Finding:
+        if isinstance(node_or_line, int):
+            line, c = node_or_line, col or 0
+        else:
+            line, c = node_or_line.lineno, node_or_line.col_offset
+        return Finding(self.id, ctx.rel, line, c, message, self.severity,
+                       ctx.line_text(line))
+
+
+# ------------------------------------------------------------ jit site model
+
+_JIT_NAMES = {"jit", "pjit"}
+_PARTIAL_NAMES = {"partial"}
+
+
+def _callee_name(func: ast.AST) -> str | None:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+def is_jit_callee(func: ast.AST) -> bool:
+    """``jax.jit`` / ``jit`` / ``pjit`` / ``jax.experimental.pjit.pjit``."""
+    return _callee_name(func) in _JIT_NAMES
+
+
+def is_partial_callee(func: ast.AST) -> bool:
+    return _callee_name(func) in _PARTIAL_NAMES
+
+
+def _const_str_items(node: ast.AST) -> list[str] | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, str)):
+                return None
+            out.append(e.value)
+        return out
+    return None
+
+
+def _const_int_items(node: ast.AST) -> list[int] | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, int)):
+                return None
+            out.append(e.value)
+        return out
+    return None
+
+
+@dataclasses.dataclass
+class JitSite:
+    """One jit invocation: the Call carrying the static/donate kwargs, the
+    traced function body when visible, and the resolved static names."""
+    call: ast.Call                      # the jit/partial call with kwargs
+    static_names: set                   # resolved static_argnames
+    static_nums: list                   # resolved static_argnums
+    empty_kwargs: list                  # kwarg names bound to empty tuples
+    target: ast.AST | None              # FunctionDef/Lambda traced, if known
+
+    def param_names(self) -> list[str]:
+        if self.target is None:
+            return []
+        args = self.target.args
+        return [a.arg for a in args.posonlyargs + args.args]
+
+    def traced_params(self) -> set:
+        """Parameter names that arrive as tracers (non-static)."""
+        names = set(self.param_names())
+        static = set(self.static_names)
+        for i in self.static_nums:
+            params = self.param_names()
+            if 0 <= i < len(params):
+                static.add(params[i])
+        return names - static
+
+
+def _site_from_call(call: ast.Call, target: ast.AST | None) -> JitSite:
+    static_names: set = set()
+    static_nums: list = []
+    empty: list = []
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums", "donate_argnums",
+                      "donate_argnames"):
+            if isinstance(kw.value, (ast.Tuple, ast.List)) \
+                    and not kw.value.elts:
+                empty.append(kw.arg)
+                continue
+            if kw.arg == "static_argnames":
+                static_names |= set(_const_str_items(kw.value) or ())
+            elif kw.arg == "static_argnums":
+                static_nums += _const_int_items(kw.value) or []
+    return JitSite(call, static_names, static_nums, empty, target)
+
+
+def iter_jit_sites(tree: ast.AST) -> Iterator[JitSite]:
+    """Yield every syntactically visible jit site in a module.
+
+    Covers: ``@jax.jit`` / ``@partial(jax.jit, ...)`` decorators (target =
+    the decorated FunctionDef), ``jax.jit(lambda ...: ..., ...)`` (target =
+    the lambda), and bare ``jax.jit(f, ...)`` / ``partial(jax.jit, ...)``
+    expression sites (target unknown -> None).
+    """
+    decorated_calls: set = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call) and is_jit_callee(dec.func):
+                    decorated_calls.add(id(dec))
+                    yield _site_from_call(dec, node)
+                elif isinstance(dec, ast.Call) and is_partial_callee(dec.func) \
+                        and dec.args and is_jit_callee(dec.args[0]):
+                    decorated_calls.add(id(dec))
+                    yield _site_from_call(dec, node)
+                elif is_jit_callee(dec):      # plain @jax.jit, no kwargs
+                    yield JitSite(ast.Call(func=dec, args=[], keywords=[]),
+                                  set(), [], [], node)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or id(node) in decorated_calls:
+            continue
+        if is_jit_callee(node.func):
+            target = node.args[0] if node.args \
+                and isinstance(node.args[0], ast.Lambda) else None
+            yield _site_from_call(node, target)
+        elif is_partial_callee(node.func) and node.args \
+                and is_jit_callee(node.args[0]):
+            yield _site_from_call(node, None)
+
+
+def dotted_name(node: ast.AST) -> str:
+    """Best-effort dotted name of a Name/Attribute chain ('' otherwise)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+# ------------------------------------------------------------------ analyzer
+
+DEFAULT_GLOBS = ("src/**/*.py", "benchmarks/*.py", "examples/*.py")
+
+
+def default_files(root: pathlib.Path) -> list[pathlib.Path]:
+    out: list[pathlib.Path] = []
+    for g in DEFAULT_GLOBS:
+        out += sorted(root.glob(g))
+    return out
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    findings: list[Finding]        # active (unsuppressed) findings
+    suppressed: list[Finding]      # findings absorbed by a valid noqa
+    files: list[str]               # repo-relative paths analyzed
+
+
+class Analyzer:
+    def __init__(self, rules: dict[str, Rule] | None = None):
+        # rule modules register on import; the default registry is whatever
+        # repro.analysis.rules populated
+        self.rules = dict(rules if rules is not None else RULES)
+
+    def run(self, root: str | pathlib.Path,
+            files: Iterable[str | pathlib.Path] | None = None
+            ) -> AnalysisResult:
+        root = pathlib.Path(root).resolve()
+        paths = [pathlib.Path(f) if pathlib.Path(f).is_absolute()
+                 else root / f for f in files] if files is not None \
+            else default_files(root)
+        ctxs = [FileContext.load(root, p) for p in paths if p.is_file()]
+        by_rel = {c.rel: c for c in ctxs}
+
+        raw: list[Finding] = []
+        for rule in self.rules.values():
+            for ctx in ctxs:
+                if ctx.tree is not None and rule.applies_to(ctx.rel):
+                    raw += list(rule.check_file(ctx))
+            raw += list(rule.check_repo(root, ctxs))
+
+        # ---- apply suppressions (justification mandatory)
+        active: list[Finding] = []
+        suppressed: list[Finding] = []
+        for f in raw:
+            ctx = by_rel.get(f.path)
+            sup = ctx.suppressions.get(f.line) if ctx else None
+            if sup and f.rule in sup.rules and sup.justification:
+                sup.used.add(f.rule)
+                suppressed.append(f)
+            else:
+                active.append(f)
+
+        # ---- ANA meta-findings: the suppression mechanism polices itself
+        for ctx in ctxs:
+            for sup in ctx.suppressions.values():
+                src = ctx.line_text(sup.line)
+                if not sup.justification:
+                    active.append(Finding(
+                        "ANA002", ctx.rel, sup.line, 0,
+                        "noqa without justification text (write "
+                        "'# repro: noqa[ID] -- why'); it suppresses nothing",
+                        Severity.ERROR, src))
+                    continue
+                unknown = [r for r in sup.rules if r not in self.rules]
+                if unknown:
+                    active.append(Finding(
+                        "ANA002", ctx.rel, sup.line, 0,
+                        f"noqa names unknown rule id(s) {sorted(unknown)}",
+                        Severity.ERROR, src))
+                dead = sup.rules - sup.used - set(unknown)
+                if dead:
+                    active.append(Finding(
+                        "ANA001", ctx.rel, sup.line, 0,
+                        f"unused suppression for {sorted(dead)}: no such "
+                        "finding on this line; delete the noqa",
+                        Severity.WARNING, src))
+
+        key = lambda f: (f.path, f.line, f.rule, f.message)
+        return AnalysisResult(sorted(active, key=key),
+                              sorted(suppressed, key=key),
+                              [c.rel for c in ctxs])

@@ -1,0 +1,22 @@
+"""The contract-linter ruleset (DESIGN §18).
+
+Importing this package registers every rule family into
+``repro.analysis.framework.RULES``:
+
+=======  ==================================================================
+family   contract it mechanizes
+=======  ==================================================================
+RNG      seeded-RNG discipline for corpora/training/serving (§10, §14)
+JIT      hardware/workload are traced data, never static kwargs (§11, §13)
+SYNC     jitted bodies and the serving hot path stay on device (§9, §14)
+DET      bit-reproducible corpus/cache; f32-evaluator vs f64-oracle (§16)
+DOC      DESIGN §-anchors append-only; README names real artifacts
+EXP      __all__ <-> PEP 562 lazy-export lockstep (§15)
+ANA      the noqa/baseline mechanism itself stays honest
+=======  ==================================================================
+"""
+from . import det, docs, exports, jit, meta, rng, sync  # noqa: F401 (registration side effect)
+
+from ..framework import RULES
+
+__all__ = ["RULES"]

@@ -1,0 +1,94 @@
+"""Determinism-hazard rules (DESIGN §18, DET family).
+
+Contract (DESIGN §10/§14): corpus generation and the strategy cache are
+bit-reproducible — iteration order feeding either must be an explicit
+total order, and the production evaluators are f32 end-to-end (float64 is
+reserved for the certified oracles, which must say so with a noqa).
+"""
+from __future__ import annotations
+
+import ast
+
+from ..framework import FileContext, Rule, dotted_name, register
+
+# modules whose dict-iteration order feeds corpus rows / serialized cache
+_ORDER_SENSITIVE = {"src/repro/core/dataset.py", "src/repro/serving/cache.py"}
+
+_DICT_VIEWS = {"items", "keys", "values"}
+
+
+def _iter_nodes(tree):
+    """(iter_expr, owner) for every for-loop and comprehension generator."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            yield node.iter, node
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            for gen in node.generators:
+                yield gen.iter, node
+
+
+@register
+class SetIteration(Rule):
+    id = "DET001"
+    severity = "error"
+    description = ("iteration over a set/frozenset — unordered; sort (or "
+                   "use a dict) before iterating")
+    contract = "DESIGN §10/§14 bit-reproducible corpus and cache"
+
+    def check_file(self, ctx: FileContext):
+        for it, _ in _iter_nodes(ctx.tree):
+            is_set = isinstance(it, (ast.Set, ast.SetComp)) or (
+                isinstance(it, ast.Call)
+                and dotted_name(it.func) in ("set", "frozenset"))
+            if is_set:
+                yield self.finding(ctx,
+                    it, "iterating a set has no guaranteed order; wrap in "
+                    "sorted() so downstream bytes are reproducible")
+
+
+@register
+class UnsortedDictIteration(Rule):
+    id = "DET002"
+    severity = "warning"
+    description = ("unsorted dict-view iteration in an order-sensitive "
+                   "module (corpus / serialized-cache construction)")
+    contract = "DESIGN §10/§14 bit-reproducible corpus and cache"
+
+    def applies_to(self, rel: str) -> bool:
+        return rel in _ORDER_SENSITIVE
+
+    def check_file(self, ctx: FileContext):
+        for it, _ in _iter_nodes(ctx.tree):
+            if isinstance(it, ast.Call) \
+                    and isinstance(it.func, ast.Attribute) \
+                    and it.func.attr in _DICT_VIEWS and not it.args:
+                yield self.finding(ctx,
+                    it, f".{it.func.attr}() iteration order here is "
+                    "insertion order, which can depend on arrival history; "
+                    "wrap in sorted() or suppress with the reason order "
+                    "never reaches persisted bytes")
+
+
+@register
+class Float64InCore(Rule):
+    id = "DET003"
+    severity = "warning"
+    description = ("explicit float64 in src/repro/core — the production "
+                   "evaluators are f32; f64 is reserved for the oracles")
+    contract = "DESIGN §13/§16 f32 evaluator vs f64 oracle split"
+
+    def applies_to(self, rel: str) -> bool:
+        return rel.startswith("src/repro/core/")
+
+    def check_file(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            is_f64 = (isinstance(node, ast.Attribute)
+                      and node.attr == "float64") or (
+                isinstance(node, ast.Constant) and node.value == "float64")
+            if is_f64:
+                yield self.finding(ctx,
+                    node, "float64 in core diverges from the f32 serving "
+                    "evaluators (and silently downcasts under JAX x32); "
+                    "only the certified oracles may use it, with a noqa "
+                    "stating so")

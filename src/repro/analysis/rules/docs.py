@@ -1,0 +1,146 @@
+"""Doc-contract rules (DESIGN §18, DOC family).
+
+Contract: DESIGN.md's ``## §N`` anchors are append-only and contiguous
+(docstrings across the repo cite them), and README.md only names files,
+benchmark scripts, and committed BENCH baselines that exist.  These rules
+are the single implementation behind ``tests/test_docs.py``, which now
+just asserts the analyzer reports zero DOC findings.
+
+The rules no-op when DESIGN.md/README.md are absent (fixture trees);
+their presence in THIS repo is pinned by tests/test_docs.py.
+"""
+from __future__ import annotations
+
+import re
+
+from ..findings import Finding
+from ..framework import FileContext, Rule, register
+
+SECTION_RE = re.compile(r"^##\s*§(\d+)\b")
+CITE_RE = re.compile(r"DESIGN(?:\.md)?\s*§(\d+)")
+LINK_RE = re.compile(r"\]\(([^)#\s]+)\)")
+BENCH_SCRIPT_RE = re.compile(r"benchmarks/([\w.]+\.py)")
+BASELINE_RE = re.compile(r"\bBENCH_\w+\.json\b")
+
+# README completeness floor: the paper-claims scripts it must keep naming
+REQUIRED_CLAIM_SCRIPTS = ("table1_methods.py", "table2_generalization.py",
+                          "table3_transfer.py", "fig4_solutions.py",
+                          "speed_oneshot.py", "table_hw_generalization.py")
+
+
+def _design_sections(root) -> set[int] | None:
+    p = root / "DESIGN.md"
+    if not p.is_file():
+        return None
+    return {int(m.group(1)) for line in p.read_text().splitlines()
+            if (m := SECTION_RE.match(line))}
+
+
+def _md_finding(rule: Rule, rel: str, line_no: int, text: str,
+                message: str) -> Finding:
+    # repo-level findings may have no source line; fingerprint off the
+    # message then, so they stay baselinable (fingerprints must be non-empty)
+    return Finding(rule.id, rel, line_no, 0, message, rule.severity,
+                   text.strip() or message)
+
+
+@register
+class DesignNumbering(Rule):
+    id = "DOC001"
+    severity = "error"
+    description = ("DESIGN.md ## §N headings must be contiguous from §1 "
+                   "(the numbering is append-only and load-bearing)")
+    contract = "DESIGN §-anchors are append-only"
+
+    def check_repo(self, root, ctxs):
+        secs = _design_sections(root)
+        if secs is None:
+            return
+        if not secs:
+            yield _md_finding(self, "DESIGN.md", 1, "",
+                              "DESIGN.md has no '## §N' headings")
+            return
+        expected = set(range(1, max(secs) + 1))
+        if secs != expected:
+            yield _md_finding(
+                self, "DESIGN.md", 1, "",
+                f"§-numbering must be contiguous from 1, got {sorted(secs)} "
+                f"(missing {sorted(expected - secs)})")
+
+
+@register
+class DesignCiteResolves(Rule):
+    id = "DOC002"
+    severity = "error"
+    description = "every `DESIGN §N` citation resolves to a real heading"
+    contract = "DESIGN §-anchors are append-only"
+
+    def check_file(self, ctx: FileContext):
+        secs = _design_sections(ctx.root)
+        if secs is None:
+            return
+        for i, line in enumerate(ctx.lines, start=1):
+            for m in CITE_RE.finditer(line):
+                n = int(m.group(1))
+                if n not in secs:
+                    yield self.finding(
+                        ctx, i, f"cites DESIGN §{n} but DESIGN.md only has "
+                        f"§1..§{max(secs)}")
+
+
+@register
+class ReadmeIntegrity(Rule):
+    id = "DOC003"
+    severity = "error"
+    description = ("every local file, benchmarks/*.py script and "
+                   "BENCH_*.json baseline README.md names must exist")
+    contract = "README names only committed artifacts"
+
+    def check_repo(self, root, ctxs):
+        p = root / "README.md"
+        if not p.is_file():
+            return
+        for i, line in enumerate(p.read_text().splitlines(), start=1):
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if target.startswith(("http://", "https://")):
+                    continue
+                if not (root / target).exists():
+                    yield _md_finding(self, "README.md", i, line,
+                                      f"links missing file {target}")
+            for m in BENCH_SCRIPT_RE.finditer(line):
+                if not (root / "benchmarks" / m.group(1)).exists():
+                    yield _md_finding(
+                        self, "README.md", i, line,
+                        f"names benchmarks/{m.group(1)} which does not exist")
+            for m in BASELINE_RE.finditer(line):
+                if not (root / m.group(0)).exists():
+                    yield _md_finding(
+                        self, "README.md", i, line,
+                        f"cites {m.group(0)} which is not committed")
+
+
+@register
+class ReadmeCompleteness(Rule):
+    id = "DOC004"
+    severity = "error"
+    description = ("README keeps the paper-claims scripts, the tier-1 "
+                   "pytest command and the benchmarks.run driver visible")
+    contract = "README is the reproduction's front door"
+
+    def check_repo(self, root, ctxs):
+        p = root / "README.md"
+        if not p.is_file():
+            return
+        text = p.read_text()
+        named = set(BENCH_SCRIPT_RE.findall(text))
+        for required in REQUIRED_CLAIM_SCRIPTS:
+            if required not in named:
+                yield _md_finding(self, "README.md", 1, "",
+                                  f"must reference benchmarks/{required}")
+        if "python -m pytest" not in text:
+            yield _md_finding(self, "README.md", 1, "",
+                              "must give the tier-1 pytest command")
+        if "benchmarks.run" not in text:
+            yield _md_finding(self, "README.md", 1, "",
+                              "must name the benchmarks.run driver")

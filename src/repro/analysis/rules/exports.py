@@ -1,0 +1,167 @@
+"""Export-consistency rules (DESIGN §18, EXP family).
+
+Contract (DESIGN §15): the public surface of every ``repro`` package is
+its ``__all__``, and lazy (PEP 562) re-exports must stay in lockstep with
+it — every ``__all__`` name either binds at module top level or appears in
+the ``__getattr__`` lazy table, and every lazy-table name is advertised in
+``__all__``.  The PR 4/PR 7 import-cycle fixes rely on this staying true.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..framework import FileContext, Rule, register
+
+
+def _top_level_names(tree: ast.Module) -> set:
+    names: set = set()
+    for stmt in tree.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(stmt.name)
+        elif isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+                elif isinstance(t, (ast.Tuple, ast.List)):
+                    names |= {e.id for e in t.elts
+                              if isinstance(e, ast.Name)}
+        elif isinstance(stmt, ast.AnnAssign) \
+                and isinstance(stmt.target, ast.Name):
+            names.add(stmt.target.id)
+        elif isinstance(stmt, ast.ImportFrom):
+            names |= {a.asname or a.name for a in stmt.names}
+        elif isinstance(stmt, ast.Import):
+            names |= {(a.asname or a.name).split(".")[0]
+                      for a in stmt.names}
+    return names
+
+
+def _const_env(tree: ast.Module) -> dict:
+    """Module-level literal assignments (for evaluating computed __all__)."""
+    env: dict = {}
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            try:
+                env[stmt.targets[0].id] = ast.literal_eval(stmt.value)
+            except (ValueError, TypeError, SyntaxError, MemoryError):
+                pass
+    return env
+
+
+def _eval_all(node: ast.AST, env: dict):
+    """Evaluate an ``__all__`` expression: literals, Name lookups,
+    ``sorted(X)`` and ``+`` concatenation.  Returns None if out of reach."""
+    try:
+        return list(ast.literal_eval(node))
+    except (ValueError, TypeError, SyntaxError, MemoryError):
+        pass
+    if isinstance(node, ast.Name):
+        v = env.get(node.id)
+        return list(v) if isinstance(v, (list, tuple, dict, set)) else None
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        left = _eval_all(node.left, env)
+        right = _eval_all(node.right, env)
+        return None if left is None or right is None else left + right
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id == "sorted" and len(node.args) == 1:
+        inner = _eval_all(node.args[0], env)
+        return None if inner is None else sorted(inner)
+    return None
+
+
+def _lazy_names(tree: ast.Module, env: dict) -> set | None:
+    """Names served by a PEP 562 ``__getattr__``; None when there is no
+    ``__getattr__`` (then __all__ must bind eagerly)."""
+    getattr_def = next(
+        (s for s in tree.body
+         if isinstance(s, ast.FunctionDef) and s.name == "__getattr__"),
+        None)
+    if getattr_def is None:
+        return None
+    lazy: set = set()
+    for node in ast.walk(getattr_def):
+        if isinstance(node, ast.Compare) and len(node.ops) == 1 \
+                and isinstance(node.ops[0], ast.In):
+            table = node.comparators[0]
+            if isinstance(table, ast.Name):
+                v = env.get(table.id)
+                if isinstance(v, dict):
+                    lazy |= set(v.keys())
+                elif isinstance(v, (list, tuple, set)):
+                    lazy |= set(v)
+            else:
+                try:
+                    v = ast.literal_eval(table)
+                    lazy |= set(v.keys() if isinstance(v, dict) else v)
+                except (ValueError, TypeError, SyntaxError, MemoryError):
+                    pass
+    return lazy
+
+
+def _module_facts(ctx: FileContext):
+    tree = ctx.tree
+    all_assign = next(
+        (s for s in tree.body if isinstance(s, ast.Assign)
+         and any(isinstance(t, ast.Name) and t.id == "__all__"
+                 for t in s.targets)), None)
+    if all_assign is None:
+        return None
+    env = _const_env(tree)
+    all_list = _eval_all(all_assign.value, env)
+    lazy = _lazy_names(tree, env)
+    return all_assign, all_list, _top_level_names(tree), (lazy or set())
+
+
+class _ExportRule(Rule):
+    def applies_to(self, rel: str) -> bool:
+        return rel.startswith("src/repro/") and rel.endswith("__init__.py")
+
+
+@register
+class AllResolves(_ExportRule):
+    id = "EXP001"
+    severity = "error"
+    description = ("__all__ name with no top-level binding and no entry in "
+                   "the PEP 562 lazy-export table")
+    contract = "DESIGN §15 supported public surface"
+
+    def check_file(self, ctx: FileContext):
+        facts = _module_facts(ctx)
+        if facts is None:
+            return
+        all_assign, all_list, defined, lazy = facts
+        if all_list is None:
+            yield self.finding(ctx,
+                all_assign, "__all__ is too dynamic for the linter; keep it "
+                "a literal (optionally + sorted(<literal table>))")
+            return
+        for name in all_list:
+            if name not in defined and name not in lazy:
+                yield self.finding(ctx,
+                    all_assign, f"__all__ exports {name!r} but the module "
+                    "neither binds it at top level nor lazy-serves it via "
+                    "__getattr__")
+
+
+@register
+class LazyAdvertised(_ExportRule):
+    id = "EXP002"
+    severity = "error"
+    description = ("PEP 562 lazy-export table name missing from __all__ "
+                   "(hidden public surface)")
+    contract = "DESIGN §15 supported public surface"
+
+    def check_file(self, ctx: FileContext):
+        facts = _module_facts(ctx)
+        if facts is None:
+            return
+        all_assign, all_list, _, lazy = facts
+        if all_list is None:
+            return
+        for name in sorted(lazy - set(all_list)):
+            yield self.finding(ctx,
+                all_assign, f"__getattr__ lazily serves {name!r} which is "
+                "not advertised in __all__; add it or drop it from the "
+                "lazy table")

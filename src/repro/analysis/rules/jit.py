@@ -1,0 +1,65 @@
+"""Traced-condition rules (DESIGN §18, JIT family).
+
+Contract (DESIGN §11/§13): the serving conditions — hardware, workload —
+are *traced data*, never static jit kwargs.  The pre-§13 Pallas kernel
+took ``hw`` as a static kwarg: one recompile per accelerator AND a
+silently-wrong result for any BPE-mismatched accelerator (the PR 5 bug).
+JIT001 makes that bug class a diff-time failure; JIT002 sweeps the dead
+``static_argnames=()``-style kwargs that camouflage real ones.
+"""
+from __future__ import annotations
+
+import re
+
+from ..framework import FileContext, Rule, iter_jit_sites, register
+
+# a static argname is hw/accel/workload-like when any _-token matches
+_CONDITION_TOKENS = {"hw", "hwvec", "accel", "accelerator", "workload",
+                     "wl", "wls", "net", "network", "arch"}
+_SPLIT = re.compile(r"[_\d]+")
+
+
+def _is_condition_name(name: str) -> bool:
+    return any(tok in _CONDITION_TOKENS
+               for tok in _SPLIT.split(name.lower()) if tok)
+
+
+@register
+class StaticCondition(Rule):
+    id = "JIT001"
+    severity = "error"
+    description = ("hardware/workload-like parameter marked static at a "
+                   "jax.jit/pjit site — conditions must be traced data")
+    contract = "DESIGN §11/§13 traced-condition rule (the PR 5 bug class)"
+
+    def check_file(self, ctx: FileContext):
+        for site in iter_jit_sites(ctx.tree):
+            names = set(site.static_names)
+            params = site.param_names()
+            for i in site.static_nums:
+                if 0 <= i < len(params):
+                    names.add(params[i])
+            for name in sorted(names):
+                if _is_condition_name(name):
+                    yield self.finding(ctx,
+                        site.call, f"static argument {name!r} looks like a "
+                        "hardware/workload condition; marking it static "
+                        "recompiles per condition and (as in the pre-§13 "
+                        "kernel) can skip traced rescales — pass it as "
+                        "traced data")
+
+
+@register
+class DeadJitKwarg(Rule):
+    id = "JIT002"
+    severity = "warning"
+    description = ("empty static/donate kwarg at a jit site "
+                   "(e.g. static_argnames=()) — dead code, delete it")
+    contract = "jit sites state exactly the static set they mean"
+
+    def check_file(self, ctx: FileContext):
+        for site in iter_jit_sites(ctx.tree):
+            for kwarg in site.empty_kwargs:
+                yield self.finding(ctx,
+                    site.call, f"{kwarg}=() is a no-op at this jit site; "
+                    "delete it (an empty static set is the default)")

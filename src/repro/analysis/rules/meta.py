@@ -1,0 +1,29 @@
+"""ANA meta-rules (DESIGN §18): the suppression mechanism polices itself.
+
+These rules are *emitted by the Analyzer* (which is the only place that
+knows which suppressions matched); they are registered here so they show
+up in ``--list-rules``, are recognized inside ``noqa[...]`` brackets, and
+carry their severities in one place.
+"""
+from __future__ import annotations
+
+from ..findings import Severity
+from ..framework import Rule, register
+
+
+@register
+class UnusedSuppression(Rule):
+    id = "ANA001"
+    severity = Severity.WARNING
+    description = ("noqa that suppresses nothing on its line — dead "
+                   "suppressions must be deleted, not accumulated")
+    contract = "suppressions are scoped and justified (DESIGN §18)"
+
+
+@register
+class BareSuppression(Rule):
+    id = "ANA002"
+    severity = Severity.ERROR
+    description = ("noqa without the mandatory '-- justification' text, or "
+                   "naming an unknown rule id; it suppresses nothing")
+    contract = "suppressions are scoped and justified (DESIGN §18)"

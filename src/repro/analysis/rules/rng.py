@@ -1,0 +1,109 @@
+"""RNG-discipline rules (DESIGN §18, RNG family).
+
+Contract (DESIGN §10/§14): everything that feeds a teacher corpus, a
+training run, or a serving decision is seeded — ``np.random.default_rng``
+with an explicit seed expression, or ``jax.random`` keys derived from one.
+Ambient module-level NumPy RNG (``np.random.rand`` & co.) and wall-clock
+seeds break the bit-exact corpus/replay contracts silently.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..framework import FileContext, Rule, dotted_name, register
+
+# attribute access on np.random that does NOT touch the ambient global RNG
+_AMBIENT_OK = {"default_rng", "Generator", "BitGenerator", "SeedSequence",
+               "PCG64", "PCG64DXSM", "Philox", "SFC64", "MT19937"}
+
+_TIME_CALLS = {"time.time", "time.time_ns", "time.perf_counter",
+               "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+               "time.process_time", "datetime.now", "datetime.utcnow",
+               "datetime.datetime.now", "datetime.datetime.utcnow",
+               "os.urandom", "uuid.uuid1", "uuid.uuid4", "random.random",
+               "random.randint"}
+
+_SEEDING_CALLEES = {"default_rng", "PRNGKey", "key", "SeedSequence"}
+
+
+def _np_random_attr(func: ast.AST) -> str | None:
+    """Return ``fn`` when ``func`` is ``np.random.fn``/``numpy.random.fn``."""
+    if isinstance(func, ast.Attribute) \
+            and isinstance(func.value, ast.Attribute) \
+            and func.value.attr == "random" \
+            and isinstance(func.value.value, ast.Name) \
+            and func.value.value.id in ("np", "numpy"):
+        return func.attr
+    return None
+
+
+def _contains_time_call(node: ast.AST) -> ast.Call | None:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and dotted_name(sub.func) in _TIME_CALLS:
+            return sub
+    return None
+
+
+@register
+class AmbientNumpyRng(Rule):
+    id = "RNG001"
+    severity = "error"
+    description = ("module-level numpy RNG call (np.random.<fn>) — use an "
+                   "explicitly seeded np.random.default_rng(seed) Generator")
+    contract = "seeded-RNG discipline for corpora, training and serving"
+
+    def check_file(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                fn = _np_random_attr(node.func)
+                if fn is not None and fn not in _AMBIENT_OK:
+                    yield self.finding(ctx,
+                        node, f"ambient np.random.{fn}() draws from the "
+                        "process-global RNG; thread a seeded "
+                        "np.random.default_rng(seed) Generator instead")
+
+
+@register
+class UnseededDefaultRng(Rule):
+    id = "RNG002"
+    severity = "error"
+    description = ("np.random.default_rng() with no seed argument draws OS "
+                   "entropy — corpus/serving runs become unreproducible")
+    contract = "seeded-RNG discipline for corpora, training and serving"
+
+    def check_file(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) \
+                    and dotted_name(node.func).endswith("default_rng") \
+                    and not node.args and not node.keywords:
+                yield self.finding(ctx,
+                    node, "default_rng() without an explicit seed expression "
+                    "is nondeterministic; pass a seed")
+
+
+@register
+class TimeDerivedSeed(Rule):
+    id = "RNG003"
+    severity = "error"
+    description = ("seed expression derived from wall clock / OS entropy "
+                   "(time.*, datetime.now, os.urandom, uuid)")
+    contract = "seeded-RNG discipline for corpora, training and serving"
+
+    def check_file(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted_name(node.func).rsplit(".", 1)[-1]
+            seed_exprs = []
+            if callee in _SEEDING_CALLEES:
+                seed_exprs += node.args
+            seed_exprs += [kw.value for kw in node.keywords
+                           if kw.arg == "seed"]
+            for expr in seed_exprs:
+                bad = _contains_time_call(expr)
+                if bad is not None:
+                    yield self.finding(ctx,
+                        node, f"seed derived from {dotted_name(bad.func)}() "
+                        "is nondeterministic; seeds must be explicit "
+                        "constants or derived from config")
+                    break

@@ -1,0 +1,163 @@
+"""Host-device sync and tracer-leak rules (DESIGN §18, SYNC family).
+
+Contract (DESIGN §9/§12/§14): jitted bodies stay on device — no host
+materialization (``np.asarray``/``np.array``/``jax.device_get``), no
+scalarization (``.item()``, ``float()/int()/bool()`` of jnp expressions),
+and no Python truthiness on traced values; the serving hot path
+(``src/repro/serving/``) additionally treats ``.item()`` as a hidden
+per-request device sync even outside jit.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..framework import (FileContext, Rule, dotted_name, iter_jit_sites,
+                         register)
+
+_HOST_CALLS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+               "jax.device_get", "np.frombuffer"}
+
+
+def _jitted_scopes(tree):
+    """(scope_node, traced_param_names) for every visible jitted body."""
+    for site in iter_jit_sites(tree):
+        if site.target is not None:
+            yield site.target, site.traced_params()
+
+
+def _is_serving(rel: str) -> bool:
+    return rel.startswith("src/repro/serving/")
+
+
+def _jnp_rooted(node: ast.AST) -> bool:
+    """True when the expression is a call/attr rooted at jnp/jax.numpy."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id == "jnp":
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr == "numpy" \
+                and isinstance(sub.value, ast.Name) and sub.value.id == "jax":
+            return True
+    return False
+
+
+def _names_outside_is_none(node: ast.AST) -> set:
+    """Name ids referenced by ``node``, excluding operands of ``is None`` /
+    ``is not None`` comparisons (structural checks are trace-safe)."""
+    skip: set = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Compare) \
+                and all(isinstance(op, (ast.Is, ast.IsNot)) for op in sub.ops) \
+                and all(isinstance(c, ast.Constant) and c.value is None
+                        for c in sub.comparators):
+            for operand in [sub.left] + sub.comparators:
+                for n in ast.walk(operand):
+                    skip.add(id(n))
+    return {sub.id for sub in ast.walk(node)
+            if isinstance(sub, ast.Name) and id(sub) not in skip}
+
+
+@register
+class ItemSync(Rule):
+    id = "SYNC001"
+    severity = "error"
+    description = (".item() in a jitted body (trace error) or in the "
+                   "serving hot path (hidden per-request device sync)")
+    contract = "DESIGN §9/§14 device-resident hot path"
+
+    def check_file(self, ctx: FileContext):
+        scopes = [s for s, _ in _jitted_scopes(ctx.tree)]
+        seen: set = set()
+
+        def _scan(root, where):
+            for node in ast.walk(root):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "item" and not node.args \
+                        and id(node) not in seen:
+                    seen.add(id(node))
+                    yield self.finding(ctx,
+                        node, f".item() {where}; keep scalars on device "
+                        "(or sync once at the episode boundary)")
+
+        for scope in scopes:
+            yield from _scan(scope, "inside a jitted body")
+        if _is_serving(ctx.rel):
+            yield from _scan(ctx.tree, "in the serving hot path")
+
+
+@register
+class HostMaterialize(Rule):
+    id = "SYNC002"
+    severity = "error"
+    description = ("np.asarray/np.array/jax.device_get inside a jitted "
+                   "body — host materialization breaks tracing")
+    contract = "DESIGN §9/§14 device-resident hot path"
+
+    def check_file(self, ctx: FileContext):
+        for scope, _ in _jitted_scopes(ctx.tree):
+            for node in ast.walk(scope):
+                if isinstance(node, ast.Call) \
+                        and dotted_name(node.func) in _HOST_CALLS:
+                    yield self.finding(ctx,
+                        node, f"{dotted_name(node.func)}() inside a jitted "
+                        "body materializes on host; use jnp.asarray / keep "
+                        "the value traced")
+
+
+@register
+class TracerTruthiness(Rule):
+    id = "SYNC003"
+    severity = "error"
+    description = ("if/while/assert condition on a traced (non-static) "
+                   "parameter inside a jitted body")
+    contract = "DESIGN §9 traced control flow goes through lax.cond/where"
+
+    def check_file(self, ctx: FileContext):
+        for scope, traced in _jitted_scopes(ctx.tree):
+            if not traced:
+                continue
+            tests = []
+            for node in ast.walk(scope):
+                if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                    tests.append(node.test)
+                elif isinstance(node, ast.Assert):
+                    tests.append(node.test)
+            for test in tests:
+                leaked = _names_outside_is_none(test) & traced
+                if leaked:
+                    yield self.finding(ctx,
+                        test, "Python truthiness on traced parameter(s) "
+                        f"{sorted(leaked)} — a tracer in `if` fails at "
+                        "trace time (or silently freezes the condition); "
+                        "use lax.cond/jnp.where or mark the arg static")
+
+
+@register
+class ScalarizeJnp(Rule):
+    id = "SYNC004"
+    severity = "warning"
+    description = ("float()/int()/bool() wrapping a jnp expression in a "
+                   "jitted body or serving hot path — device sync")
+    contract = "DESIGN §9/§14 device-resident hot path"
+
+    def check_file(self, ctx: FileContext):
+        seen: set = set()
+
+        def _scan(root, where):
+            for node in ast.walk(root):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Name) \
+                        and node.func.id in ("float", "int", "bool") \
+                        and len(node.args) == 1 \
+                        and _jnp_rooted(node.args[0]) \
+                        and id(node) not in seen:
+                    seen.add(id(node))
+                    yield self.finding(ctx,
+                        node, f"{node.func.id}() of a jnp expression "
+                        f"{where} forces a host round trip; keep it as a "
+                        "device array")
+
+        for scope, _ in _jitted_scopes(ctx.tree):
+            yield from _scan(scope, "inside a jitted body")
+        if _is_serving(ctx.rel):
+            yield from _scan(ctx.tree, "in the serving hot path")

@@ -74,7 +74,7 @@ def a2c_search(env, budget: int = 2000, seed: int = 0,
     tx = optim.adamw(lr, max_grad_norm=1.0)
     opt_state = tx.init(params)
 
-    grad_fn = jax.jit(jax.grad(_loss), static_argnames=())
+    grad_fn = jax.jit(jax.grad(_loss))
 
     @jax.jit
     def apply(params, opt_state, grads):

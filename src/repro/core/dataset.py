@@ -288,7 +288,7 @@ def generate_teacher_corpus(workloads: list, hw, *,
     if teacher == "optimal":
         from .optimal import optimal_search
         elites = np.stack([
-            optimal_search({k: np.asarray(v) for k, v in p.items()},
+            optimal_search({k: np.asarray(v) for k, v in p.items()},  # repro: noqa[DET002] -- key-addressed rebuild; order never reaches corpus bytes
                            batch, float(bud), a,
                            front_cap=front_cap).strategy
             for p, (_, a, _), bud in zip(packed, conds, budgets)

@@ -97,7 +97,7 @@ class _Chain:
     def __init__(self, wl_np: dict, batch: float, hw: AccelConfig):
         wl = scaled_wl_np(wl_np, hw)
         self.A, self.W, self.F, self.OE, self.UC = (
-            np.asarray(wl[k], dtype=np.float64)
+            np.asarray(wl[k], dtype=np.float64)  # repro: noqa[DET003] -- §16 oracle mirrors ref_model's f64 arithmetic
             for k in ("A", "W", "F", "OE", "UC"))
         self.skip = np.asarray(wl["SKIP"], dtype=np.int64)
         self.n = int(wl["n"])
@@ -250,7 +250,7 @@ def _bounds_for_l(ch: _Chain, l: int, budget: float) -> dict:
     (so every UB is a true achievable segment cost, never below the
     optimum — the strict-inequality prune is therefore lossless)."""
     n, B = ch.n, ch.B
-    cand = np.arange(1.0, B + 1.0, dtype=np.float64)
+    cand = np.arange(1.0, B + 1.0, dtype=np.float64)  # repro: noqa[DET003] -- §16 oracle tile grid, exact in f64
     # cum[m] = sum of per-member componentwise minima over l+1..m
     cum = np.zeros((n + 1, 5))
     acc = np.zeros(5)
@@ -332,7 +332,7 @@ def _solve(ch: _Chain, budget: float, front_cap: int) -> dict:
     latency and tiling, effort counters) so wrappers can reconstruct the
     argmin strategy for any final cut."""
     n, B = ch.n, ch.B
-    cand_all = np.arange(1.0, B + 1.0, dtype=np.float64)
+    cand_all = np.arange(1.0, B + 1.0, dtype=np.float64)  # repro: noqa[DET003] -- §16 oracle tile grid, exact in f64
     segL = np.full((n + 2, n + 2), _INF)
     seg_tiling: dict[tuple[int, int], np.ndarray] = {}
     max_front, n_evals = 0, 0
@@ -555,7 +555,7 @@ def optimal_mapping(env, *, certify: bool = True,
         pop = np.concatenate([pop, pad], axis=0)
     out = cm.evaluate_population(env.wl, np.asarray(pop), float(ch.B),
                                  budget, env.hw)
-    lats = np.asarray(out.latency, dtype=np.float64)
+    lats = np.asarray(out.latency, dtype=np.float64)  # repro: noqa[DET003] -- f32-certification readback widened host-side (§16)
     # f32 may reorder near-ties among cuts, but never beyond rounding
     if lats[win] > lats.min() * (1.0 + 1e-5):
         raise AssertionError(

@@ -181,7 +181,7 @@ class StrategyCache:
             "format": CACHE_FORMAT,
             "context": self.context,
             "entries": [[_key_to_json(k), _entry_to_json(e)]
-                        for k, e in merged.items()],
+                        for k, e in sorted(merged.items())],
         }
         path.parent.mkdir(parents=True, exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")

@@ -1,0 +1,479 @@
+"""Contract-linter tests (DESIGN §18).
+
+Per-rule fixture triples — a violating snippet, a clean snippet, and a
+suppressed snippet — for every rule family, plus the mechanics (noqa
+justification policy, baseline fingerprints, stale-entry detection, CLI
+exit codes) and the self-check: this repository with the committed
+ANALYSIS_baseline.json yields zero new findings.
+"""
+import json
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.analysis import (RULES, apply_baseline, load_baseline,
+                            run_analysis, write_baseline)
+from repro.analysis.__main__ import main as cli_main
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run(tmp_path, code, rel="src/repro/core/mod.py", extra=None):
+    """Analyze one snippet placed at ``rel`` inside a scratch repo root."""
+    root = tmp_path / "repo"
+    f = root / rel
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(textwrap.dedent(code))
+    for relp, content in (extra or {}).items():
+        p = root / relp
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(content))
+    return run_analysis(root, files=[rel])
+
+
+def _rules_fired(result):
+    return {f.rule for f in result.findings}
+
+
+# --------------------------------------------------------------------------
+# one (violating, clean, suppressed) triple per rule; suppressed=None for
+# repo-level rules whose suppression path is the baseline (tested below)
+FIXTURES = {
+    "RNG001": (
+        "import numpy as np\nx = np.random.rand(3)\n",
+        "import numpy as np\nrng = np.random.default_rng(0)\n"
+        "x = rng.random(3)\n"
+        "def f(rng: np.random.Generator):\n    return rng\n",
+        "import numpy as np\n"
+        "x = np.random.rand(3)  # repro: noqa[RNG001] -- throwaway demo\n",
+    ),
+    "RNG002": (
+        "import numpy as np\nrng = np.random.default_rng()\n",
+        "import numpy as np\nrng = np.random.default_rng(1234)\n",
+        "import numpy as np\n"
+        "rng = np.random.default_rng()  # repro: noqa[RNG002] -- probe only\n",
+    ),
+    "RNG003": (
+        "import time, numpy as np\n"
+        "rng = np.random.default_rng(int(time.time()))\n",
+        "import numpy as np\n"
+        "def corpus(cfg):\n"
+        "    return np.random.default_rng(cfg.seed)\n",
+        "import time, numpy as np\n"
+        "rng = np.random.default_rng(int(time.time()))"
+        "  # repro: noqa[RNG003] -- demo harness\n",
+    ),
+    # the PR 5 bug pattern: hardware as a static jit kwarg
+    "JIT001": (
+        "import functools, jax\n"
+        "@functools.partial(jax.jit, static_argnames=('bp', 'hw'))\n"
+        "def fusion_eval(strategies, bp, hw):\n    return strategies\n",
+        "import functools, jax\n"
+        "@functools.partial(jax.jit, static_argnames=('bp', 'interpret'))\n"
+        "def fusion_eval(strategies, hw, bp, interpret):\n"
+        "    return strategies\n",
+        "import functools, jax\n"
+        "@functools.partial(jax.jit, static_argnames=('hw',))"
+        "  # repro: noqa[JIT001] -- hw is a compile-time probe here\n"
+        "def probe(hw):\n    return hw\n",
+    ),
+    "JIT002": (
+        "import jax\n"
+        "def f(x):\n    return x\n"
+        "g = jax.jit(f, static_argnames=())\n",
+        "import jax\n"
+        "def f(x):\n    return x\n"
+        "g = jax.jit(f)\n",
+        "import jax\n"
+        "def f(x):\n    return x\n"
+        "g = jax.jit(f, static_argnames=())"
+        "  # repro: noqa[JIT002] -- kwarg kept for API symmetry\n",
+    ),
+    "SYNC001": (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n    return x.sum().item()\n",
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n    return x.sum()\n"
+        "def host(x):\n    return x.item()\n",
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return x.sum().item()"
+        "  # repro: noqa[SYNC001] -- fixture of the failure itself\n",
+    ),
+    "SYNC002": (
+        "import jax, numpy as np\n"
+        "@jax.jit\n"
+        "def f(x):\n    return np.asarray(x)\n",
+        "import jax\nimport jax.numpy as jnp\n"
+        "@jax.jit\n"
+        "def f(x):\n    return jnp.asarray(x)\n",
+        "import jax, numpy as np\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return np.asarray(x)"
+        "  # repro: noqa[SYNC002] -- fixture of the failure itself\n",
+    ),
+    "SYNC003": (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    if x:\n        return 1\n    return 0\n",
+        "import functools, jax\n"
+        "@functools.partial(jax.jit, static_argnames=('flag',))\n"
+        "def f(x, flag, opt=None):\n"
+        "    if flag:\n        return x\n"
+        "    if opt is None:\n        return -x\n    return x\n",
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    if x:  # repro: noqa[SYNC003] -- fixture of the failure itself\n"
+        "        return 1\n    return 0\n",
+    ),
+    "SYNC004": (
+        "import jax.numpy as jnp\n"
+        "def hot(x):\n    return float(jnp.sum(x))\n",
+        "import jax.numpy as jnp\n"
+        "def hot(x):\n    return jnp.sum(x)\n"
+        "def boundary(y):\n    return float(y)\n",
+        "import jax.numpy as jnp\n"
+        "def hot(x):\n"
+        "    return float(jnp.sum(x))"
+        "  # repro: noqa[SYNC004] -- one sync at episode boundary\n",
+    ),
+    "DET001": (
+        "def f(xs):\n    return [x for x in set(xs)]\n",
+        "def f(xs):\n    return [x for x in sorted(set(xs))]\n",
+        "def f(xs):\n"
+        "    return [x for x in set(xs)]"
+        "  # repro: noqa[DET001] -- feeds a commutative sum\n",
+    ),
+    "DET002": (
+        "def save(d):\n    return [[k, v] for k, v in d.items()]\n",
+        "def save(d):\n    return [[k, v] for k, v in sorted(d.items())]\n",
+        "def save(d):\n"
+        "    return [[k, v] for k, v in d.items()]"
+        "  # repro: noqa[DET002] -- order never reaches persisted bytes\n",
+    ),
+    "DET003": (
+        "import numpy as np\nx = np.zeros(3, dtype=np.float64)\n",
+        "import numpy as np\nx = np.zeros(3, dtype=np.float32)\n",
+        "import numpy as np\n"
+        "x = np.zeros(3, dtype=np.float64)"
+        "  # repro: noqa[DET003] -- deliberate f64 oracle arithmetic\n",
+    ),
+}
+
+_SERVING_REL = "src/repro/serving/mod.py"
+_FIXTURE_REL = {           # rules scoped to particular paths
+    "SYNC004": _SERVING_REL,
+    "DET002": "src/repro/core/dataset.py",
+    "DET003": "src/repro/core/mod.py",
+}
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_rule_fires_on_violation(tmp_path, rule):
+    bad, _, _ = FIXTURES[rule]
+    res = _run(tmp_path, bad, rel=_FIXTURE_REL.get(rule,
+                                                   "src/repro/core/mod.py"))
+    assert rule in _rules_fired(res), \
+        f"{rule} must fire on its violating fixture; got {res.findings}"
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_rule_silent_on_clean(tmp_path, rule):
+    _, clean, _ = FIXTURES[rule]
+    res = _run(tmp_path, clean, rel=_FIXTURE_REL.get(rule,
+                                                     "src/repro/core/mod.py"))
+    assert rule not in _rules_fired(res), \
+        f"{rule} false-positives on its clean fixture: {res.findings}"
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_rule_suppressed_with_justified_noqa(tmp_path, rule):
+    _, _, suppressed = FIXTURES[rule]
+    res = _run(tmp_path, suppressed,
+               rel=_FIXTURE_REL.get(rule, "src/repro/core/mod.py"))
+    assert rule not in _rules_fired(res)
+    assert any(f.rule == rule for f in res.suppressed), \
+        "the noqa must record a suppressed finding, not a silent miss"
+    # a justified, used noqa triggers no ANA meta-findings
+    assert not _rules_fired(res) & {"ANA001", "ANA002"}
+
+
+# ------------------------------------------------------------ scoping edges
+
+def test_det002_only_in_order_sensitive_modules(tmp_path):
+    bad, _, _ = FIXTURES["DET002"]
+    res = _run(tmp_path, bad, rel="src/repro/core/train.py")
+    assert "DET002" not in _rules_fired(res)
+
+
+def test_det003_only_in_core(tmp_path):
+    bad, _, _ = FIXTURES["DET003"]
+    res = _run(tmp_path, bad, rel=_SERVING_REL)
+    assert "DET003" not in _rules_fired(res)
+
+
+def test_sync001_item_in_serving_hot_path_even_outside_jit(tmp_path):
+    res = _run(tmp_path, "def hot(x):\n    return x.item()\n",
+               rel=_SERVING_REL)
+    assert "SYNC001" in _rules_fired(res)
+    res = _run(tmp_path, "def hot(x):\n    return x.item()\n",
+               rel="src/repro/core/mod.py")
+    assert "SYNC001" not in _rules_fired(res)
+
+
+def test_jit001_static_argnums_resolves_param_names(tmp_path):
+    code = ("import functools, jax\n"
+            "@functools.partial(jax.jit, static_argnums=(1,))\n"
+            "def f(x, hw):\n    return x\n")
+    res = _run(tmp_path, code)
+    assert "JIT001" in _rules_fired(res)
+
+
+def test_noqa_example_inside_docstring_is_not_a_suppression(tmp_path):
+    code = ('"""Docs show: x = f()  # repro: noqa[RNG001] -- example."""\n'
+            "import numpy as np\nx = np.random.rand(3)\n")
+    res = _run(tmp_path, code)
+    assert "RNG001" in _rules_fired(res)       # docstring did not suppress
+    assert "ANA001" not in _rules_fired(res)   # and is not a dead noqa
+
+
+# --------------------------------------------------------------- DOC family
+
+def _doc_repo(tmp_path, design, readme):
+    root = tmp_path / "repo"
+    (root / "src" / "repro").mkdir(parents=True, exist_ok=True)
+    (root / "DESIGN.md").write_text(design)
+    (root / "README.md").write_text(readme)
+    return root
+
+_CLAIM_SCRIPTS = ["table1_methods.py", "table2_generalization.py",
+                  "table3_transfer.py", "fig4_solutions.py",
+                  "speed_oneshot.py", "table_hw_generalization.py"]
+_GOOD_README = ("run `python -m pytest` and `python -m benchmarks.run`\n"
+                + "".join(f"- benchmarks/{s}\n" for s in _CLAIM_SCRIPTS))
+
+
+def _mk_scripts(root):
+    (root / "benchmarks").mkdir(exist_ok=True)
+    for s in _CLAIM_SCRIPTS:
+        (root / "benchmarks" / s).write_text("")
+
+
+def test_doc001_gap_in_section_numbering(tmp_path):
+    root = _doc_repo(tmp_path, "## §1 A\n## §3 C\n", _GOOD_README)
+    _mk_scripts(root)
+    fired = {f.rule for f in run_analysis(root, files=[]).findings}
+    assert "DOC001" in fired
+    root2 = _doc_repo(tmp_path / "b", "## §1 A\n## §2 B\n", _GOOD_README)
+    _mk_scripts(root2)
+    assert "DOC001" not in {f.rule
+                            for f in run_analysis(root2, files=[]).findings}
+
+
+def test_doc002_unresolved_citation(tmp_path):
+    root = _doc_repo(tmp_path, "## §1 A\n", _GOOD_README)
+    _mk_scripts(root)
+    mod = root / "src" / "repro" / "mod.py"
+    mod.write_text('"""Implements DESIGN §9."""\n')
+    res = run_analysis(root, files=["src/repro/mod.py"])
+    assert "DOC002" in _rules_fired(res)
+    mod.write_text('"""Implements DESIGN §1."""\n')
+    res = run_analysis(root, files=["src/repro/mod.py"])
+    assert "DOC002" not in _rules_fired(res)
+
+
+def test_doc003_missing_link_and_baseline(tmp_path):
+    root = _doc_repo(tmp_path, "## §1 A\n",
+                     _GOOD_README + "see [x](missing_dir/nope.md) and "
+                                    "BENCH_ghost.json\n")
+    _mk_scripts(root)
+    msgs = [f.message for f in run_analysis(root, files=[]).findings
+            if f.rule == "DOC003"]
+    assert any("missing_dir/nope.md" in m for m in msgs)
+    assert any("BENCH_ghost.json" in m for m in msgs)
+
+
+def test_doc004_readme_completeness(tmp_path):
+    root = _doc_repo(tmp_path, "## §1 A\n", "an empty readme\n")
+    fired = {f.rule for f in run_analysis(root, files=[]).findings}
+    assert "DOC004" in fired
+    root2 = _doc_repo(tmp_path / "b", "## §1 A\n", _GOOD_README)
+    _mk_scripts(root2)
+    assert "DOC004" not in {f.rule
+                            for f in run_analysis(root2, files=[]).findings}
+
+
+# --------------------------------------------------------------- EXP family
+
+def test_exp001_all_name_without_binding(tmp_path):
+    code = "__all__ = ['ghost']\n"
+    res = _run(tmp_path, code, rel="src/repro/core/__init__.py")
+    assert "EXP001" in _rules_fired(res)
+
+
+def test_exp001_lazy_table_satisfies_all(tmp_path):
+    code = ("_API = ('Engine',)\n"
+            "def __getattr__(name):\n"
+            "    if name in _API:\n"
+            "        from . import engine\n"
+            "        return getattr(engine, name)\n"
+            "    raise AttributeError(name)\n"
+            "__all__ = ['Engine']\n")
+    res = _run(tmp_path, code, rel="src/repro/serving/__init__.py")
+    assert not _rules_fired(res) & {"EXP001", "EXP002"}
+
+
+def test_exp002_lazy_name_not_advertised(tmp_path):
+    code = ("_API = ('Engine', 'Hidden')\n"
+            "def __getattr__(name):\n"
+            "    if name in _API:\n"
+            "        from . import engine\n"
+            "        return getattr(engine, name)\n"
+            "    raise AttributeError(name)\n"
+            "__all__ = ['Engine']\n")
+    res = _run(tmp_path, code, rel="src/repro/serving/__init__.py")
+    assert "EXP002" in _rules_fired(res)
+
+
+def test_exp_handles_computed_all_like_repro_init(tmp_path):
+    code = ("__version__ = '1.0'\n"
+            "_PUBLIC = {'A': 'core', 'B': 'serving'}\n"
+            "__all__ = ['__version__', 'serve'] + sorted(_PUBLIC)\n"
+            "def __getattr__(name):\n"
+            "    if name in _PUBLIC:\n"
+            "        return object()\n"
+            "    raise AttributeError(name)\n"
+            "def serve():\n    return None\n")
+    res = _run(tmp_path, code, rel="src/repro/__init__.py")
+    assert not _rules_fired(res) & {"EXP001", "EXP002"}
+
+
+# ----------------------------------------------------- suppression mechanics
+
+def test_ana002_bare_noqa_does_not_suppress(tmp_path):
+    code = ("import numpy as np\n"
+            "x = np.random.rand(3)  # repro: noqa[RNG001]\n")
+    res = _run(tmp_path, code)
+    fired = _rules_fired(res)
+    assert "RNG001" in fired, "bare noqa must not suppress"
+    assert "ANA002" in fired
+
+
+def test_ana002_unknown_rule_id(tmp_path):
+    code = "x = 1  # repro: noqa[ZZZ999] -- because\n"
+    res = _run(tmp_path, code)
+    assert "ANA002" in _rules_fired(res)
+
+
+def test_ana001_unused_noqa(tmp_path):
+    code = "x = 1  # repro: noqa[RNG001] -- nothing here violates\n"
+    res = _run(tmp_path, code)
+    assert "ANA001" in _rules_fired(res)
+
+
+# ----------------------------------------------------------------- baseline
+
+def test_baseline_absorbs_by_fingerprint_across_line_drift(tmp_path):
+    bad, _, _ = FIXTURES["RNG001"]
+    res = _run(tmp_path, bad)
+    bl = tmp_path / "bl.json"
+    write_baseline(bl, res.findings)
+    entries = load_baseline(bl)
+    new, stale = apply_baseline(res.findings, entries)
+    assert not new and not stale
+    # shift the violating line down two lines: fingerprint still matches
+    res2 = _run(tmp_path / "shift", "# pad\n# pad\n" + bad)
+    new2, stale2 = apply_baseline(res2.findings, entries)
+    assert not new2 and not stale2
+    # fix the violation: the entry goes stale (baseline must shrink)
+    res3 = _run(tmp_path / "fix", FIXTURES["RNG001"][1])
+    new3, stale3 = apply_baseline(res3.findings, entries)
+    assert not new3 and stale3
+
+
+def test_baseline_requires_justifications(tmp_path):
+    bl = tmp_path / "bl.json"
+    bl.write_text(json.dumps({"version": 1, "entries": [
+        {"rule": "RNG001", "path": "a.py", "fingerprint": "x", }]}))
+    with pytest.raises(ValueError, match="justification"):
+        load_baseline(bl)
+
+
+def test_doc_finding_is_baselinable(tmp_path):
+    root = _doc_repo(tmp_path, "## §1 A\n## §3 C\n", _GOOD_README)
+    _mk_scripts(root)
+    findings = run_analysis(root, files=[]).findings
+    doc = [f for f in findings if f.rule == "DOC001"]
+    assert doc
+    bl = tmp_path / "bl.json"
+    write_baseline(bl, doc)
+    new, stale = apply_baseline(doc, load_baseline(bl))
+    assert not new and not stale
+
+
+# ---------------------------------------------------------------------- CLI
+
+def test_cli_check_exit_codes(tmp_path, capsys):
+    root = tmp_path / "repo"
+    mod = root / "src" / "repro" / "mod.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text("import numpy as np\nx = np.random.rand(3)\n")
+    assert cli_main(["--root", str(root), "--check"]) == 1
+    mod.write_text("x = 1\n")
+    assert cli_main(["--root", str(root), "--check"]) == 0
+    assert cli_main(["--root", str(tmp_path), "--check"]) == 2  # not a repo
+    capsys.readouterr()
+
+
+def test_cli_json_output(tmp_path, capsys):
+    root = tmp_path / "repo"
+    mod = root / "src" / "repro" / "mod.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text("import numpy as np\nx = np.random.rand(3)\n")
+    out = tmp_path / "out.json"
+    assert cli_main(["--root", str(root), "--json", str(out)]) == 0
+    payload = json.loads(out.read_text())
+    assert payload["findings"] and \
+        payload["findings"][0]["rule"] == "RNG001"
+    capsys.readouterr()
+
+
+# ------------------------------------------------------------- registry/self
+
+def test_registry_has_all_families():
+    families = {rid[:3] for rid in RULES}
+    assert {"RNG", "JIT", "SYN", "DET", "DOC", "EXP", "ANA"} <= families
+    assert len(RULES) >= 18
+    for rule in RULES.values():
+        assert rule.description and rule.contract and \
+            rule.severity in ("error", "warning", "info")
+
+
+def test_analysis_package_is_jax_free():
+    """The CI analysis job runs dependency-free: importing repro.analysis
+    must not pull jax/numpy."""
+    import subprocess
+    import sys
+    code = ("import sys; import repro.analysis; "
+            "bad = [m for m in ('jax', 'numpy') if m in sys.modules]; "
+            "assert not bad, bad")
+    subprocess.run([sys.executable, "-c", code], check=True,
+                   env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin"})
+
+
+def test_self_check_repo_is_clean_with_committed_baseline():
+    """The repo itself, under the committed baseline, has zero unbaselined
+    findings and zero stale entries — the exact CI `analysis` gate."""
+    res = run_analysis(ROOT)
+    entries = load_baseline(ROOT / "ANALYSIS_baseline.json")
+    new, stale = apply_baseline(res.findings, entries)
+    assert not new, "new contract-linter findings:\n" + \
+        "\n".join(f.format() for f in new)
+    assert not stale, f"stale baseline entries (prune them): {stale}"
